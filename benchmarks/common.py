@@ -1,0 +1,145 @@
+"""Shared benchmark harness: the paper's dynamic-workload protocol (§5.2).
+
+Runs the four insert/delete-ratio workloads over the three systems
+(LSM-VEC, DiskANN-like, SPFresh-like), recording per batch: Recall 10@10,
+modeled update / search I/O cost (Eq. 7-8 with the paper's disk constants),
+wall times, and resident-memory bytes.  Results cache to JSON so fig5
+(recall/latency) and fig6 (memory) read one run.
+
+Scale note: the paper uses a 100M-vector SIFT subset; this container is a
+single CPU core, so the harness defaults to a few thousand vectors with
+the same *protocol* (1% batches, same ratios) and validates the paper's
+relative claims.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw, iostats
+from repro.core.baselines import DiskANNIndex, SPFreshIndex
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+
+WORKLOADS = {
+    "insert_only": (1.0, 0.0),
+    "insert_heavy": (0.7, 0.3),
+    "balanced": (0.5, 0.5),
+    "delete_heavy": (0.3, 0.7),
+}
+
+DISK = iostats.DISK
+
+
+def default_cfg(dim: int, cap: int) -> hnsw.HNSWConfig:
+    return hnsw.HNSWConfig(
+        cap=cap, dim=dim, M=12, M_up=6, num_upper=2, ef_search=48,
+        ef_construction=48, k=10, m_bits=64, rho=0.8, eps=0.1,
+        use_filter=True, lsm_mem_cap=256, lsm_levels=3, lsm_fanout=8)
+
+
+def _mem_mb(idx) -> float:
+    return idx.memory_bytes() / 1e6
+
+
+def _update_cost_ms(stats_delta, n_ops: int) -> float:
+    if n_ops == 0:
+        return 0.0
+    return float(iostats.search_cost(stats_delta, DISK)) * 1e3 / n_ops
+
+
+def run_workloads(*, n_base: int = 4096, dim: int = 64, n_batches: int = 8,
+                  batch_pct: float = 0.01, n_queries: int = 64,
+                  seed: int = 0, out_path: str = "results/workloads.json",
+                  use_cache: bool = True) -> List[Dict]:
+    if use_cache and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    rows: List[Dict] = []
+    batch_n = max(8, int(n_base * batch_pct))
+    queries = make_clustered_vectors(n_queries, dim=dim, seed=777)
+
+    for wl, (p_ins, p_del) in WORKLOADS.items():
+        base = make_clustered_vectors(n_base, dim=dim, seed=seed)
+        fresh = make_clustered_vectors(
+            batch_n * n_batches + 16, dim=dim, seed=seed + 1)
+        cap = n_base + len(fresh) + 16
+
+        systems = {
+            "lsmvec": LSMVecIndex.build(default_cfg(dim, cap), base),
+            "diskann": DiskANNIndex.build(base, M=12, ef=48),
+            "spfresh": SPFreshIndex.build(base, posting_cap=64, n_probe=3),
+        }
+        # live-set model for ground truth
+        vectors = {name: [base.copy()] for name in systems}
+        live = {name: np.ones(n_base, bool) for name in systems}
+        fresh_cursor = {name: 0 for name in systems}
+        rng = np.random.default_rng(seed + 2)
+
+        for b in range(n_batches):
+            for name, idx in systems.items():
+                t0 = time.monotonic()
+                idx.reset_stats() if hasattr(idx, "reset_stats") else None
+                stats_before = idx.stats
+                n_ins = int(round(batch_n * p_ins))
+                n_del = batch_n - n_ins
+                # inserts
+                for _ in range(n_ins):
+                    c = fresh_cursor[name]
+                    fresh_cursor[name] += 1
+                    x = fresh[c]
+                    new_id = idx.insert(x)
+                    allv = np.concatenate(vectors[name] + [x[None]])
+                    vectors[name] = [allv]
+                    live[name] = np.append(live[name], True)
+                    assert new_id == len(live[name]) - 1
+                # deletes (uniform over live ids)
+                live_ids = np.flatnonzero(live[name])
+                victims = rng.choice(live_ids, min(n_del, len(live_ids)),
+                                     replace=False)
+                for v in victims:
+                    idx.delete(int(v))
+                    live[name][v] = False
+                upd_wall = time.monotonic() - t0
+                stats_delta = jax.tree.map(
+                    lambda a, b: a - b, idx.stats, stats_before)
+                upd_cost = _update_cost_ms(stats_delta, batch_n)
+
+                # search phase
+                idx.reset_stats()
+                t1 = time.monotonic()
+                ids, _ = idx.search(queries, k=10)
+                search_wall = time.monotonic() - t1
+                search_cost = float(iostats.search_cost(idx.stats, DISK)) \
+                    * 1e3 / len(queries)
+                allv = vectors[name][0]
+                truth = brute_force_knn(
+                    jnp.asarray(allv), jnp.asarray(queries), 10,
+                    live=jnp.asarray(live[name]))
+                rec = recall_at_k(np.asarray(ids), truth)
+                rows.append({
+                    "workload": wl, "batch": b, "system": name,
+                    "recall": round(rec, 4),
+                    "update_cost_ms": round(upd_cost, 4),
+                    "search_cost_ms": round(search_cost, 4),
+                    "update_wall_s": round(upd_wall, 3),
+                    "search_wall_s": round(search_wall, 3),
+                    "memory_mb": round(_mem_mb(idx), 4),
+                    "n_live": int(live[name].sum()),
+                })
+                print(f"[{wl}] b{b} {name}: recall={rec:.3f} "
+                      f"upd={upd_cost:.2f}ms srch={search_cost:.2f}ms "
+                      f"mem={_mem_mb(idx):.2f}MB", flush=True)
+
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows

@@ -1,0 +1,65 @@
+"""Roofline report: reads results/dryrun.json, prints the per-cell table.
+
+    compute term    = per-device HLO FLOPs / 197 TFLOP/s (bf16)
+    memory term     = per-device HLO bytes / 819 GB/s HBM
+    collective term = per-device collective bytes / 50 GB/s ICI
+                      (all-reduce counted 2x for the ring)
+
+Plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (serve) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str = "results/dryrun.json"):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_table(records, mesh_filter: str = "16x16"):
+    rows = []
+    header = ("arch", "shape", "t_compute_s", "t_memory_s",
+              "t_collective_s", "dominant", "useful_ratio",
+              "roofline_frac")
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") != "ok" or r["mesh"] != mesh_filter:
+            continue
+        t = r["roofline"]
+        bound = max(t["t_compute"], t["t_memory"], t["t_collective"])
+        # roofline fraction: useful model FLOP time over the binding term
+        useful_t = (r["model_flops_per_device"] / 197e12) if \
+            r.get("model_flops_per_device") else 0.0
+        frac = useful_t / bound if bound else 0.0
+        rows.append((r["arch"], r["shape"],
+                     f"{t['t_compute']:.4f}", f"{t['t_memory']:.4f}",
+                     f"{t['t_collective']:.4f}", r["dominant"],
+                     f"{r['useful_flops_ratio']:.3f}"
+                     if r.get("useful_flops_ratio") else "-",
+                     f"{frac:.3f}"))
+    return header, rows
+
+
+def main(path: str = "results/dryrun.json"):
+    records = load(path)
+    for mesh in ("16x16", "2x16x16"):
+        header, rows = fmt_table(records, mesh)
+        if not rows:
+            continue
+        print(f"\n=== roofline @ {mesh} ===")
+        print(",".join(header))
+        for row in rows:
+            print(",".join(row))
+    errs = [r for r in records if r.get("status") != "ok"]
+    if errs:
+        print("\nerrors:")
+        for r in errs:
+            print(f"  {r['arch']} x {r['shape']} @ {r['mesh']}: "
+                  f"{r.get('error', '?')[:120]}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json")

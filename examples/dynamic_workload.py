@@ -1,0 +1,66 @@
+"""Dynamic-workload demo: the paper's balanced 50/50 insert-delete churn
+(Fig. 5 protocol) on a small index, printing per-batch recall, modeled
+latency, and memory.
+
+    PYTHONPATH=src python examples/dynamic_workload.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DISK, HNSWConfig, LSMVecIndex, iostats
+from repro.core.index import brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+
+
+def main(n_base=1024, dim=48, n_batches=5):
+    base = make_clustered_vectors(n_base, dim=dim, seed=0)
+    fresh = make_clustered_vectors(512, dim=dim, seed=1)
+    queries = make_clustered_vectors(32, dim=dim, seed=7)
+    cfg = HNSWConfig(cap=4096, dim=dim, M=12, M_up=6, num_upper=2,
+                     ef_search=48, ef_construction=48, k=10, rho=0.8,
+                     use_filter=True)
+    idx = LSMVecIndex.build(cfg, base)
+
+    allv = [base.copy()]
+    live = np.ones(n_base, bool)
+    rng = np.random.default_rng(3)
+    cursor = 0
+    batch_n = max(8, n_base // 100)
+
+    print("batch,recall,update_ms,search_ms,memory_mb,n_live")
+    for b in range(n_batches):
+        idx.reset_stats()
+        for _ in range(batch_n // 2):          # 50% inserts
+            x = fresh[cursor]
+            cursor += 1
+            idx.insert(x)
+            allv = [np.concatenate(allv + [x[None]])]
+            live = np.append(live, True)
+        victims = rng.choice(np.flatnonzero(live), batch_n // 2,
+                             replace=False)
+        for v in victims:                      # 50% deletes
+            idx.delete(int(v))
+            live[v] = False
+        upd_ms = float(iostats.search_cost(idx.stats, DISK)) * 1e3 / batch_n
+
+        idx.reset_stats()
+        ids, _ = idx.search(queries, k=10)
+        srch_ms = float(iostats.search_cost(idx.stats, DISK)) * 1e3 \
+            / len(queries)
+        truth = brute_force_knn(jnp.asarray(allv[0]), jnp.asarray(queries),
+                                10, live=jnp.asarray(live))
+        rec = recall_at_k(ids, truth)
+        print(f"{b},{rec:.3f},{upd_ms:.2f},{srch_ms:.2f},"
+              f"{idx.memory_bytes()/1e6:.2f},{int(live.sum())}")
+
+    print("\nLSM store:", int(idx.state.store.n_flushes), "flushes,",
+          int(idx.state.store.n_compactions), "compactions")
+
+
+if __name__ == "__main__":
+    main()

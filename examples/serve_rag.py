@@ -1,0 +1,95 @@
+"""End-to-end serving driver: retrieval-augmented generation over LSM-VEC.
+
+The paper's motivating deployment (§1): a vector database serving ANN
+queries for RAG.  This driver wires the full path with batched requests:
+
+  1. a small LM (the qwen3-family smoke config) embeds documents by
+     mean-pooling its final hidden states;
+  2. documents live in an LSM-VEC index (insert/delete at any time);
+  3. each request batch: embed queries -> sampled graph search (rho=0.8,
+     Hoeffding filter on) -> retrieved doc tokens are prepended -> prefill
+     + greedy decode continues the sequence.
+
+    PYTHONPATH=src python examples/serve_rag.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import DISK, HNSWConfig, LSMVecIndex
+from repro.models import transformer as T
+
+
+def embed(params, cfg, tokens):
+    """Mean-pooled final hidden state as the document/query embedding."""
+    x = params["embed"][tokens].astype(cfg.act_dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+    h, _ = T._backbone(params, cfg, x, positions, remat=False)
+    return np.asarray(jnp.mean(h, axis=1), np.float32)
+
+
+def main(n_docs=512, doc_len=24, n_requests=8, gen_len=12):
+    cfg = configs.get_config("qwen3-8b", "smoke")
+    model = T.Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, cfg.vocab_size, (n_docs, doc_len)).astype(np.int32)
+
+    print(f"embedding {n_docs} docs with {cfg.name} ...")
+    doc_embeds = embed(params, cfg, jnp.asarray(docs))
+    dim = doc_embeds.shape[1]
+
+    idx_cfg = HNSWConfig(cap=2 * n_docs, dim=dim, M=12, M_up=6,
+                         num_upper=2, ef_search=32, ef_construction=32,
+                         k=4, rho=0.8, use_filter=True)
+    index = LSMVecIndex.build(idx_cfg, doc_embeds)
+    print(f"index built; resident {index.memory_bytes()/1e6:.2f} MB")
+
+    # live update: new documents arrive while serving
+    new_docs = rng.integers(0, cfg.vocab_size, (8, doc_len)).astype(np.int32)
+    index.insert_batch(embed(params, cfg, jnp.asarray(new_docs)))
+    docs = np.concatenate([docs, new_docs])
+
+    # batched requests
+    queries = rng.integers(0, cfg.vocab_size,
+                           (n_requests, doc_len)).astype(np.int32)
+    t0 = time.monotonic()
+    q_embeds = embed(params, cfg, jnp.asarray(queries))
+    index.reset_stats()
+    doc_ids, _ = index.search(q_embeds, k=1)
+    retrieve_cost = index.io_cost(DISK) * 1e3 / n_requests
+
+    # prepend retrieved doc, prefill, greedy-decode continuation
+    ctx = np.concatenate([docs[doc_ids[:, 0]], queries], axis=1)
+    last, state = T.prefill(params, cfg, jnp.asarray(ctx),
+                            max_len=ctx.shape[1] + gen_len)
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    outs = [np.asarray(tok)[:, 0]]
+    for _ in range(gen_len - 1):
+        logits, state = T.decode_step(params, cfg, state, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(tok)[:, 0])
+    wall = time.monotonic() - t0
+
+    gen = np.stack(outs, axis=1)
+    print(f"served {n_requests} requests in {wall:.2f}s "
+          f"({wall/n_requests*1e3:.0f} ms/req wall on 1 CPU core)")
+    print(f"modeled retrieval I/O: {retrieve_cost:.2f} ms/req "
+          f"({int(index.stats.n_vec)} vector fetches, "
+          f"{int(index.stats.n_filtered)} skipped by sampling)")
+    for i in range(min(3, n_requests)):
+        print(f"req {i}: retrieved doc {int(doc_ids[i, 0])}, "
+              f"generated {gen[i][:8].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

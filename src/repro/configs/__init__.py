@@ -1,0 +1,47 @@
+"""Architecture registry: 10 assigned archs + the paper's own index config.
+
+`get_config(name, preset)` returns a ModelConfig; preset "full" is the
+published configuration (dry-run only — ShapeDtypeStructs, no allocation),
+preset "smoke" is a reduced same-family config runnable on CPU.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.transformer import ModelConfig
+
+ARCHS = {
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+}
+
+# (seq_len, global_batch, kind); kind selects which step gets lowered
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(name: str, preset: str = "full", **kw) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    mod = importlib.import_module(ARCHS[name])
+    return getattr(mod, preset)(**kw)
+
+
+def runs_cell(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k requires a sub-quadratic mechanism (DESIGN.md §7)."""
+    if shape_name == "long_500k":
+        return cfg.sub_quadratic
+    return True

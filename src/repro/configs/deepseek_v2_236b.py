@@ -1,0 +1,37 @@
+"""deepseek-v2-236b [moe] — MLA kv_lora=512, 2 shared + 160 routed top-6.
+
+60L d_model=5120 128H d_ff(expert)=1536 vocab=102400 [arXiv:2405.04434; hf].
+Dense prefix: first layer d_ff=12288; softmax router with normalized top-k.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, MoEConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b", family="moe",
+        num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+        d_ff=12288, vocab_size=102400,
+        attention="mla", q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+        rope_theta=1e4,
+        moe=MoEConfig(num_experts=160, top_k=6, num_shared=2,
+                      d_ff_expert=1536, first_dense=1,
+                      router_score="softmax", norm_topk=True),
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=128,
+        attention="mla", q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        moe=MoEConfig(num_experts=4, top_k=2, num_shared=2,
+                      d_ff_expert=32, first_dense=1,
+                      router_score="softmax", norm_topk=True,
+                      capacity_factor=8.0),
+        scan_chunk=8, attn_chunk=64, remat=False)

@@ -1,0 +1,40 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP.
+
+61L d_model=7168 128H d_ff(expert)=2048 vocab=129280 [arXiv:2412.19437; hf].
+Dense prefix: first 3 layers use d_ff=18432 (the HF config's
+intermediate_size); MoE layers use 2048-wide experts.  V3 routes with
+sigmoid scores + normalized top-k and trains with an MTP head.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, MoEConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", family="moe",
+        num_layers=61, d_model=7168, num_heads=128, num_kv_heads=128,
+        d_ff=18432, vocab_size=129280,
+        attention="mla", q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+        rope_theta=1e4,
+        moe=MoEConfig(num_experts=256, top_k=8, num_shared=1,
+                      d_ff_expert=2048, first_dense=3,
+                      router_score="sigmoid", norm_topk=True),
+        mtp=True,
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-smoke", family="moe",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=128,
+        attention="mla", q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        moe=MoEConfig(num_experts=8, top_k=2, num_shared=1,
+                      d_ff_expert=32, first_dense=1,
+                      router_score="sigmoid", norm_topk=True,
+                      capacity_factor=8.0),
+        mtp=True, scan_chunk=8, attn_chunk=64, remat=False)

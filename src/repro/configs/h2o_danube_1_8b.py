@@ -1,0 +1,27 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix with sliding-window attn.
+
+24L d_model=2560 32H (kv=8) d_ff=6912 vocab=32000 [arXiv:2401.16818; hf].
+SWA window 4096 bounds the KV cache, which is why this arch runs the
+long_500k cell (DESIGN.md §7).
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-1.8b", family="dense",
+        num_layers=24, d_model=2560, num_heads=32, num_kv_heads=8,
+        d_ff=6912, vocab_size=32000,
+        window=4096, rope_theta=1e4,
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=128,
+        window=16, scan_chunk=8, attn_chunk=32, remat=False)

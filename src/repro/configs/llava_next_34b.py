@@ -1,0 +1,28 @@
+"""llava-next-34b [vlm] — anyres tiling VLM backbone.
+
+60L d_model=7168 56H (kv=8) d_ff=20480 vocab=64000
+[hf:llava-hf/llava-v1.6 family; unverified].  Backbone only per the brief:
+the vision tower is a stub — `input_specs()` supplies 576 precomputed
+patch embeddings per request, prepended to the text sequence.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b", family="vlm",
+        num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+        head_dim_override=128, d_ff=20480, vocab_size=64000,
+        num_img_tokens=576, rope_theta=5e6,
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim_override=16, d_ff=128, vocab_size=128,
+        num_img_tokens=8, scan_chunk=8, attn_chunk=64, remat=False)

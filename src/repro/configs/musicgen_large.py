@@ -1,0 +1,28 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=2048 32H (kv=32) d_ff=8192 vocab=2048 [arXiv:2306.05284; hf].
+Backbone only per the brief: the EnCodec audio frontend is a stub —
+`input_specs()` supplies the precomputed token stream (the delay-pattern
+flattened codebook ids), and audio reconstruction is out of scope.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large", family="audio",
+        num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=2048,
+        rope_theta=1e4,
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke", family="audio",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=64,
+        scan_chunk=8, attn_chunk=64, remat=False)

@@ -1,0 +1,26 @@
+"""qwen3-14b [dense] — qk_norm, GQA.
+
+40L d_model=5120 40H (kv=8, head_dim=128) d_ff=17408 vocab=151936
+[hf:Qwen/Qwen3-8B family; hf].
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-14b", family="dense",
+        num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim_override=128, d_ff=17408, vocab_size=151936,
+        qk_norm=True, rope_theta=1e6,
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-14b-smoke", family="dense",
+        num_layers=2, d_model=80, num_heads=5, num_kv_heads=1,
+        head_dim_override=16, d_ff=160, vocab_size=128,
+        qk_norm=True, scan_chunk=8, attn_chunk=64, remat=False)

@@ -1,0 +1,26 @@
+"""qwen3-8b [dense] — qk_norm, GQA.
+
+36L d_model=4096 32H (kv=8, head_dim=128) d_ff=12288 vocab=151936
+[hf:Qwen/Qwen3-8B; hf].
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b", family="dense",
+        num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8,
+        head_dim_override=128, d_ff=12288, vocab_size=151936,
+        qk_norm=True, rope_theta=1e6,
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim_override=16, d_ff=128, vocab_size=128,
+        qk_norm=True, scan_chunk=8, attn_chunk=64, remat=False)

@@ -1,0 +1,29 @@
+"""rwkv6-3b [ssm] — Finch: attention-free, data-dependent decay.
+
+32L d_model=2560 d_ff=8960 vocab=65536 [arXiv:2404.05892; hf].
+head_dim 64 => 40 heads.  O(1)-state decode: runs long_500k.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, SSMConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b", family="ssm",
+        num_layers=32, d_model=2560, num_heads=40, num_kv_heads=40,
+        d_ff=8960, vocab_size=65536,
+        block_pattern="rwkv",
+        ssm=SSMConfig(head_dim=64),
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="ssm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=128,
+        block_pattern="rwkv",
+        ssm=SSMConfig(head_dim=16),
+        scan_chunk=8, attn_chunk=64, remat=False)

@@ -1,0 +1,26 @@
+"""stablelm-3b [dense] — MHA with partial rotary (25%).
+
+32L d_model=2560 32H (kv=32) d_ff=6912 vocab=50304
+[hf:stabilityai/stablelm-2 family; unverified].
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-3b", family="dense",
+        num_layers=32, d_model=2560, num_heads=32, num_kv_heads=32,
+        d_ff=6912, vocab_size=50304,
+        rotary_pct=0.25, rope_theta=1e4,
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-3b-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=128,
+        rotary_pct=0.25, scan_chunk=8, attn_chunk=64, remat=False)

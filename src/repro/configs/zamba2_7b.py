@@ -1,0 +1,31 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention block.
+
+81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000 ssm_state=64
+[arXiv:2411.15242; unverified].  One shared attention+FFN block is applied
+every 6 Mamba2 layers (the published model alternates two shared blocks;
+we use one — noted in DESIGN.md).  Sub-quadratic: runs long_500k.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, SSMConfig
+
+
+def full(dtype=jnp.bfloat16) -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid",
+        num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+        d_ff=14336, vocab_size=32000,
+        block_pattern="zamba", shared_attn_every=6,
+        ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64),
+        param_dtype=dtype, act_dtype=dtype)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid",
+        num_layers=8, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=128,
+        block_pattern="zamba", shared_attn_every=3,
+        ssm=SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=16),
+        scan_chunk=8, attn_chunk=64, remat=False)

@@ -1,0 +1,17 @@
+"""Comparison systems from the paper's evaluation (§5.1).
+
+- diskann.py — DiskANN-like static pruned-graph index: offline build, beam
+  search with exhaustive neighbor evaluation, append-style inserts and
+  tombstone deletes (the degradation modes §2.2 describes).
+- spfresh.py — SPFresh-like clustering index: coarse IVF partitions,
+  in-place posting updates with split maintenance (LIRE-style), probe-P
+  search.
+
+Both expose the same interface as LSMVecIndex (build/insert/delete/search
++ IOStats) so the Fig. 5-8 benchmarks drive all three identically.
+"""
+
+from repro.core.baselines.diskann import DiskANNIndex
+from repro.core.baselines.spfresh import SPFreshIndex
+
+__all__ = ["DiskANNIndex", "SPFreshIndex"]

@@ -1,0 +1,582 @@
+"""Hybrid memory/disk hierarchical proximity graph (paper §3.2).
+
+Upper HNSW layers (layers 2.. in the paper's numbering; <1% of nodes) are
+memory-resident dense adjacency arrays.  The bottom layer — the bulk of the
+graph — lives in the LSM tree, so every structural update is an
+out-of-place LSM write.  Vectors are stored in one contiguous ID-sorted
+array ("disk", i.e. HBM on the TPU mapping) fetched by offset; SimHash
+codes are memory-resident.
+
+Implements Algorithm 1 (insert) and Algorithm 2 (delete with local
+neighbor relinking) plus a bulk construction path used for initial index
+builds (an exact-kNN bottom graph, the offline analogue).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsm, simhash
+from repro.core.iostats import IOStats
+from repro.core.traversal import BeamResult, beam_search, greedy_descent
+from repro.kernels.gather_l2.ops import gather_l2
+from repro.kernels.l2_distance.ops import l2_distance
+
+INF = jnp.inf
+
+
+class HNSWConfig(NamedTuple):
+    cap: int                 # id-space size (max nodes ever allocated)
+    dim: int
+    M: int = 16              # bottom-layer degree (LSM row width)
+    M_up: int = 8            # upper-layer degree
+    num_upper: int = 3       # number of memory-resident upper layers
+    ef_search: int = 48
+    ef_construction: int = 48
+    k: int = 10
+    m_bits: int = 64         # SimHash code width
+    rho: float = 1.0         # sampling ratio (Eq. 8); 1.0 = no sampling
+    eps: float = 0.1         # Hoeffding miss probability (Eq. 6)
+    use_filter: bool = True  # hash-threshold filtering on top of rho
+    lsm_mem_cap: int = 256
+    lsm_levels: int = 3
+    lsm_fanout: int = 8
+
+    @property
+    def lsm_cfg(self) -> lsm.LSMConfig:
+        # last level must hold every node's adjacency row
+        need = self.cap
+        base = max(self.lsm_mem_cap, 64)
+        fan = self.lsm_fanout
+        # grow fanout chain until the last level covers `need`
+        lv = self.lsm_levels
+        while base * fan ** lv < need:
+            fan += 1
+        return lsm.LSMConfig(mem_cap=base, num_levels=lv, fanout=fan,
+                             row_width=self.M)
+
+
+    @property
+    def max_iters(self) -> int:
+        return 2 * self.ef_search
+
+    @property
+    def words(self) -> int:
+        return self.m_bits // 32
+
+
+class HNSWState(NamedTuple):
+    vectors: jax.Array      # f32[cap, dim] — "disk" array, ID-sorted
+    norms: jax.Array        # f32[cap]
+    codes: jax.Array        # uint32[cap, W] — memory-resident
+    levels: jax.Array       # int32[cap]: -1 absent/deleted, else 0..num_upper
+    upper_adj: jax.Array    # int32[num_upper, cap, M_up]
+    store: lsm.LSMState     # bottom-layer adjacency
+    proj: jax.Array         # f32[m_bits, dim] — SimHash projections
+    count: jax.Array        # int32[] — ids allocated so far
+    n_live: jax.Array       # int32[]
+    entry: jax.Array        # int32[]
+    max_level: jax.Array    # int32[]
+    mean_norm: jax.Array    # f32[]
+    heat: jax.Array         # int32[cap, M] — sampled edge heat (§3.4)
+
+
+def init(cfg: HNSWConfig, key: jax.Array) -> HNSWState:
+    return HNSWState(
+        vectors=jnp.zeros((cfg.cap, cfg.dim), jnp.float32),
+        norms=jnp.zeros((cfg.cap,), jnp.float32),
+        codes=jnp.zeros((cfg.cap, cfg.words), jnp.uint32),
+        levels=jnp.full((cfg.cap,), -1, jnp.int32),
+        upper_adj=jnp.full((cfg.num_upper, cfg.cap, cfg.M_up), -1, jnp.int32),
+        store=lsm.init(cfg.lsm_cfg),
+        proj=jax.random.normal(key, (cfg.m_bits, cfg.dim), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+        n_live=jnp.zeros((), jnp.int32),
+        entry=jnp.full((), -1, jnp.int32),
+        max_level=jnp.zeros((), jnp.int32),
+        mean_norm=jnp.ones((), jnp.float32),
+        heat=jnp.zeros((cfg.cap, cfg.M), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _dist_fn(state: HNSWState, q: jax.Array):
+    """ids int32[n] -> squared L2 f32[n]; -1 ids cost nothing (+inf).
+
+    On TPU this is the fused gather+distance Pallas kernel (the "disk
+    fetch"); on CPU containers the jnp oracle with identical semantics.
+    """
+    def fn(ids):
+        return gather_l2(q[None, :], state.vectors, ids[None, :])[0]
+    return fn
+
+
+def _bottom_adj_fn(cfg: HNSWConfig, state: HNSWState):
+    def fn(node):
+        found, row, probes = lsm.get(cfg.lsm_cfg, state.store, node)
+        return jnp.where(found, row, -1), probes
+    return fn
+
+
+def _upper_adj_fn(state: HNSWState, u: int):
+    def fn(node):
+        return state.upper_adj[u, node], jnp.zeros((), jnp.int32)
+    return fn
+
+
+def _point_dist(state: HNSWState, q: jax.Array, node: jax.Array) -> jax.Array:
+    v = state.vectors[jnp.maximum(node, 0)]
+    return jnp.sum((q - v) ** 2)
+
+
+def _descend_upper(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
+                   down_to: jax.Array):
+    """Greedy-route through upper layers u = num_upper-1 .. down_to."""
+    ep = jnp.maximum(state.entry, 0)
+    d_ep = _point_dist(state, q, ep)
+    for u in reversed(range(cfg.num_upper)):
+        live_u = state.levels > u
+        new_ep, new_d = greedy_descent(q, ep, d_ep, state.upper_adj[u],
+                                       state.vectors, live_u)
+        use = jnp.asarray(u, jnp.int32) >= down_to
+        ep = jnp.where(use, new_ep, ep)
+        d_ep = jnp.where(use, new_d, d_ep)
+    return ep, d_ep
+
+
+def _topm(ids: jax.Array, dists: jax.Array, m: int):
+    """Best-m prefix of a distance-sorted candidate list (pad -1)."""
+    order = jnp.argsort(dists, stable=True)[:m]
+    out_ids = ids[order]
+    out_d = dists[order]
+    return jnp.where(jnp.isfinite(out_d), out_ids, -1), out_d
+
+
+def _diversity_topm(ids: jax.Array, dists: jax.Array, vectors: jax.Array,
+                    m: int, alpha: float = 1.0):
+    """HNSW neighbor-selection heuristic (keepPruned variant).
+
+    Greedily keeps candidate c only if it is closer to the base point than
+    to every already-kept neighbor (`alpha` relaxes the test, Vamana
+    style), then fills leftover slots with the nearest pruned candidates.
+    Plain closest-M edges all point into the local cluster and strand the
+    graph on clustered data; diverse edges are what keeps it navigable.
+    """
+    order = jnp.argsort(dists, stable=True)
+    ids, dists = ids[order], dists[order]
+    c = ids.shape[0]
+    cv = vectors[jnp.maximum(ids, 0)]
+    pair = jnp.sum((cv[:, None, :] - cv[None, :, :]) ** 2, axis=-1)
+    valid = jnp.isfinite(dists) & (ids >= 0)
+
+    def body(i, kept):
+        dominated = jnp.any(kept & (alpha * pair[i] < dists[i]))
+        space = jnp.sum(kept) < m
+        return kept.at[i].set(valid[i] & (~dominated) & space)
+
+    kept = jax.lax.fori_loop(0, c, body, jnp.zeros((c,), jnp.bool_))
+    rank = jnp.argsort(~kept, stable=True)   # kept first, distance order
+    ids2, valid2 = ids[rank], valid[rank]
+    return jnp.where(valid2[:m], ids2[:m], -1), dists[rank][:m]
+
+
+def _evict_slot(row: jax.Array, row_vecs_d_new: jax.Array) -> jax.Array:
+    """Backlink slot choice: empty slot first, else evict the existing
+    neighbor *closest to the incoming node* (most redundant direction) —
+    never the farthest, which would strip the long-range portals."""
+    score = jnp.where(row < 0, INF, -row_vecs_d_new)
+    return jnp.argmax(score)
+
+
+def _dedup_to_inf(ids: jax.Array, dists: jax.Array):
+    """Mask duplicate ids (keep first by distance order) with +inf."""
+    order = jnp.argsort(ids, stable=True)
+    sid = ids[order]
+    dup_sorted = jnp.concatenate([jnp.array([False]), sid[1:] == sid[:-1]])
+    dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    return jnp.where(dup, INF, dists)
+
+
+# ---------------------------------------------------------------------------
+# search (paper §3.2 "Search in LSM-VEC")
+# ---------------------------------------------------------------------------
+
+def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
+           *, rho: float | None = None, ef: int | None = None,
+           use_filter: bool | None = None) -> BeamResult:
+    """Single-query search: upper greedy descent -> sampled bottom beam."""
+    ef = ef or cfg.ef_search
+    rho = cfg.rho if rho is None else rho
+    use_filter = cfg.use_filter if use_filter is None else use_filter
+    ep, d_ep = _descend_upper(cfg, state, q, jnp.zeros((), jnp.int32))
+    code_q = simhash.encode(simhash.SimHashParams(state.proj), q[None, :])[0]
+    return beam_search(
+        q, ep, d_ep,
+        _bottom_adj_fn(cfg, state), _dist_fn(state, q),
+        state.codes, code_q, state.levels >= 0,
+        cap=cfg.cap, ef=ef, k=cfg.k, m_bits=cfg.m_bits, eps=cfg.eps,
+        rho=rho, max_iters=2 * ef, use_filter=use_filter,
+        q_norm=jnp.sqrt(jnp.sum(q * q)), mean_norm=state.mean_norm)
+
+
+def search_batch(cfg: HNSWConfig, state: HNSWState, qs: jax.Array,
+                 **kw) -> BeamResult:
+    return jax.vmap(lambda q: search(cfg, state, q, **kw))(qs)
+
+
+# ---------------------------------------------------------------------------
+# insert (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def _put_masked(cfg: HNSWConfig, store: lsm.LSMState, key, row, active):
+    """LSM put that lands on a reserved dead key when inactive.
+
+    Avoids lax.cond duplication of the flush machinery: id `cap` is outside
+    the live id space and never looked up.
+    """
+    dead = jnp.asarray(cfg.cap, jnp.int32)
+    return lsm.put(cfg.lsm_cfg, store,
+                   jnp.where(active, key, dead), row)
+
+
+def insert(cfg: HNSWConfig, state: HNSWState, x: jax.Array,
+           key: jax.Array) -> Tuple[HNSWState, IOStats]:
+    """Insert one vector (Algorithm 1).  Returns (state, construction IO)."""
+    i = state.count
+    # paper: Pr(L) ∝ e^{-L}  -> L = floor(Exp(1)), capped at num_upper
+    u01 = jax.random.uniform(key, (), jnp.float32, 1e-7, 1.0)
+    lvl = jnp.minimum(jnp.floor(-jnp.log(u01)).astype(jnp.int32),
+                      cfg.num_upper)
+
+    xnorm = jnp.sqrt(jnp.sum(x * x))
+    code = simhash.encode(simhash.SimHashParams(state.proj), x[None, :])[0]
+    state = state._replace(
+        vectors=state.vectors.at[i].set(x),
+        norms=state.norms.at[i].set(xnorm),
+        codes=state.codes.at[i].set(code),
+        levels=state.levels.at[i].set(lvl),
+        mean_norm=(state.mean_norm * state.n_live + xnorm)
+        / jnp.maximum(state.n_live + 1, 1),
+    )
+
+    first = state.n_live == 0
+
+    # ---- phase 1+2: upper layers ------------------------------------------
+    ep = jnp.maximum(state.entry, 0)
+    d_ep = _point_dist(state, x, ep)
+    upper_adj = state.upper_adj
+    for u in reversed(range(cfg.num_upper)):
+        live_u = (state.levels > u) & (jnp.arange(cfg.cap) != i)
+        above = jnp.asarray(u, jnp.int32) >= lvl   # greedy-only zone
+        # greedy step (used when u >= lvl)
+        g_ep, g_d = greedy_descent(x, ep, d_ep, upper_adj[u],
+                                   state.vectors, live_u)
+        # connect zone (u < lvl): ef-search this layer, link bidirectionally
+        res = beam_search(
+            x, ep, d_ep, _upper_adj_fn(state._replace(upper_adj=upper_adj), u),
+            _dist_fn(state, x), state.codes, code, live_u,
+            cap=cfg.cap, ef=cfg.ef_construction, k=cfg.k, m_bits=cfg.m_bits,
+            eps=cfg.eps, rho=1.0, max_iters=2 * cfg.ef_construction,
+            use_filter=False, q_norm=xnorm, mean_norm=state.mean_norm)
+        nbrs, _ = _diversity_topm(res.ids, res.dists, state.vectors,
+                                  cfg.M_up)
+        connect = (~above) & (~first)
+        upper_adj = upper_adj.at[u, i].set(
+            jnp.where(connect, nbrs, upper_adj[u, i]))
+        # backlinks: always formed; evict the most redundant edge when full
+        for j in range(cfg.M_up):
+            n = nbrs[j]
+            ok = connect & (n >= 0)
+            n_safe = jnp.maximum(n, 0)
+            row = upper_adj[u, n_safe]
+            d_new = jnp.sum((state.vectors[jnp.maximum(row, 0)]
+                             - x[None, :]) ** 2, axis=-1)
+            slot = _evict_slot(row, d_new)
+            new_row = row.at[slot].set(i)
+            upper_adj = upper_adj.at[u, n_safe].set(
+                jnp.where(ok, new_row, row))
+        ep = jnp.where(above, g_ep, jnp.where(res.dists[0] < INF,
+                                              res.ids[0], ep))
+        d_ep = jnp.where(above, g_d, jnp.minimum(res.dists[0], d_ep))
+    state = state._replace(upper_adj=upper_adj)
+
+    # ---- phase 3: bottom layer (disk / LSM) ---------------------------------
+    res = beam_search(
+        x, ep, d_ep, _bottom_adj_fn(cfg, state), _dist_fn(state, x),
+        state.codes, code, (state.levels >= 0) & (jnp.arange(cfg.cap) != i),
+        cap=cfg.cap, ef=cfg.ef_construction, k=cfg.k, m_bits=cfg.m_bits,
+        eps=cfg.eps, rho=cfg.rho, max_iters=2 * cfg.ef_construction,
+        use_filter=cfg.use_filter, q_norm=xnorm, mean_norm=state.mean_norm)
+    nbrs, _ = _diversity_topm(res.ids, res.dists, state.vectors, cfg.M)
+    nbrs = jnp.where(first, -1, nbrs)
+
+    store = _put_masked(cfg, state.store, i, nbrs, jnp.bool_(True))
+    # bidirectional links (Fig. 3: links are always formed; when the row is
+    # full the most redundant existing edge is evicted, keeping the new
+    # node reachable without stripping long-range portals)
+    for j in range(cfg.M):
+        n = nbrs[j]
+        ok = n >= 0
+        n_safe = jnp.maximum(n, 0)
+        found, row, _ = lsm.get(cfg.lsm_cfg, store, n_safe)
+        row = jnp.where(found, row, -1)
+        d_new = jnp.sum((state.vectors[jnp.maximum(row, 0)]
+                         - x[None, :]) ** 2, axis=-1)
+        slot = _evict_slot(row, d_new)
+        new_row = row.at[slot].set(i)
+        store = _put_masked(cfg, store, n_safe, new_row, ok)
+
+    new_entry = jnp.where(first | (lvl > state.max_level), i, state.entry)
+    state = state._replace(
+        store=store,
+        count=state.count + 1,
+        n_live=state.n_live + 1,
+        entry=new_entry,
+        max_level=jnp.maximum(state.max_level, lvl))
+    stats = res.stats._replace(
+        n_vec=res.stats.n_vec + cfg.M)  # backlink row re-rankings
+    return state, stats
+
+
+# ---------------------------------------------------------------------------
+# delete (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def delete(cfg: HNSWConfig, state: HNSWState, node) -> Tuple[HNSWState, IOStats]:
+    """Delete a vector with local neighbor relinking (Algorithm 2)."""
+    i = jnp.asarray(node, jnp.int32)
+    upper_adj = state.upper_adj
+
+    # ---- upper layers -------------------------------------------------------
+    for u in range(cfg.num_upper):
+        active = state.levels[i] > u
+        nbr = upper_adj[u, i]                                   # [M_up]
+        nbr_safe = jnp.maximum(nbr, 0)
+        cand = jnp.concatenate(
+            [upper_adj[u, nbr_safe].reshape(-1), nbr])          # 2-hop pool C
+        for jj in range(cfg.M_up):
+            p = nbr[jj]
+            ok = active & (p >= 0)
+            p_safe = jnp.maximum(p, 0)
+            d = jnp.sum((state.vectors[jnp.maximum(cand, 0)]
+                         - state.vectors[p_safe][None, :]) ** 2, axis=-1)
+            bad = (cand < 0) | (cand == i) | (cand == p) \
+                | (state.levels[jnp.maximum(cand, 0)] <= u)
+            d = jnp.where(bad, INF, d)
+            d = _dedup_to_inf(jnp.where(bad, -1, cand), d)
+            new_row, _ = _topm(cand, d, cfg.M_up)
+            upper_adj = upper_adj.at[u, p_safe].set(
+                jnp.where(ok, new_row, upper_adj[u, p_safe]))
+        upper_adj = upper_adj.at[u, i].set(
+            jnp.where(active, -1, upper_adj[u, i]))
+    state = state._replace(upper_adj=upper_adj)
+
+    # ---- bottom layer (Algorithm 2 lines 13-22) -----------------------------
+    found, n1, _ = lsm.get(cfg.lsm_cfg, state.store, i)
+    n1 = jnp.where(found, n1, -1)                               # [M]
+    n1_safe = jnp.maximum(n1, 0)
+    _, rows, _ = lsm.get_batch(cfg.lsm_cfg, state.store, n1_safe)  # [M, M]
+    cand = jnp.concatenate([rows.reshape(-1), n1])              # [M*M + M]
+    store = state.store
+    n_vec = jnp.zeros((), jnp.int32)
+    for jj in range(cfg.M):
+        p = n1[jj]
+        ok = p >= 0
+        p_safe = jnp.maximum(p, 0)
+        d = jnp.sum((state.vectors[jnp.maximum(cand, 0)]
+                     - state.vectors[p_safe][None, :]) ** 2, axis=-1)
+        bad = (cand < 0) | (cand == i) | (cand == p) \
+            | (state.levels[jnp.maximum(cand, 0)] < 0)
+        d = jnp.where(bad, INF, d)
+        d = _dedup_to_inf(jnp.where(bad, -1, cand), d)
+        new_row, _ = _topm(cand, d, cfg.M)
+        store = _put_masked(cfg, store, p_safe, new_row, ok)
+        n_vec = n_vec + jnp.sum(jnp.isfinite(d)).astype(jnp.int32)
+    store = lsm.delete(cfg.lsm_cfg, store, i)
+
+    was_live = state.levels[i] >= 0
+    levels = state.levels.at[i].set(-1)
+    # entry repair: highest remaining level (argmax breaks ties by lowest id)
+    need_new_entry = (state.entry == i)
+    alt = jnp.argmax(jnp.where(jnp.arange(cfg.cap) == i, -1, levels))
+    entry = jnp.where(need_new_entry, alt.astype(jnp.int32), state.entry)
+    state = state._replace(
+        store=store, levels=levels, entry=entry,
+        max_level=jnp.maximum(levels[jnp.maximum(entry, 0)], 0),
+        n_live=state.n_live - was_live.astype(jnp.int32))
+    stats = IOStats(n_adj=jnp.asarray(1 + cfg.M, jnp.int32), n_vec=n_vec,
+                    n_filtered=jnp.zeros((), jnp.int32),
+                    n_hops=jnp.zeros((), jnp.int32))
+    return state, stats
+
+
+# ---------------------------------------------------------------------------
+# bulk construction (initial index build)
+# ---------------------------------------------------------------------------
+
+def _np_diversity_select(cand: "np.ndarray", cand_d: "np.ndarray",
+                         vecs_np, deg: int, alpha: float = 1.0):
+    """Numpy twin of _diversity_topm (keepPruned heuristic)."""
+    import numpy as np
+    order = np.argsort(cand_d)
+    cand, cand_d = cand[order], cand_d[order]
+    cv = vecs_np[cand]
+    diff = cv[:, None, :] - cv[None, :, :]
+    pair = np.einsum("ijk,ijk->ij", diff, diff)
+    kept: list[int] = []
+    kept_idx: list[int] = []
+    for ci in range(len(cand)):
+        if len(kept) >= deg:
+            break
+        if all(alpha * pair[ci, kj] >= cand_d[ci] for kj in kept_idx):
+            kept.append(int(cand[ci]))
+            kept_idx.append(ci)
+    for ci in range(len(cand)):            # keepPruned fill
+        if len(kept) >= deg:
+            break
+        if int(cand[ci]) not in kept:
+            kept.append(int(cand[ci]))
+            kept_idx.append(ci)
+    return kept, [float(cand_d[j]) for j in kept_idx]
+
+
+def _incremental_graph(vecs_np, member_ids, deg: int, seed: int,
+                       batch: int = 64):
+    """Batched random-order incremental construction of one layer.
+
+    Nodes arrive in random order and connect to a *diversity-selected* set
+    among the already-placed nodes (HNSW's neighbor heuristic); back-edges
+    evict the placed node's most redundant edge.  Early arrivals keep
+    long-range links, which is exactly how incremental HNSW/NSW layers
+    become navigable — an exact kNN graph would fall apart into per-cluster
+    islands.  Host-side numpy; the per-batch distance block uses the shared
+    kernel wrapper.
+    """
+    import numpy as np
+    n_total = vecs_np.shape[0]
+    rows = np.full((n_total, deg), -1, np.int32)
+    rowd = np.full((n_total, deg), np.inf, np.float32)
+    ids = np.asarray(member_ids)
+    if ids.size == 0:
+        return rows
+    rng = np.random.default_rng(seed)
+    order = ids[rng.permutation(ids.size)]
+    placed = [int(order[0])]
+    # geometric batch ramp: early nodes (the long-range hubs) must connect
+    # densely to each other, not just to the seed
+    bounds = [1]
+    step = 1
+    while bounds[-1] < order.size:
+        bounds.append(min(bounds[-1] + step, order.size))
+        step = min(batch, step * 2)
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        chunk = order[s:e]
+        pv = jnp.asarray(vecs_np[np.asarray(placed)])
+        d_blk = np.asarray(l2_distance(jnp.asarray(vecs_np[chunk]), pv))
+        kk = min(2 * deg, len(placed))     # candidate pool for diversity
+        top = np.argpartition(d_blk, kk - 1, axis=1)[:, :kk] \
+            if kk < len(placed) else \
+            np.broadcast_to(np.arange(len(placed)), (len(chunk),
+                                                     len(placed)))
+        placed_arr = np.asarray(placed)
+        for bi, i in enumerate(chunk):
+            cand = placed_arr[top[bi]]
+            nb, nd = _np_diversity_select(cand, d_blk[bi, top[bi]],
+                                          vecs_np, deg)
+            rows[i, : len(nb)] = nb
+            rowd[i, : len(nd)] = nd
+            for p_, d_ in zip(nb, nd):
+                free = np.flatnonzero(rows[p_] < 0)
+                if free.size:
+                    j = int(free[0])
+                else:
+                    # evict the edge most redundant w.r.t. the newcomer
+                    nbr_vecs = vecs_np[rows[p_]]
+                    d_to_new = ((nbr_vecs - vecs_np[i]) ** 2).sum(1)
+                    j = int(np.argmin(d_to_new))
+                rows[p_, j] = i
+                rowd[p_, j] = d_
+            placed.append(int(i))
+    return rows
+
+
+def bulk_build(cfg: HNSWConfig, vectors: jax.Array, key: jax.Array,
+               *, batch: int = 64) -> HNSWState:
+    """Initial index build: batched incremental construction per layer.
+
+    Semantically this is Algorithm 1 run over a random insertion order with
+    exact (brute-force) neighbor search instead of beam search — the graph
+    the paper's insert procedure converges to, built at matmul speed.  The
+    bottom layer is written into the LSM tree as one sorted run (the
+    offline "build one big level" path); dynamic updates afterwards always
+    go through insert()/delete().
+    """
+    import numpy as np
+    n, dim = vectors.shape
+    assert n <= cfg.cap and dim == cfg.dim
+    k_init, k_lvl = jax.random.split(key)
+    state = init(cfg, k_init)
+
+    vecs = jnp.asarray(vectors, jnp.float32)
+    vecs_np = np.asarray(vecs)
+    norms = jnp.linalg.norm(vecs, axis=1)
+    codes = simhash.encode(simhash.SimHashParams(state.proj), vecs)
+    lvls_np = np.minimum(
+        np.floor(-np.log(np.asarray(jax.random.uniform(
+            k_lvl, (n,), jnp.float32, 1e-7, 1.0)))).astype(np.int32),
+        cfg.num_upper)
+    lvls_np[0] = cfg.num_upper   # stable entry chain
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    bottom = _incremental_graph(vecs_np, np.arange(n), cfg.M, seed=0,
+                                batch=batch)
+    store = lsm.bulk_load(cfg.lsm_cfg, ids, jnp.asarray(bottom))
+
+    upper = jnp.full((cfg.num_upper, cfg.cap, cfg.M_up), -1, jnp.int32)
+    for u in range(cfg.num_upper):
+        members = np.flatnonzero(lvls_np > u)
+        rows_u = _incremental_graph(vecs_np, members, cfg.M_up, seed=u + 1,
+                                    batch=batch)
+        upper = upper.at[u, :n].set(jnp.asarray(rows_u))
+
+    lvls = jnp.asarray(lvls_np)
+    entry = jnp.argmax(lvls).astype(jnp.int32)
+    return state._replace(
+        vectors=state.vectors.at[:n].set(vecs),
+        norms=state.norms.at[:n].set(norms),
+        codes=state.codes.at[:n].set(codes),
+        levels=state.levels.at[:n].set(lvls),
+        upper_adj=upper,
+        store=store,
+        count=jnp.asarray(n, jnp.int32),
+        n_live=jnp.asarray(n, jnp.int32),
+        entry=entry,
+        max_level=lvls[entry],
+        mean_norm=jnp.mean(norms))
+
+
+# ---------------------------------------------------------------------------
+# memory accounting (paper Fig. 6 — what must stay RAM-resident)
+# ---------------------------------------------------------------------------
+
+def memory_resident_bytes(cfg: HNSWConfig, state: HNSWState) -> jax.Array:
+    """Bytes of RAM the index needs: upper layers + codes + memtable.
+
+    Vectors and the bottom-layer graph live on "disk"; DiskANN-style systems
+    keep the full graph in memory during updates — that difference is the
+    paper's 66.2% memory claim (Fig. 6).
+    """
+    n_upper = jnp.sum(state.levels > 0)
+    upper_bytes = n_upper * cfg.M_up * 4 * cfg.num_upper
+    code_bytes = jnp.sum(state.levels >= 0) * cfg.words * 4
+    memtable_bytes = cfg.lsm_cfg.mem_cap * (4 + 4 * cfg.M + 1)
+    vec_cache = n_upper * cfg.dim * 4     # upper-node vectors cached in RAM
+    return upper_bytes + code_bytes + memtable_bytes + vec_cache + 4096

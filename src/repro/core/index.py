@@ -1,0 +1,172 @@
+"""LSMVecIndex — the public API of the paper's system.
+
+Wraps the functional core (hnsw/lsm/traversal/simhash/reorder) behind the
+interface a vector database exposes: build, insert, delete, search,
+maintenance (reorder/compact), plus the I/O statistics and memory
+accounting the paper's experiments report.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw, iostats, lsm, reorder
+from repro.core.iostats import CostModel, IOStats
+from repro.kernels.l2_distance.ops import l2_distance
+
+
+def brute_force_knn(vectors: jax.Array, queries: jax.Array, k: int,
+                    live: Optional[jax.Array] = None,
+                    block: int = 1024) -> np.ndarray:
+    """Exact ground-truth ids [Q, k] (for Recall K@K evaluation)."""
+    outs = []
+    q = jnp.asarray(queries)
+    for s in range(0, q.shape[0], block):
+        d = l2_distance(q[s:s + block], vectors)
+        if live is not None:
+            d = jnp.where(live[None, :], d, jnp.inf)
+        _, idx = jax.lax.top_k(-d, k)
+        outs.append(np.asarray(idx))
+    return np.concatenate(outs, axis=0)
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Recall K@K (Eq. 3): |found ∩ truth| / K averaged over queries."""
+    k = true_ids.shape[1]
+    hits = 0
+    for f, t in zip(found_ids, true_ids):
+        hits += len(set(f[:k].tolist()) & set(t.tolist()))
+    return hits / (k * len(true_ids))
+
+
+class LSMVecIndex:
+    """Dynamic disk-based vector index (LSM-VEC)."""
+
+    def __init__(self, cfg: hnsw.HNSWConfig, seed: int = 0,
+                 state: Optional[hnsw.HNSWState] = None):
+        self.cfg = cfg
+        self.state = state if state is not None else hnsw.init(
+            cfg, jax.random.key(seed))
+        self._rng = jax.random.key(seed + 1)
+        self.stats = IOStats.zero()
+
+        cfg_ = self.cfg
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def _insert(state, x, key):
+            return hnsw.insert(cfg_, state, x, key)
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def _delete(state, i):
+            return hnsw.delete(cfg_, state, i)
+
+        @functools.partial(jax.jit, static_argnames=("rho", "use_filter",
+                                                     "ef"))
+        def _search(state, qs, rho, use_filter, ef):
+            res = hnsw.search_batch(cfg_, state, qs, rho=rho,
+                                    use_filter=use_filter, ef=ef)
+            heat_delta = _heat_delta(state, res)
+            return res, heat_delta
+
+        def _heat_delta(state, res):
+            nodes = res.heat_nodes.reshape(-1)
+            mask = res.heat_mask.reshape(-1, cfg_.M)
+            safe = jnp.maximum(nodes, 0)
+            contrib = jnp.where((nodes >= 0)[:, None], mask, False)
+            return jnp.zeros_like(state.heat).at[safe].add(
+                contrib.astype(jnp.int32))
+
+        self._insert_fn = _insert
+        self._delete_fn = _delete
+        self._search_fn = _search
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def build(cls, cfg: hnsw.HNSWConfig, vectors: jax.Array,
+              seed: int = 0) -> "LSMVecIndex":
+        idx = cls(cfg, seed=seed, state=hnsw.bulk_build(
+            cfg, jnp.asarray(vectors, jnp.float32), jax.random.key(seed)))
+        return idx
+
+    # -- updates --------------------------------------------------------------
+
+    def insert(self, x) -> int:
+        """Insert one vector; returns its id."""
+        self._rng, sub = jax.random.split(self._rng)
+        new_id = int(self.state.count)
+        self.state, st = self._insert_fn(
+            self.state, jnp.asarray(x, jnp.float32), sub)
+        self.stats = self.stats + st
+        return new_id
+
+    def insert_batch(self, xs) -> list[int]:
+        return [self.insert(x) for x in np.asarray(xs)]
+
+    def delete(self, node_id: int) -> None:
+        self.state, st = self._delete_fn(self.state, jnp.asarray(node_id))
+        self.stats = self.stats + st
+
+    def delete_batch(self, ids) -> None:
+        for i in ids:
+            self.delete(int(i))
+
+    # -- search ---------------------------------------------------------------
+
+    def search(self, queries, k: Optional[int] = None, *,
+               rho: Optional[float] = None, ef: Optional[int] = None,
+               use_filter: Optional[bool] = None,
+               record_heat: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched ANN search.  queries [B, dim] -> (ids [B, k], dists)."""
+        cfg = self.cfg
+        k = k or cfg.k
+        rho = cfg.rho if rho is None else float(rho)
+        use_filter = cfg.use_filter if use_filter is None else use_filter
+        ef = ef or cfg.ef_search
+        qs = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        res, heat_delta = self._search_fn(self.state, qs, rho, use_filter,
+                                          ef)
+        if record_heat:
+            self.state = self.state._replace(
+                heat=self.state.heat + heat_delta)
+        batch_stats = jax.tree.map(lambda a: jnp.sum(a), res.stats)
+        self.stats = self.stats + IOStats(*batch_stats)
+        return np.asarray(res.ids[:, :k]), np.asarray(res.dists[:, :k])
+
+    # -- maintenance ----------------------------------------------------------
+
+    def reorder(self, *, window: int = 8, lam: float = 1.0) -> np.ndarray:
+        """Connectivity-aware relayout (§3.4), applied at compaction."""
+        n = int(self.state.count)
+        live, rows = lsm.resolve_all(self.cfg.lsm_cfg, self.state.store, n)
+        live_np = np.asarray(live).astype(bool) & (
+            np.asarray(self.state.levels[:n]) >= 0)
+        perm = reorder.gorder_permutation(
+            np.asarray(rows), np.asarray(self.state.heat[:n]),
+            window=window, lam=lam, live=live_np)
+        self.state = reorder.apply_permutation(self.cfg, self.state, perm)
+        return perm
+
+    def compact(self) -> None:
+        self.state = self.state._replace(
+            store=lsm.compact_all(self.cfg.lsm_cfg, self.state.store))
+
+    # -- accounting -----------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        self.stats = IOStats.zero()
+
+    def io_cost(self, model: CostModel = iostats.DISK) -> float:
+        return float(iostats.search_cost(self.stats, model))
+
+    def memory_bytes(self) -> int:
+        return int(hnsw.memory_resident_bytes(self.cfg, self.state))
+
+    @property
+    def size(self) -> int:
+        return int(self.state.n_live)

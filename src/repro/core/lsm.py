@@ -1,0 +1,393 @@
+"""A functional, fixed-capacity LSM-tree for graph adjacency storage.
+
+This is the JAX realization of the paper's storage engine (AsterDB role):
+a log-structured merge tree whose *values* are fixed-degree adjacency rows
+of the bottom HNSW layer.  All state lives in statically-shaped arrays so
+every operation (put / get / delete / flush / compaction) is jit- and
+vmap-compatible and *out-of-place by construction* — the paper's central
+storage property (§3.2).
+
+Layout
+------
+- memtable: unsorted (key, row, live) triples, newest at the highest slot.
+  This is the "memory-resident buffer" that absorbs random updates.
+- levels 0..L-1: sorted runs of exponentially growing capacity
+  ("disk-resident" — on the TPU mapping this is HBM, see DESIGN.md §2).
+  Padding keys are INT32_MAX so `searchsorted` lookups stay branch-free.
+- tombstones: live == 0 rows; retained until they reach the last level,
+  where compaction drops them (classic LSM semantics).
+
+Newest-wins resolution order: memtable (highest slot first) > L0 > L1 > ...
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PAD_KEY = jnp.iinfo(jnp.int32).max  # sorted-run padding; sorts after any real key
+EMPTY = -1                          # padding inside adjacency rows
+
+
+class LSMConfig(NamedTuple):
+    """Static configuration of the tree. All fields are Python ints."""
+
+    mem_cap: int = 256          # memtable capacity (entries)
+    num_levels: int = 4         # number of sorted on-"disk" levels
+    fanout: int = 8             # capacity ratio between adjacent levels
+    row_width: int = 16         # fixed adjacency-row width (HNSW M)
+
+    @property
+    def level_caps(self) -> Tuple[int, ...]:
+        return tuple(self.mem_cap * self.fanout ** (i + 1)
+                     for i in range(self.num_levels))
+
+    @property
+    def total_cap(self) -> int:
+        return self.mem_cap + sum(self.level_caps)
+
+
+class LSMState(NamedTuple):
+    """Pytree of arrays. `level_*` are tuples (one entry per level)."""
+
+    mem_keys: jax.Array           # int32[mem_cap]
+    mem_vals: jax.Array           # int32[mem_cap, row_width]
+    mem_live: jax.Array           # int8[mem_cap]  1=value, 0=tombstone
+    mem_count: jax.Array          # int32[]
+    level_keys: Tuple[jax.Array, ...]   # int32[cap_l], sorted, PAD_KEY padded
+    level_vals: Tuple[jax.Array, ...]   # int32[cap_l, row_width]
+    level_live: Tuple[jax.Array, ...]   # int8[cap_l]
+    level_counts: Tuple[jax.Array, ...]  # int32[]
+    # monotone write counter; doubles as the compaction epoch for stats
+    write_seq: jax.Array          # int32[]
+    n_flushes: jax.Array          # int32[]
+    n_compactions: jax.Array      # int32[]
+
+
+def init(cfg: LSMConfig) -> LSMState:
+    mk = jnp.full((cfg.mem_cap,), PAD_KEY, jnp.int32)
+    mv = jnp.full((cfg.mem_cap, cfg.row_width), EMPTY, jnp.int32)
+    ml = jnp.zeros((cfg.mem_cap,), jnp.int8)
+    lk, lv, ll, lc = [], [], [], []
+    for cap in cfg.level_caps:
+        lk.append(jnp.full((cap,), PAD_KEY, jnp.int32))
+        lv.append(jnp.full((cap, cfg.row_width), EMPTY, jnp.int32))
+        ll.append(jnp.zeros((cap,), jnp.int8))
+        lc.append(jnp.zeros((), jnp.int32))
+    return LSMState(mk, mv, ml, jnp.zeros((), jnp.int32),
+                    tuple(lk), tuple(lv), tuple(ll), tuple(lc),
+                    jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                    jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# merge machinery
+# ---------------------------------------------------------------------------
+
+def _merge_runs(keys_new, vals_new, live_new, count_new,
+                keys_old, vals_old, live_old, count_old,
+                out_cap: int, drop_tombstones: bool):
+    """Merge two sorted-ish runs; `new` shadows `old` on key collisions.
+
+    Both runs are PAD_KEY-padded.  Output is a PAD_KEY-padded sorted run of
+    static size `out_cap`.  Returns (keys, vals, live, count, overflow).
+    """
+    keys = jnp.concatenate([keys_new, keys_old])
+    vals = jnp.concatenate([vals_new, vals_old])
+    live = jnp.concatenate([live_new, live_old])
+    # priority: 0 for the newer run, 1 for the older — ties resolved newest-first
+    prio = jnp.concatenate([
+        jnp.zeros_like(keys_new), jnp.ones_like(keys_old)
+    ])
+    order = jnp.lexsort((prio, keys))
+    keys, vals, live, prio = keys[order], vals[order], live[order], prio[order]
+
+    dup = jnp.concatenate([jnp.array([False]), keys[1:] == keys[:-1]])
+    drop = dup | (keys == PAD_KEY)
+    if drop_tombstones:
+        drop = drop | (live == 0)
+
+    # stable compaction: keep-entries first, already key-sorted
+    keep_order = jnp.argsort(drop.astype(jnp.int32), stable=True)
+    keys, vals, live = keys[keep_order], vals[keep_order], live[keep_order]
+    count = jnp.sum(~drop).astype(jnp.int32)
+
+    n = keys.shape[0]
+    idx = jnp.arange(n)
+    keys = jnp.where(idx < count, keys, PAD_KEY)
+    live = jnp.where(idx < count, live, 0).astype(jnp.int8)
+
+    overflow = jnp.maximum(count - out_cap, 0)
+    return keys[:out_cap], vals[:out_cap], live[:out_cap], \
+        jnp.minimum(count, out_cap), overflow
+
+
+def _sorted_memtable(cfg: LSMConfig, st: LSMState):
+    """Sort the memtable into a run; duplicate keys resolved newest-wins."""
+    idx = jnp.arange(cfg.mem_cap)
+    keys = jnp.where(idx < st.mem_count, st.mem_keys, PAD_KEY)
+    # newer writes sit at higher slots -> lower priority value must win;
+    # use negative slot so lexsort puts the newest first within a key group
+    prio = -idx
+    order = jnp.lexsort((prio, keys))
+    keys = keys[order]
+    vals = st.mem_vals[order]
+    live = st.mem_live[order]
+    dup = jnp.concatenate([jnp.array([False]), keys[1:] == keys[:-1]])
+    drop = dup | (keys == PAD_KEY)
+    keep_order = jnp.argsort(drop.astype(jnp.int32), stable=True)
+    keys, vals, live = keys[keep_order], vals[keep_order], live[keep_order]
+    count = jnp.sum(~drop).astype(jnp.int32)
+    keys = jnp.where(jnp.arange(cfg.mem_cap) < count, keys, PAD_KEY)
+    return keys, vals, live.astype(jnp.int8), count
+
+
+def flush(cfg: LSMConfig, st: LSMState) -> LSMState:
+    """Flush memtable into L0, then cascade compactions down the levels."""
+    run_k, run_v, run_l, _ = _sorted_memtable(cfg, st)
+
+    lk = list(st.level_keys)
+    lv = list(st.level_vals)
+    ll = list(st.level_live)
+    lc = list(st.level_counts)
+
+    # memtable -> L0 (leveled compaction: merge directly)
+    lk[0], lv[0], ll[0], lc[0], _ = _merge_runs(
+        run_k, run_v, run_l, None,
+        lk[0], lv[0], ll[0], lc[0],
+        cfg.level_caps[0], drop_tombstones=(cfg.num_levels == 1))
+
+    n_comp = st.n_compactions
+    # cascade: if level i exceeds a fill threshold, merge it into i+1
+    for i in range(cfg.num_levels - 1):
+        thresh = int(cfg.level_caps[i] * 0.75)
+        need = lc[i] > thresh
+        last = (i + 1 == cfg.num_levels - 1)
+        merged = _merge_runs(lk[i], lv[i], ll[i], lc[i],
+                             lk[i + 1], lv[i + 1], ll[i + 1], lc[i + 1],
+                             cfg.level_caps[i + 1], drop_tombstones=last)
+        mk, mv_, ml_, mc, _ = merged
+        empty_k = jnp.full_like(lk[i], PAD_KEY)
+        empty_v = jnp.full_like(lv[i], EMPTY)
+        empty_l = jnp.zeros_like(ll[i])
+        lk[i + 1] = jnp.where(need, mk, lk[i + 1])
+        lv[i + 1] = jnp.where(need, mv_, lv[i + 1])
+        ll[i + 1] = jnp.where(need, ml_, ll[i + 1])
+        lc[i + 1] = jnp.where(need, mc, lc[i + 1])
+        lk[i] = jnp.where(need, empty_k, lk[i])
+        lv[i] = jnp.where(need, empty_v, lv[i])
+        ll[i] = jnp.where(need, empty_l, ll[i])
+        lc[i] = jnp.where(need, 0, lc[i])
+        n_comp = n_comp + need.astype(jnp.int32)
+
+    return st._replace(
+        mem_keys=jnp.full_like(st.mem_keys, PAD_KEY),
+        mem_vals=jnp.full_like(st.mem_vals, EMPTY),
+        mem_live=jnp.zeros_like(st.mem_live),
+        mem_count=jnp.zeros((), jnp.int32),
+        level_keys=tuple(lk), level_vals=tuple(lv),
+        level_live=tuple(ll), level_counts=tuple(lc),
+        n_flushes=st.n_flushes + 1, n_compactions=n_comp)
+
+
+# ---------------------------------------------------------------------------
+# point operations
+# ---------------------------------------------------------------------------
+
+def _raw_put(cfg: LSMConfig, st: LSMState, key, val, live) -> LSMState:
+    slot = st.mem_count
+    st = st._replace(
+        mem_keys=st.mem_keys.at[slot].set(key),
+        mem_vals=st.mem_vals.at[slot].set(val),
+        mem_live=st.mem_live.at[slot].set(live),
+        mem_count=st.mem_count + 1,
+        write_seq=st.write_seq + 1)
+    return jax.lax.cond(st.mem_count >= cfg.mem_cap,
+                        lambda s: flush(cfg, s), lambda s: s, st)
+
+
+def put(cfg: LSMConfig, st: LSMState, key, val) -> LSMState:
+    """Insert/overwrite `key` with adjacency row `val` (out-of-place)."""
+    return _raw_put(cfg, st, jnp.asarray(key, jnp.int32),
+                    jnp.asarray(val, jnp.int32), jnp.int8(1))
+
+
+def delete(cfg: LSMConfig, st: LSMState, key) -> LSMState:
+    """Write a tombstone for `key`."""
+    tomb = jnp.full((cfg.row_width,), EMPTY, jnp.int32)
+    return _raw_put(cfg, st, jnp.asarray(key, jnp.int32), tomb, jnp.int8(0))
+
+
+def get(cfg: LSMConfig, st: LSMState, key):
+    """Newest-wins point lookup.
+
+    Returns (found: bool[], value: int32[row_width], n_probes: int32[]).
+    `found` is False for missing keys *and* tombstoned keys.  `n_probes`
+    models the paper's t_n unit: ONE disk read per lookup — production
+    graph-LSMs (AsterDB) consult in-memory bloom filters/fences per run,
+    so only the resolving tier touches disk.  (The raw tier count is the
+    read amplification a filterless LSM would pay.)
+    """
+    key = jnp.asarray(key, jnp.int32)
+    idx = jnp.arange(cfg.mem_cap)
+    match = (st.mem_keys == key) & (idx < st.mem_count)
+    any_mem = jnp.any(match)
+    newest = jnp.argmax(jnp.where(match, idx, -1))
+    mem_val = st.mem_vals[newest]
+    mem_live = st.mem_live[newest] > 0
+
+    found = any_mem
+    alive = any_mem & mem_live
+    val = jnp.where(any_mem, mem_val, EMPTY)
+
+    for lvl in range(cfg.num_levels):
+        keys = st.level_keys[lvl]
+        pos = jnp.searchsorted(keys, key)
+        pos_c = jnp.minimum(pos, keys.shape[0] - 1)
+        hit = (keys[pos_c] == key)
+        lvl_val = st.level_vals[lvl][pos_c]
+        lvl_live = st.level_live[lvl][pos_c] > 0
+        take = (~found) & hit
+        val = jnp.where(take, lvl_val, val)
+        alive = jnp.where(take, lvl_live, alive)
+        found = found | hit
+
+    # bloom-filter model: one resolving disk read per lookup
+    probes = jnp.ones((), jnp.int32)
+    return found & alive, val, probes
+
+
+def get_batch(cfg: LSMConfig, st: LSMState, keys):
+    """Vectorized `get` over a key vector."""
+    return jax.vmap(lambda k: get(cfg, st, k))(keys)
+
+
+def puts(cfg: LSMConfig, st: LSMState, keys, vals) -> LSMState:
+    """Sequential batch put (scan) — preserves newest-wins ordering."""
+    def body(s, kv):
+        k, v = kv
+        return put(cfg, s, k, v), None
+    st, _ = jax.lax.scan(body, st, (keys, vals))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# maintenance / introspection
+# ---------------------------------------------------------------------------
+
+def bulk_load(cfg: LSMConfig, keys, vals) -> LSMState:
+    """Build a tree whose last level holds `keys`/`vals` directly (sorted).
+
+    Used by `bulk_build` index construction — the analogue of building the
+    initial index offline and writing one big sorted run.
+    """
+    st = init(cfg)
+    cap = cfg.level_caps[-1]
+    n = keys.shape[0]
+    if n > cap:
+        raise ValueError(f"bulk_load of {n} rows exceeds last-level cap {cap}")
+    order = jnp.argsort(keys)
+    lk = jnp.full((cap,), PAD_KEY, jnp.int32).at[:n].set(keys[order])
+    lv = jnp.full((cap, cfg.row_width), EMPTY, jnp.int32).at[:n].set(vals[order])
+    ll = jnp.zeros((cap,), jnp.int8).at[:n].set(1)
+    level_keys = st.level_keys[:-1] + (lk,)
+    level_vals = st.level_vals[:-1] + (lv,)
+    level_live = st.level_live[:-1] + (ll,)
+    level_counts = st.level_counts[:-1] + (jnp.asarray(n, jnp.int32),)
+    return st._replace(level_keys=level_keys, level_vals=level_vals,
+                       level_live=level_live, level_counts=level_counts)
+
+
+def compact_all(cfg: LSMConfig, st: LSMState) -> LSMState:
+    """Force-merge everything into the last level (major compaction)."""
+    st = flush(cfg, st)
+    lk = list(st.level_keys)
+    lv = list(st.level_vals)
+    ll = list(st.level_live)
+    lc = list(st.level_counts)
+    for i in range(cfg.num_levels - 1):
+        last = (i + 1 == cfg.num_levels - 1)
+        lk[i + 1], lv[i + 1], ll[i + 1], lc[i + 1], _ = _merge_runs(
+            lk[i], lv[i], ll[i], lc[i],
+            lk[i + 1], lv[i + 1], ll[i + 1], lc[i + 1],
+            cfg.level_caps[i + 1], drop_tombstones=last)
+        lk[i] = jnp.full_like(lk[i], PAD_KEY)
+        lv[i] = jnp.full_like(lv[i], EMPTY)
+        ll[i] = jnp.zeros_like(ll[i])
+        lc[i] = jnp.zeros((), jnp.int32)
+    return st._replace(level_keys=tuple(lk), level_vals=tuple(lv),
+                       level_live=tuple(ll), level_counts=tuple(lc),
+                       n_compactions=st.n_compactions + 1)
+
+
+def remap_ids(cfg: LSMConfig, st: LSMState, perm_map) -> LSMState:
+    """Rename node IDs everywhere: key k -> perm_map[k]; same for row entries.
+
+    `perm_map` is int32[id_space]; EMPTY entries in rows are preserved.
+    Used when connectivity-aware reordering relabels nodes at compaction
+    (§3.4).  Runs a major compaction first so only one run needs remapping.
+    """
+    st = compact_all(cfg, st)
+    perm_map = jnp.asarray(perm_map, jnp.int32)
+    keys = st.level_keys[-1]
+    vals = st.level_vals[-1]
+    live = st.level_live[-1]
+    count = st.level_counts[-1]
+
+    is_real = keys != PAD_KEY
+    safe_keys = jnp.where(is_real, keys, 0)
+    new_keys = jnp.where(is_real, perm_map[safe_keys], PAD_KEY)
+    safe_vals = jnp.where(vals >= 0, vals, 0)
+    new_vals = jnp.where(vals >= 0, perm_map[safe_vals], vals)
+
+    order = jnp.argsort(new_keys)
+    level_keys = st.level_keys[:-1] + (new_keys[order],)
+    level_vals = st.level_vals[:-1] + (new_vals[order],)
+    level_live = st.level_live[:-1] + (live[order],)
+    return st._replace(level_keys=level_keys, level_vals=level_vals,
+                       level_live=level_live,
+                       level_counts=st.level_counts[:-1] + (count,))
+
+
+def resolve_all(cfg: LSMConfig, st: LSMState, id_space: int):
+    """Dense newest-wins view: (live int8[id_space], rows int32[id_space, M]).
+
+    Test/maintenance utility (used by compaction-time reordering and the
+    property tests); cost O(id_space + total_cap).
+    """
+    # spare slot at id_space absorbs padding/out-of-range writes
+    live = jnp.zeros((id_space + 1,), jnp.int8)
+    rows = jnp.full((id_space + 1, cfg.row_width), EMPTY, jnp.int32)
+    # oldest level first, newest memtable last — later writes overwrite
+    for lvl in range(cfg.num_levels - 1, -1, -1):
+        keys = st.level_keys[lvl]
+        ok = (keys != PAD_KEY) & (keys < id_space)
+        safe = jnp.where(ok, keys, id_space)
+        live = live.at[safe].set(st.level_live[lvl].astype(jnp.int8))
+        rows = rows.at[safe].set(st.level_vals[lvl])
+    idx = jnp.arange(cfg.mem_cap)
+    ok = (idx < st.mem_count) & (st.mem_keys != PAD_KEY) \
+        & (st.mem_keys < id_space)
+    safe = jnp.where(ok, st.mem_keys, id_space)
+    # memtable slots are time-ordered; apply in order so newest wins
+    def body(carry, i):
+        live, rows = carry
+        k = safe[i]
+        live = live.at[k].set(st.mem_live[i])
+        rows = rows.at[k].set(st.mem_vals[i])
+        return (live, rows), None
+    (live, rows), _ = jax.lax.scan(body, (live, rows), jnp.arange(cfg.mem_cap))
+    return live[:id_space], rows[:id_space]
+
+
+def memory_bytes(cfg: LSMConfig) -> int:
+    """Bytes the *memory-resident* part occupies (memtable only)."""
+    return cfg.mem_cap * (4 + 4 * cfg.row_width + 1) + 64
+
+
+def disk_bytes(cfg: LSMConfig) -> int:
+    """Bytes the on-"disk" levels occupy at full capacity."""
+    return sum(c * (4 + 4 * cfg.row_width + 1) for c in cfg.level_caps)

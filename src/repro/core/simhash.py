@@ -1,0 +1,112 @@
+"""Sign-random-projection (SimHash) codes and the Hoeffding filter (§3.3).
+
+The sampling-guided traversal keeps one packed binary code per vector *in
+memory* (on the TPU mapping: resident per-core, cheap to evaluate) and only
+fetches a candidate's full vector from the slow tier when its hash-collision
+count with the query clears a Hoeffding threshold — Eq. (4)–(6) of the
+paper.
+
+Encoding (Eq. 4):   Hash(x) = [sgn(x·a_1), ..., sgn(x·a_m)],  a_i ~ N(0, I)
+Collisions (Eq. 5): #Col(q,u) = (m + Hash(q)·Hash(u)) / 2
+                               = m - popcount(bits_q XOR bits_u)
+Filter (Eq. 6):     evaluate u iff #Col(q,u) >= T_eps
+
+For SimHash, P[bit collides] = 1 - theta/pi where theta = angle(q,u).
+#Col ~ Binomial(m, p), so by Hoeffding the one-sided deviation below the
+mean exceeds sqrt(m ln(1/eps) / 2) with probability <= eps.  A candidate
+within distance delta therefore passes
+
+    T_eps = m * (1 - theta_delta / pi) - sqrt(m ln(1/eps) / 2)
+
+with probability >= 1 - eps, which is the paper's recall guarantee: skipping
+candidates below T_eps loses a true <=delta neighbor with prob <= eps.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SimHashParams(NamedTuple):
+    proj: jax.Array   # float32[m_bits, dim] — random projection directions
+
+    @property
+    def m_bits(self) -> int:
+        return self.proj.shape[0]
+
+    @property
+    def words(self) -> int:
+        return self.proj.shape[0] // 32
+
+
+def init(key: jax.Array, dim: int, m_bits: int = 64) -> SimHashParams:
+    if m_bits % 32 != 0:
+        raise ValueError("m_bits must be a multiple of 32 for uint32 packing")
+    proj = jax.random.normal(key, (m_bits, dim), jnp.float32)
+    return SimHashParams(proj)
+
+
+def encode(params: SimHashParams, x: jax.Array) -> jax.Array:
+    """Pack sgn(x @ a_i) into uint32 words.  x: [..., dim] -> [..., m/32]."""
+    bits = (x @ params.proj.T) >= 0.0                      # [..., m]
+    m = params.m_bits
+    bits = bits.reshape(*bits.shape[:-1], m // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)
+
+
+def collisions(code_q: jax.Array, code_u: jax.Array, m_bits: int) -> jax.Array:
+    """#Col(q, u) per Eq. (5).  Broadcasts over leading dims.
+
+    code_*: uint32[..., m/32] -> int32[...]
+    """
+    ham = jnp.sum(jax.lax.population_count(code_q ^ code_u), axis=-1)
+    return (m_bits - ham).astype(jnp.int32)
+
+
+def collision_probability(cos_sim: jax.Array) -> jax.Array:
+    """P[one SimHash bit collides] = 1 - angle / pi."""
+    theta = jnp.arccos(jnp.clip(cos_sim, -1.0, 1.0))
+    return 1.0 - theta / jnp.pi
+
+
+def hoeffding_threshold(m_bits: int, eps: float, cos_sim: jax.Array) -> jax.Array:
+    """T_eps: minimum collisions a <=delta candidate clears w.p. >= 1-eps.
+
+    `cos_sim` is the cosine similarity corresponding to the dynamic distance
+    cutoff delta (the worst distance in the current top-k set — Eq. 6's
+    dynamic delta).  Smaller eps -> lower threshold -> fewer false skips.
+    """
+    p = collision_probability(cos_sim)
+    slack = math.sqrt(m_bits * math.log(1.0 / eps) / 2.0)
+    return p * m_bits - slack
+
+
+def cos_from_l2(delta_sq: jax.Array, q_norm: jax.Array, u_norm: jax.Array) -> jax.Array:
+    """cos(q,u) implied by squared L2 distance delta^2 and the two norms.
+
+    ||q - u||^2 = ||q||^2 + ||u||^2 - 2 ||q|| ||u|| cos  =>
+    cos = (||q||^2 + ||u||^2 - delta^2) / (2 ||q|| ||u||).
+
+    The traversal uses the dataset's mean norm for ||u|| (the true candidate
+    norm is unknown before the fetch — that is the point of the filter).
+    """
+    denom = jnp.maximum(2.0 * q_norm * u_norm, 1e-12)
+    return jnp.clip((q_norm ** 2 + u_norm ** 2 - delta_sq) / denom, -1.0, 1.0)
+
+
+def filter_mask(params: SimHashParams, code_q: jax.Array, codes_u: jax.Array,
+                eps: float, delta_sq: jax.Array, q_norm: jax.Array,
+                mean_norm: jax.Array) -> jax.Array:
+    """Eq. (6): True where the candidate must be evaluated (fetched).
+
+    code_q: uint32[W]; codes_u: uint32[n, W] -> bool[n]
+    """
+    cols = collisions(code_q[None, :], codes_u, params.m_bits)
+    cos = cos_from_l2(delta_sq, q_norm, mean_norm)
+    thr = hoeffding_threshold(params.m_bits, eps, cos)
+    return cols.astype(jnp.float32) >= thr

@@ -1,0 +1,6 @@
+"""Deterministic synthetic data pipelines (tokens for LM training, vectors
+for the ANN benchmarks)."""
+
+from repro.data.synth import make_clustered_vectors, token_pipeline
+
+__all__ = ["make_clustered_vectors", "token_pipeline"]

@@ -1,0 +1,55 @@
+"""Synthetic data generators.
+
+`make_clustered_vectors` mimics SIFT's clustered structure (the paper's
+SIFT1B substrate is not shippable offline): a Gaussian-mixture in d dims,
+values roughly in SIFT's dynamic range.  Queries drawn with the same
+`center_seed` are in-distribution (the SIFT query set is), while a
+different `center_seed` produces out-of-distribution probes.
+
+`token_pipeline` is the LM-side data substrate: an infinite deterministic
+stream of (tokens, labels) batches, shardable by (host, step) so every data
+-parallel worker sees a disjoint slice — the property a real multi-pod
+input pipeline must have (resume-able by step, no host coordination).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def make_clustered_vectors(n: int, dim: int = 128, seed: int = 0,
+                           clusters: int = 64, center_seed: int = 123,
+                           scale: float = 2.5,
+                           noise: float = 1.0) -> np.ndarray:
+    """SIFT-like clustered vectors, float32 [n, dim]."""
+    crng = np.random.default_rng(center_seed)
+    centers = crng.normal(0.0, scale, (clusters, dim))
+    rng = np.random.default_rng(seed)
+    asg = rng.integers(0, clusters, n)
+    return (centers[asg] + rng.normal(0.0, noise, (n, dim))).astype(np.float32)
+
+
+def token_pipeline(batch: int, seq_len: int, vocab: int, *, seed: int = 0,
+                   host_id: int = 0, num_hosts: int = 1,
+                   start_step: int = 0) -> Iterator[
+                       Tuple[np.ndarray, np.ndarray]]:
+    """Deterministic sharded token stream.
+
+    Step t on host h derives its slice from counter (t * num_hosts + h), so
+    (a) restarts resume exactly (pass start_step), (b) hosts never overlap,
+    (c) elastics re-shard cleanly: changing num_hosts re-partitions the same
+    underlying stream.  Yields (tokens[batch, seq_len], labels) int32 where
+    labels are tokens shifted by one (next-token prediction).
+    """
+    t = start_step
+    while True:
+        counter = np.uint64(t) * np.uint64(num_hosts) + np.uint64(host_id)
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=seed, spawn_key=(int(counter),)))
+        # zipfian-ish marginal to mimic natural token frequencies
+        z = rng.zipf(1.3, size=(batch, seq_len + 1)).astype(np.int64)
+        toks = (z % vocab).astype(np.int32)
+        yield toks[:, :-1], toks[:, 1:]
+        t += 1

@@ -1,0 +1,8 @@
+"""Fault tolerance: restartable training, failure injection, straggler and
+elasticity policy."""
+
+from repro.ft.elastic import (FailureInjector, RestartPolicy,
+                              SimulatedFailure, run_with_restarts)
+
+__all__ = ["FailureInjector", "RestartPolicy", "SimulatedFailure",
+           "run_with_restarts"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the performance hot-spots the paper optimizes.
+
+Each kernel ships three files:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, backend dispatch)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""
+
+from repro.kernels.l2_distance.ops import l2_distance
+from repro.kernels.gather_l2.ops import gather_l2
+from repro.kernels.simhash.ops import collision_count, simhash_encode
+
+__all__ = ["l2_distance", "gather_l2", "simhash_encode", "collision_count"]

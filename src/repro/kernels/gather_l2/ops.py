@@ -1,0 +1,40 @@
+"""Public jit'd wrapper for the fused gather+distance kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_l2.kernel import gather_l2_pallas
+from repro.kernels.gather_l2.ref import gather_l2_ref
+
+def _on_tpu() -> bool:
+    # lazy: calling default_backend() at import time would lock
+    # the device count before test/dry-run env flags apply
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gather_l2(queries: jax.Array, table: jax.Array, ids: jax.Array,
+              *, use_pallas: bool | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    """Fetch `table[ids]` and return squared L2 to `queries`.
+
+    queries [B, d], table [N, d], ids int32[B, K] -> f32[B, K];
+    ids < 0 yield +inf (filtered candidates are never fetched — Eq. 8's
+    rho * d factor comes from negative ids produced by the SimHash filter).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return gather_l2_ref(queries, table, ids)
+    d = queries.shape[-1]
+    pad = (-d) % 128
+    if pad:
+        queries = jnp.pad(queries, ((0, 0), (0, pad)))
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+    return gather_l2_pallas(queries, table, ids, interpret=interpret)

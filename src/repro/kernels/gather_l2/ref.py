@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused gather+distance kernel."""
+
+import jax.numpy as jnp
+
+
+def gather_l2_ref(queries: jnp.ndarray, table: jnp.ndarray,
+                  ids: jnp.ndarray) -> jnp.ndarray:
+    """Fetch table rows by id and return squared L2 distance to each query.
+
+    queries [B, d], table [N, d], ids int32[B, K] -> dists f32[B, K].
+    Negative ids are "skip" sentinels (filtered-out neighbors); their
+    distance is +inf.
+    """
+    q = queries.astype(jnp.float32)                   # [B, d]
+    safe = jnp.maximum(ids, 0)
+    rows = table[safe].astype(jnp.float32)            # [B, K, d]
+    diff = rows - q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(ids >= 0, d2, jnp.inf)

@@ -1,0 +1,48 @@
+"""Public jit'd wrapper for the L2 distance kernel (pad/unpad + dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.l2_distance.kernel import l2_distance_pallas
+from repro.kernels.l2_distance.ref import l2_distance_ref
+
+# CPU containers validate the Pallas path in interpret mode; on TPU the
+# compiled kernel runs.  Callers can force either path.
+def _on_tpu() -> bool:
+    # lazy: calling default_backend() at import time would lock
+    # the device count before test/dry-run env flags apply
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def l2_distance(queries: jax.Array, candidates: jax.Array,
+                *, use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """Squared L2 distance [Q, N]; pads to kernel tiles and slices back."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return l2_distance_ref(queries, candidates)
+    q_tot, n_tot = queries.shape[0], candidates.shape[0]
+    bq = min(128, max(8, 1 << (q_tot - 1).bit_length())) if q_tot else 8
+    qp = _pad_to(queries, 0, bq)
+    cp = _pad_to(candidates, 0, 128)
+    out = l2_distance_pallas(qp, cp, block_q=bq, block_n=128,
+                             interpret=interpret)
+    return out[:q_tot, :n_tot]

@@ -1,0 +1,89 @@
+"""Pallas TPU kernels for the in-memory SimHash filter (§3.3).
+
+Two kernels:
+
+1. `simhash_encode` — projection matmul (MXU) + sign + bit packing (VPU).
+   Runs at insert time, one row per new vector.
+2. `collision_count` — XOR + popcount between query codes and candidate
+   codes.  This is the *prefilter* the traversal runs before any HBM vector
+   fetch; it must be far cheaper than the fetch it saves, which is why it
+   stays in the fast tier (VMEM-resident packed uint32 words).
+
+Packing note: bits land in uint32 words via a small [32] weight dot — the
+VPU-friendly form of a bit shift reduce.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(x_ref, proj_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)            # [bn, d]
+    p = proj_ref[...].astype(jnp.float32)         # [d, m]
+    z = jax.lax.dot_general(x, p, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    bits = (z >= 0.0)                              # [bn, m]
+    bn, m = bits.shape
+    bits = bits.reshape(bn, m // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    o_ref[...] = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def simhash_encode_pallas(x: jax.Array, proj: jax.Array,
+                          *, block_n: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """x [N, d], proj [m, d] -> uint32[N, m/32].  N % block_n == 0."""
+    n, d = x.shape
+    m = proj.shape[0]
+    assert n % block_n == 0 and m % 32 == 0
+    proj_t = proj.T  # [d, m] — feed the MXU contiguous lanes
+
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, m // 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m // 32), jnp.uint32),
+        interpret=interpret,
+    )(x, proj_t)
+
+
+def _collision_kernel(q_ref, c_ref, o_ref, *, m_bits: int):
+    q = q_ref[...]                                  # [bq, W]
+    c = c_ref[...]                                  # [bn, W]
+    x = q[:, None, :] ^ c[None, :, :]               # [bq, bn, W]
+    ham = jnp.sum(jax.lax.population_count(x), axis=-1)
+    o_ref[...] = (m_bits - ham).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits", "block_q", "block_n",
+                                             "interpret"))
+def collision_count_pallas(codes_q: jax.Array, codes_c: jax.Array,
+                           m_bits: int, *, block_q: int = 8,
+                           block_n: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """codes_q uint32[Q, W] x codes_c uint32[N, W] -> int32[Q, N]."""
+    q, w = codes_q.shape
+    n, _ = codes_c.shape
+    assert q % block_q == 0 and n % block_n == 0
+
+    return pl.pallas_call(
+        functools.partial(_collision_kernel, m_bits=m_bits),
+        grid=(q // block_q, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.int32),
+        interpret=interpret,
+    )(codes_q, codes_c)

@@ -1,0 +1,61 @@
+"""Public jit'd wrappers for the SimHash kernels (pad/unpad + dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.simhash.kernel import (collision_count_pallas,
+                                          simhash_encode_pallas)
+from repro.kernels.simhash.ref import collision_count_ref, simhash_encode_ref
+
+def _on_tpu() -> bool:
+    # lazy: calling default_backend() at import time would lock
+    # the device count before test/dry-run env flags apply
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def simhash_encode(x: jax.Array, proj: jax.Array, *,
+                   use_pallas: bool | None = None,
+                   interpret: bool | None = None) -> jax.Array:
+    """x [N, d], proj [m, d] -> packed uint32[N, m/32]."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return simhash_encode_ref(x, proj)
+    n = x.shape[0]
+    block = 256 if n >= 256 else 8
+    xp = _pad_rows(x, block)
+    return simhash_encode_pallas(xp, proj, block_n=block,
+                                 interpret=interpret)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits", "use_pallas",
+                                             "interpret"))
+def collision_count(codes_q: jax.Array, codes_c: jax.Array, m_bits: int, *,
+                    use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Matching-bit counts (Eq. 5) between every query/candidate pair."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return collision_count_ref(codes_q, codes_c, m_bits)
+    q, n = codes_q.shape[0], codes_c.shape[0]
+    bq = 8
+    bn = 512 if n >= 512 else 8
+    qp = _pad_rows(codes_q, bq)
+    cp = _pad_rows(codes_c, bn)
+    return collision_count_pallas(qp, cp, m_bits, block_q=bq, block_n=bn,
+                                  interpret=interpret)[:q, :n]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the SimHash encode / collision-count kernels."""
+
+import jax
+import jax.numpy as jnp
+
+
+def simhash_encode_ref(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """x [N, d], proj [m, d] -> packed codes uint32[N, m/32]."""
+    bits = (x.astype(jnp.float32) @ proj.T.astype(jnp.float32)) >= 0.0
+    n, m = bits.shape
+    bits = bits.reshape(n, m // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)
+
+
+def collision_count_ref(codes_q: jnp.ndarray, codes_c: jnp.ndarray,
+                        m_bits: int) -> jnp.ndarray:
+    """codes_q uint32[Q, W], codes_c uint32[N, W] -> collisions int32[Q, N]."""
+    x = codes_q[:, None, :] ^ codes_c[None, :, :]
+    ham = jnp.sum(jax.lax.population_count(x), axis=-1)
+    return (m_bits - ham).astype(jnp.int32)

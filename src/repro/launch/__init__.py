@@ -1,0 +1,1 @@
+"""Launcher: production meshes, sharding rules, train/serve steps, dry-run."""

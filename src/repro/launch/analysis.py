@@ -1,0 +1,105 @@
+"""Compiled-artifact analysis: collective parsing + roofline terms.
+
+The container is CPU-only, so the "profile" is the compiled HLO:
+ - `cost_analysis()` gives per-device FLOPs / bytes accessed;
+ - collective bytes are parsed from the optimized HLO text (per-device
+   operand shapes of all-reduce / all-gather / reduce-scatter / all-to-all
+   / collective-permute, skipping *-done halves of async pairs);
+ - `memory_analysis()` gives per-device argument/output/temp bytes.
+
+Hardware constants (TPU v5e-class target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<types>.*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _bytes_of_types(span: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(span):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-op {count, bytes} from optimized per-device HLO."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue           # async pair: count the -start half only
+        op = m.group("op")
+        b = _bytes_of_types(m.group("types"))
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, Dict],
+                   *, steps_amortized: int = 1) -> Dict[str, float]:
+    """Three roofline terms (seconds, per device) + totals."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    # all-reduce moves ~2x payload through each link (ring); others ~1x
+    coll_bytes = 0.0
+    for op, rec in coll.items():
+        factor = 2.0 if op == "all-reduce" else 1.0
+        coll_bytes += factor * rec["bytes"]
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_bytes,
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_accessed / HBM_BW,
+        "t_collective": coll_bytes / ICI_BW,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    trio = {"compute": terms["t_compute"], "memory": terms["t_memory"],
+            "collective": terms["t_collective"]}
+    return max(trio, key=trio.get)
+
+
+def model_flops(cfg, n_params: int, shape_name: str, *,
+                embed_params: int = 0, routed_params: int = 0) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params.
+
+    MoE: routed-expert params count at top_k/num_experts utilization.
+    Embedding-lookup params are excluded (gather, not FLOPs); the unembed
+    matmul is part of n_params when untied.
+    """
+    from repro import configs as _c
+    seq, batch, kind = _c.SHAPES[shape_name]
+    n_active = n_params - embed_params
+    if cfg.moe is not None and routed_params:
+        n_active -= routed_params * (1.0 - cfg.moe.top_k
+                                     / cfg.moe.num_experts)
+    tokens = batch * (1 if kind == "decode" else seq)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) cell, lower + compile the relevant
+step (train_step / prefill_step / serve_step) against ShapeDtypeStruct
+inputs on the production mesh (16x16 single pod, and 2x16x16 multi-pod),
+print memory_analysis / cost_analysis, parse collective bytes, and append
+a JSON record per cell to the results file.  A failed cell records its
+error instead of aborting the sweep — sharding failures are bugs to fix,
+and the record shows where.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --out results/dryrun.json --skip-done
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import analysis, steps
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (data_sharding, param_spec, state_spec,
+                                   tree_shardings)
+from repro.optim import adamw_init
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cfg = configs.get_config(arch, "full")
+    seq, batch, kind = configs.SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "kind": kind, "n_devices": int(n_dev)}
+
+    specs = steps.input_specs(cfg, shape_name)
+    params_abs = steps.abstract_params(cfg)
+    p_shard = tree_shardings(mesh, params_abs, param_spec)
+
+    t0 = time.monotonic()
+    with jax.sharding.set_mesh(mesh):
+        if kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_shard = tree_shardings(mesh, opt_abs, param_spec)
+            batch_shard = {
+                k: data_sharding(mesh, nd=len(v.shape),
+                                 batch_size=v.shape[0])
+                for k, v in specs.items()}
+            step = steps.make_train_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, batch_shard),
+                             out_shardings=(p_shard, o_shard, None))
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        elif kind == "prefill":
+            batch_shard = {
+                k: data_sharding(mesh, nd=len(v.shape),
+                                 batch_size=v.shape[0])
+                for k, v in specs.items()}
+            step = steps.make_prefill_step(cfg, max_len=seq)
+            jitted = jax.jit(step, in_shardings=(p_shard, batch_shard))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            state_shard = tree_shardings(mesh, specs["state"], state_spec)
+            batch_shard = {
+                "tokens": data_sharding(mesh, nd=2, batch_size=batch),
+                "state": state_shard}
+            step = steps.make_serve_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_shard, batch_shard),
+                             out_shardings=(None, state_shard))
+            lowered = jitted.lower(params_abs, specs)
+        rec["lower_s"] = round(time.monotonic() - t0, 2)
+
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.monotonic() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        }
+        print(f"[{arch} x {shape_name} @ {rec['mesh']}] memory_analysis:",
+              mem)
+    cost = compiled.cost_analysis()
+    rec["cost_raw"] = {k: float(v) for k, v in cost.items()
+                       if k in ("flops", "bytes accessed",
+                                "transcendentals")}
+    # trip-count-aware analysis (cost_analysis counts loop bodies once)
+    from repro.launch import hlo_analyzer
+    hlo = hlo_analyzer.analyze(compiled.as_text())
+    rec["cost"] = {"flops": hlo["flops"], "bytes accessed": hlo["bytes"]}
+    print(f"[{arch} x {shape_name} @ {rec['mesh']}] per-device: "
+          f"flops={hlo['flops']:.3e} bytes={hlo['bytes']:.3e} "
+          f"(raw cost_analysis flops={cost.get('flops', 0):.3e})")
+
+    coll = hlo["collectives"]
+    rec["collectives"] = coll
+    terms = analysis.roofline_terms(rec["cost"], coll)
+    rec["roofline"] = terms
+
+    n_params = sum(
+        int(__import__("numpy").prod(l.shape))
+        for l in jax.tree.leaves(params_abs))
+    embed = int(__import__("numpy").prod(params_abs["embed"].shape))
+    routed = sum(
+        int(__import__("numpy").prod(l.shape))
+        for p, l in jax.tree_util.tree_flatten_with_path(params_abs)[0]
+        if any(str(getattr(k, "key", "")) in ("w_gate", "w_up", "w_down")
+               for k in p))
+    rec["n_params"] = n_params
+    rec["model_flops_global"] = analysis.model_flops(
+        cfg, n_params, shape_name, embed_params=embed,
+        routed_params=routed)
+    rec["model_flops_per_device"] = rec["model_flops_global"] / n_dev
+    rec["useful_flops_ratio"] = (
+        rec["model_flops_per_device"] / rec["cost"]["flops"]
+        if rec["cost"].get("flops") else None)
+    rec["dominant"] = analysis.dominant_term(terms)
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for r in json.load(f):
+                done[(r["arch"], r["shape"], r["mesh"])] = r
+    records = list(done.values())
+
+    archs = sorted(configs.ARCHS) if args.all else [args.arch]
+    shapes = list(configs.SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        cfg = configs.get_config(arch, "full")
+        for shape_name in shapes:
+            if not configs.runs_cell(cfg, shape_name):
+                print(f"SKIP {arch} x {shape_name}: needs sub-quadratic "
+                      "attention (documented in DESIGN.md §7)")
+                continue
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                key = (arch, shape_name, mesh_name)
+                if args.skip_done and key in done and \
+                        done[key].get("status") == "ok":
+                    print(f"skip done: {key}")
+                    continue
+                print(f"=== {arch} x {shape_name} @ {mesh_name} ===",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi)
+                except Exception as e:  # record, keep sweeping
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}"}
+                records = [r for r in records
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                records.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+
+    n_ok = sum(1 for r in records if r.get("status") == "ok")
+    print(f"\n{n_ok}/{len(records)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

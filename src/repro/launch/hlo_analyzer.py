@@ -1,0 +1,215 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, which
+under-counts scan-over-layers programs by ~num_layers x.  This analyzer
+walks the computation call graph, multiplying contributions by each while
+op's `known_trip_count`, and reports per-device:
+
+ - flops              — 2 * prod(out) * contracted for every dot;
+ - bytes              — operand + result bytes of memory-touching ops at
+                        fusion granularity (fusion/copy/dot/scatter/...);
+ - collectives        — {op: {count, bytes}} for all-reduce / all-gather /
+                        reduce-scatter / all-to-all / collective-permute
+                        (async -done halves skipped), trip-weighted.
+
+The parse is intentionally text-based (no private XLA APIs): shapes come
+from each computation's SSA symbol table.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s*"
+                     r"([\w\-]+)\(", re.M)
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+# memory-traffic ops at fusion granularity.  Standalone layout/elementwise
+# ops (convert/broadcast/select/pad/...) are EXCLUDED: the CPU backend
+# leaves them unfused but the TPU target fuses them, so counting them
+# would overstate HBM traffic ~5-20x.
+_MEM_OPS = {"fusion", "copy", "dot", "convolution", "scatter", "gather",
+            "dynamic-slice", "dynamic-update-slice", "sort", "reduce",
+            "custom-call"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+class _Comp:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll: Dict[str, Dict[str, float]] = {}
+        # (callee, multiplier)
+        self.calls: List[Tuple[str, float]] = []
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+                comps["__entry_name__"] = cur  # type: ignore
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _parse_comp(name: str, lines: List[str]) -> _Comp:
+    comp = _Comp(name)
+    # symbol table: %ssa_name -> type string
+    sym: Dict[str, str] = {}
+    for line in lines:
+        m = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\(", line)
+        if not m:
+            continue
+        ssa, type_str, op = m.groups()
+        sym[ssa] = type_str
+
+    for line in lines:
+        m = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\(", line)
+        if not m:
+            continue
+        ssa, type_str, op = m.groups()
+
+        # collectives (trip-weighted later); skip async completion halves
+        base = op
+        for c in _COLL:
+            if op.startswith(c):
+                base = c
+                break
+        if base in _COLL:
+            if op.endswith("-done"):
+                continue
+            rec = comp.coll.setdefault(base, {"count": 0, "bytes": 0.0})
+            rec["count"] += 1
+            rec["bytes"] += _type_bytes(type_str)
+            continue
+
+        # call graph edges
+        if op == "while":
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            trip = re.search(r'known_trip_count[^\d]*(\d+)', line)
+            n = float(trip.group(1)) if trip else 1.0
+            if body:
+                comp.calls.append((body.group(1), n))
+            cond = re.search(r"condition=%?([\w.\-]+)", line)
+            if cond:
+                comp.calls.append((cond.group(1), n))
+            continue
+        if op == "conditional":
+            for br in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                 r"true_computation=%?([\w.\-]+)|"
+                                 r"false_computation=%?([\w.\-]+))", line):
+                for grp in br:
+                    if not grp:
+                        continue
+                    for callee in re.findall(r"%?([\w.\-]+)", grp):
+                        comp.calls.append((callee, 1.0))
+            continue
+        called = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+        if called and op in ("call", "fusion", "custom-call", "map",
+                             "reduce", "reduce-window", "scatter", "sort",
+                             "all-reduce"):
+            # descend for flops/collectives; fusion bytes counted here
+            comp.calls.append((called.group(1), 1.0))
+
+        # dot flops: 2 * prod(out) * contracted-dims product
+        if op == "dot":
+            out_elems = _type_elems(type_str)
+            lhs = re.search(r"\(%([\w.\-]+)", line)
+            cdim = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            k = 1
+            if lhs and cdim and lhs.group(1) in sym:
+                dims_m = _SHAPE_RE.search(sym[lhs.group(1)])
+                if dims_m:
+                    dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                    for ci in cdim.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            comp.flops += 2.0 * out_elems * k
+
+        # memory traffic at fusion/op granularity
+        if op in _MEM_OPS:
+            b = _type_bytes(type_str)
+            for operand in re.findall(r"%([\w.\-]+)", line.split("(", 1)[1]):
+                if operand in sym:
+                    b += _type_bytes(sym[operand])
+            comp.bytes += b
+    return comp
+
+
+def analyze(text: str) -> Dict:
+    raw = _split_computations(text)
+    entry_name = raw.pop("__entry_name__", None)  # type: ignore
+    raw.pop("__entry__", None)
+    comps = {name: _parse_comp(name, lines) for name, lines in raw.items()}
+    if entry_name is None:   # fallback: last computation is entry
+        entry_name = list(comps)[-1]
+
+    memo: Dict[str, Dict] = {}
+
+    def walk(name: str, depth: int = 0) -> Dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return {"flops": 0.0, "bytes": 0.0, "coll": {}}
+        c = comps[name]
+        out = {"flops": c.flops, "bytes": c.bytes,
+               "coll": {k: dict(v) for k, v in c.coll.items()}}
+        for callee, mult in c.calls:
+            sub = walk(callee, depth + 1)
+            out["flops"] += mult * sub["flops"]
+            out["bytes"] += mult * sub["bytes"]
+            for k, v in sub["coll"].items():
+                rec = out["coll"].setdefault(k, {"count": 0, "bytes": 0.0})
+                rec["count"] += mult * v["count"]
+                rec["bytes"] += mult * v["bytes"]
+        memo[name] = out
+        return out
+
+    result = walk(entry_name)
+    return {"flops": result["flops"], "bytes": result["bytes"],
+            "collectives": result["coll"]}

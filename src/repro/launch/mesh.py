@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets the host-device-count flag
+before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 chips per pod; the multi-pod mesh adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(jax.devices())} "
+            "(the dry-run entrypoint sets "
+            "--xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for CPU distribution tests (requires >= prod(shape)
+    host devices, set via XLA_FLAGS in the test)."""
+    need = 1
+    for s in shape:
+        need *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:need],
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(axes))

@@ -1,0 +1,103 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+        --preset smoke --steps 100 [--mesh-devices 8] [--ckpt-dir DIR]
+
+On the production cluster this process runs per host with jax.distributed
+initialization; here it drives the same train step (optionally over a
+fake-device mesh) with the full substrate: sharded params/optimizer,
+deterministic resumable data pipeline, atomic checkpoints, restart policy.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="fake host devices for a (data,model) mesh; 0=off")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    if args.mesh_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.mesh_devices}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.data.synth import token_pipeline
+    from repro.ft import RestartPolicy, run_with_restarts
+    from repro.launch import steps as step_lib
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.sharding import (data_sharding, param_spec,
+                                       tree_shardings)
+    from repro.models import transformer as T
+    from repro.optim import adamw_init
+
+    cfg = configs.get_config(args.arch, args.preset)
+    step = step_lib.make_train_step(cfg, peak_lr=args.lr,
+                                    warmup=max(args.steps // 10, 1),
+                                    total=args.steps)
+
+    mesh = None
+    if args.mesh_devices:
+        model_ax = 2 if args.mesh_devices % 2 == 0 else 1
+        mesh = make_test_mesh((args.mesh_devices // model_ax, model_ax),
+                              ("data", "model"))
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    def init_state():
+        params = T.init_params(cfg, jax.random.key(0))
+        return {"params": params, "opt": adamw_init(params)}
+
+    if mesh is not None:
+        proto = jax.eval_shape(init_state)
+        sh = {"params": tree_shardings(mesh, proto["params"], param_spec),
+              "opt": tree_shardings(mesh, proto["opt"], param_spec)}
+        b_sh = {"tokens": data_sharding(mesh, 2, args.batch),
+                "labels": data_sharding(mesh, 2, args.batch)}
+        jitted = jax.jit(step,
+                         in_shardings=(sh["params"], sh["opt"], b_sh),
+                         out_shardings=(sh["params"], sh["opt"], None))
+    else:
+        jitted = jax.jit(step)
+
+    def step_fn(state, t):
+        tokens, labels = next(token_pipeline(args.batch, args.seq,
+                                             cfg.vocab_size, seed=1,
+                                             start_step=t))
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        ctx = jax.sharding.set_mesh(mesh) if mesh is not None else None
+        if ctx:
+            with ctx:
+                params, opt, m = jitted(state["params"], state["opt"], batch)
+        else:
+            params, opt, m = jitted(state["params"], state["opt"], batch)
+        if t % 10 == 0:
+            print(f"step {t:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e}", flush=True)
+        return {"params": params, "opt": opt}
+
+    out = run_with_restarts(
+        policy=RestartPolicy(ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every),
+        init_state=init_state, step_fn=step_fn, num_steps=args.steps,
+        meta_fn=lambda t: {"data_cursor": t})
+    print(f"finished {args.steps} steps; restarts={out['restarts']} "
+          f"stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

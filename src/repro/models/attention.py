@@ -1,0 +1,326 @@
+"""Attention variants: GQA/MHA (+ qk-norm, partial rotary, sliding window)
+and MLA (DeepSeek multi-head latent attention), each with a training path
+(full-sequence, chunked/flash-style) and a decode path (single new token
+against a KV cache).
+
+Decode caches:
+ - GQA: {k, v: [B, C, KV, hd], pos: [B, C] int32} — C = min(window, S_max)
+   (sliding-window archs keep only a rolling window of slots).
+ - MLA: {ckv: [B, C, kv_lora], krope: [B, C, rope], pos} — the compressed
+   latent is cached, attention is evaluated in "absorbed" form, which is
+   the memory/bandwidth point of MLA.
+
+KV caches are annotated for *sequence-parallel* sharding over the model
+axis (split-KV decode): each model shard holds a slice of the context and
+softmax statistics reduce across shards — this is what makes 32k-500k
+contexts fit per chip (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.partition import constrain, model_axis_size
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# shared scaled-dot-product cores
+# ---------------------------------------------------------------------------
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     *, window: Optional[int] = None,
+                     chunk_q: int = 1024) -> jax.Array:
+    """Grouped-query causal attention, memory-bounded via query chunking.
+
+    q [B,S,H,dk], k [B,S,KV,dk], v [B,S,KV,dv] -> [B,S,H,dv].
+    Scores for a chunk are [B,KV,G,cq,S] — never the full S x S square, so
+    32k-token prefill stays within HBM per layer (flash-style blocking; the
+    Pallas kernel target shares this schedule).
+    """
+    b, s, h, dk = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    qg = q.reshape(b, s, kv, g, dk)
+
+    def block(q_blk, off):
+        # q_blk [B,cq,KV,G,dk]; full-k scores [B,KV,G,cq,S]
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        qpos = off + jnp.arange(q_blk.shape[1])
+        kpos = jnp.arange(s)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    if s <= chunk_q:
+        out = block(qg, 0)
+    else:
+        assert s % chunk_q == 0
+        nchunks = s // chunk_q
+        qs = qg.reshape(b, nchunks, chunk_q, kv, g, dk)
+
+        def body(carry, inp):
+            i, q_blk = inp
+            return carry, block(q_blk, i * chunk_q)
+
+        _, outs = jax.lax.scan(body, None,
+                               (jnp.arange(nchunks), qs.swapaxes(0, 1)))
+        out = outs.swapaxes(0, 1).reshape(b, nchunks * chunk_q, kv, g, dk
+                                          if dv == dk else dv)
+    return out.reshape(b, s, h, dv)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+
+    q [B,1,H,dk], k_cache [B,C,KV,dk], v_cache [B,C,KV,dv],
+    valid bool[B,C] -> [B,1,H,dv].
+    """
+    b, _, h, dk = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dk)
+    qg = q.reshape(b, kv, g, dk)
+    scores = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MHA / SWA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, h, hd), 0, cfg.param_dtype),
+        "wk": layers.dense_init(ks[1], (d, kv, hd), 0, cfg.param_dtype),
+        "wv": layers.dense_init(ks[2], (d, kv, hd), 0, cfg.param_dtype),
+        "wo": layers.dense_init(ks[3], (h, hd, d), (0, 1), cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.param_dtype)
+    return p
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, dtype) -> Dict[str, Any]:
+    c = min(max_len, cfg.window) if cfg.window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, c, kv, hd), dtype),
+        "v": jnp.zeros((batch, c, kv, hd), dtype),
+        "pos": jnp.full((batch, c), -1, jnp.int32),
+    }
+
+
+def gqa(params, cfg, x: jax.Array, positions: jax.Array,
+        cache: Optional[Dict[str, Any]] = None
+        ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """x [B,S,d].  Train/prefill when cache is None; else one-step decode
+    (S == 1) updating the rolling cache."""
+    rd = cfg.rotary_dim
+    q = jnp.einsum("bsd,dhx->bshx", x, params["wq"])
+    k = jnp.einsum("bsd,dkx->bskx", x, params["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", x, params["wv"])
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, rd, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, rd, cfg.rope_theta)
+    tp = model_axis_size()
+    heads_shardable = tp <= 1 or cfg.num_heads % tp == 0
+    if heads_shardable:
+        q = constrain(q, "batch", None, "model", None)
+    else:
+        # sequence-parallel attention: when the head count doesn't divide
+        # the model axis (qwen3-14b: 40, llava: 56), shard the q sequence
+        # over `model` and keep the (small) k/v replicated — full TP-speed
+        # compute without head-padding or the 100 GB/layer score
+        # all-reduces of a sharded-head_dim contraction
+        q = constrain(q, "batch", "model", None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+
+    if cache is None:
+        out = causal_attention(q, k, v, window=cfg.window,
+                               chunk_q=cfg.attn_chunk)
+        if not heads_shardable:
+            out = constrain(out, "batch", "model", None, None)
+    else:
+        slot_count = cache["k"].shape[1]
+        pos = positions[:, 0]                          # [B]
+        slot = (pos % slot_count).astype(jnp.int32)
+        bidx = jnp.arange(x.shape[0])
+        k_c = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_c = cache["v"].at[bidx, slot].set(v[:, 0])
+        pos_c = cache["pos"].at[bidx, slot].set(pos)
+        k_c = constrain(k_c, "batch", "model", None, None)
+        v_c = constrain(v_c, "batch", "model", None, None)
+        valid = (pos_c >= 0) & (pos_c <= pos[:, None])
+        if cfg.window:
+            valid &= pos_c > (pos[:, None] - cfg.window)
+        out = decode_attention(q, k_c, v_c, valid)
+        cache = {"k": k_c, "v": v_c, "pos": pos_c}
+
+    y = jnp.einsum("bshx,hxd->bsd", out, params["wo"])
+    return constrain(y, "batch", None, None), cache
+
+
+def gqa_prefill_cache(params, cfg, x, positions, dtype,
+                      max_len: Optional[int] = None) -> Dict[str, Any]:
+    """Build a decode cache from a prefill pass (keys/values for all S,
+    padded to max_len so subsequent decode steps have free slots)."""
+    k = jnp.einsum("bsd,dkx->bskx", x, params["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", x, params["wv"])
+    if cfg.qk_norm:
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    k = layers.apply_rope(k, positions, cfg.rotary_dim, cfg.rope_theta)
+    pos = jnp.broadcast_to(positions, x.shape[:2]).astype(jnp.int32)
+    s = x.shape[1]
+    c = min(max_len or s, cfg.window) if cfg.window else (max_len or s)
+    if c > s:
+        pad = c - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    elif c < s:      # sliding window: keep the last `c` positions
+        k, v, pos = k[:, -c:], v[:, -c:], pos[:, -c:]
+        # ring layout: physical slot = pos % c must hold that position
+        slot = pos[0] % c
+        inv = jnp.argsort(slot)
+        k, v, pos = k[:, inv], v[:, inv], pos[:, inv]
+    return {"k": k.astype(dtype), "v": v.astype(dtype), "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek V2/V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, \
+        cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": layers.dense_init(ks[0], (d, qr), 0, cfg.param_dtype),
+        "q_norm": jnp.ones((qr,), cfg.param_dtype),
+        "wq_b": layers.dense_init(ks[1], (qr, h, nope + rope), 0,
+                                  cfg.param_dtype),
+        "wkv_a": layers.dense_init(ks[2], (d, kvr + rope), 0,
+                                   cfg.param_dtype),
+        "kv_norm": jnp.ones((kvr,), cfg.param_dtype),
+        "w_uk": layers.dense_init(ks[3], (kvr, h, nope), 0, cfg.param_dtype),
+        "w_uv": layers.dense_init(ks[4], (kvr, h, vdim), 0, cfg.param_dtype),
+        "wo": layers.dense_init(ks[5], (h, vdim, d), (0, 1), cfg.param_dtype),
+    }
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype) -> Dict[str, Any]:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def _mla_q(params, cfg, x, positions):
+    cq = layers.rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhx->bshx", cq, params["wq_b"])
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = layers.apply_rope(q[..., cfg.qk_nope_head_dim:], positions,
+                               cfg.qk_rope_head_dim, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, cfg, x, positions):
+    ckv_full = x @ params["wkv_a"]
+    ckv = layers.rms_norm(ckv_full[..., : cfg.kv_lora_rank],
+                          params["kv_norm"], cfg.norm_eps)
+    krope = layers.apply_rope(
+        ckv_full[..., cfg.kv_lora_rank:][:, :, None, :], positions,
+        cfg.qk_rope_head_dim, cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def mla(params, cfg, x: jax.Array, positions: jax.Array,
+        cache: Optional[Dict[str, Any]] = None
+        ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+
+    if cache is None:
+        # training / prefill: expand K,V per head (compute-rich form)
+        ckv, krope = _mla_ckv(params, cfg, x, positions)
+        k_nope = jnp.einsum("bsr,rhx->bshx", ckv, params["w_uk"])
+        v = jnp.einsum("bsr,rhx->bshx", ckv, params["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      (*k_nope.shape[:3],
+                                       cfg.qk_rope_head_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = constrain(q, "batch", None, "model", None)
+        out = causal_attention(q, k, v, chunk_q=cfg.attn_chunk)
+        new_cache = None
+    else:
+        # decode: absorbed form against the compressed latent cache
+        ckv_t, krope_t = _mla_ckv(params, cfg, x, positions)
+        slot_count = cache["ckv"].shape[1]
+        pos = positions[:, 0]
+        slot = (pos % slot_count).astype(jnp.int32)
+        bidx = jnp.arange(b)
+        ckv_c = cache["ckv"].at[bidx, slot].set(ckv_t[:, 0])
+        kr_c = cache["krope"].at[bidx, slot].set(krope_t[:, 0])
+        pos_c = cache["pos"].at[bidx, slot].set(pos)
+        ckv_c = constrain(ckv_c, "batch", "model", None)
+        valid = (pos_c >= 0) & (pos_c <= pos[:, None])
+        scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        q_lat = jnp.einsum("bshx,rhx->bshr", q_nope, params["w_uk"])
+        scores = (jnp.einsum("bshr,bcr->bhc", q_lat.astype(jnp.float32),
+                             ckv_c.astype(jnp.float32))
+                  + jnp.einsum("bshx,bcx->bhc", q_rope.astype(jnp.float32),
+                               kr_c.astype(jnp.float32))) * scale
+        scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhc,bcr->bhr", p, ckv_c.astype(jnp.float32))
+        out = jnp.einsum("bhr,rhx->bhx", out_lat,
+                         params["w_uv"].astype(jnp.float32))
+        out = out[:, None].astype(x.dtype)
+        new_cache = {"ckv": ckv_c, "krope": kr_c, "pos": pos_c}
+
+    y = jnp.einsum("bshx,hxd->bsd", out, params["wo"])
+    return constrain(y, "batch", None, None), new_cache
+
+
+def mla_prefill_cache(params, cfg, x, positions, dtype,
+                      max_len: Optional[int] = None) -> Dict[str, Any]:
+    ckv, krope = _mla_ckv(params, cfg, x, positions)
+    pos = jnp.broadcast_to(positions, x.shape[:2]).astype(jnp.int32)
+    s = x.shape[1]
+    c = max_len or s
+    if c > s:
+        pad = c - s
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        krope = jnp.pad(krope, ((0, 0), (0, pad), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    return {"ckv": ckv.astype(dtype), "krope": krope.astype(dtype),
+            "pos": pos}

@@ -1,0 +1,93 @@
+"""Shared primitive layers: norms, rotary embeddings, losses, init."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-ish, standard for LMs)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else \
+        math.prod(shape[a] for a in in_axis)
+    std = 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(dt)
+
+
+def rope_freqs(head_dim: int, rotary_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotated subspace (partial rotary OK)."""
+    assert rotary_dim % 2 == 0 and rotary_dim <= head_dim
+    return 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32)
+                            / rotary_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, rotary_dim: int,
+               theta: float) -> jax.Array:
+    """x [..., S, H, head_dim]; positions [..., S] (broadcastable).
+
+    Rotates the first `rotary_dim` channels (partial rotary a la GPT-NeoX /
+    StableLM); the rest pass through.
+    """
+    head_dim = x.shape[-1]
+    if rotary_dim == 0:
+        return x
+    inv = rope_freqs(head_dim, rotary_dim, theta)            # [rd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rd/2]
+    cos = jnp.cos(ang)[..., None, :]                         # [..., S, 1, rd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    rot, rest = x[..., :rotary_dim], x[..., rotary_dim:]
+    r1, r2 = rot[..., : rotary_dim // 2], rot[..., rotary_dim // 2:]
+    out = jnp.concatenate(
+        [r1 * cos - r2 * sin, r2 * cos + r1 * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, rest], axis=-1)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       z_loss: float = 1e-4) -> jax.Array:
+    """Mean next-token CE with z-loss stabilizer.
+
+    Labels < 0 are ignored (e.g. image-prefix positions).  The true-logit
+    pick uses a one-hot einsum rather than take_along_axis so that a
+    vocab-sharded logits tensor reduces with partial-sums + all-reduce
+    instead of a cross-shard gather.
+    """
+    from repro.models.partition import constrain
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0).astype(jnp.int32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    onehot = constrain(onehot, "batch", None, "model")
+    true_logit = jnp.einsum("...v,...v->...", logits, onehot)
+    ce = jnp.where(mask, lse - true_logit + z_loss * lse ** 2, 0.0)
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1)

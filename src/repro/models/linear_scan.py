@@ -1,0 +1,153 @@
+"""Chunked linear-attention recurrence shared by Mamba2 (SSD) and RWKV6.
+
+State recurrence (per batch b, head h), state S in R^{dk x dv}:
+
+    S_t = diag(a_t) S_{t-1} + k_t (x) v_t
+    Mamba2 read:  o_t = q_t . S_t                       (current kv included)
+    RWKV6 read:   o_t = q_t . (S_{t-1} + (u (x) k_t) v_t)   (bonus diagonal)
+
+with decay a_t in (0,1]^dk — scalar-per-head for Mamba2 (broadcast over
+dk), full per-channel vector for RWKV6 (data-dependent w_t).
+
+The chunked form computes within-chunk interactions as masked matmuls
+(MXU-friendly) and carries the state across chunks with a scan — the
+standard SSD/GLA block decomposition.  The pairwise weight between query i
+and key j is exp(cum_i - cum_j) (cum = within-chunk cumsum of log a),
+realized as the product of a q-side factor exp(cum_i) (<= 1, safe) and a
+k-side factor exp(-cum_j) (clamped at CLAMP; error affects only ~e^-CLAMP
+contributions — the GLA paper's secondary chunking addresses the same
+issue).  The RWKV read convention is folded in by shifting the q-side
+exponent by -log a_i and masking strictly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CLAMP = 30.0
+
+
+def chunked_linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             log_a: jax.Array, *, chunk: int = 64,
+                             bonus: Optional[jax.Array] = None,
+                             initial_state: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """q,k [B,T,H,dk], v [B,T,H,dv], log_a [B,T,H,dk] (<= 0).
+
+    bonus: optional [H, dk] current-token boost (RWKV's u) — switches the
+    read convention to RWKV's.  Returns (out [B,T,H,dv], state [B,H,dk,dv]).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    t_orig = t
+    pad = (-t) % chunk
+    if pad:
+        # end-padding with k=v=0, log_a=0 is inert: contributes nothing to
+        # outputs of real positions and leaves the carried state unchanged
+        zw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zw), jnp.pad(k, zw), jnp.pad(v, zw)
+        log_a = jnp.pad(log_a, zw)
+        t = t + pad
+    nc = t // chunk
+    f32 = jnp.float32
+
+    qc = q.reshape(b, nc, chunk, h, dk).astype(f32)
+    kc = k.reshape(b, nc, chunk, h, dk).astype(f32)
+    vc = v.reshape(b, nc, chunk, h, dv).astype(f32)
+    da = log_a.shape[-1]                 # dk, or 1 for scalar-per-head decay
+    la = log_a.reshape(b, nc, chunk, h, da).astype(f32)
+
+    scalar_decay = bool(log_a.shape[-1] == 1) and dk > 1
+    cum = jnp.cumsum(la, axis=2)                     # [B,nc,c,H,dk|1]
+    total = cum[:, :, -1]                            # [B,nc,H,dk|1]
+
+    # q-side exponent: cum_i (Mamba read) or cum_i - la_i (RWKV reads S_{t-1})
+    q_exp = cum if bonus is None else cum - la
+    idx = jnp.arange(chunk)
+    strict = bonus is not None
+    mask = (idx[:, None] > idx[None, :]) if strict else \
+        (idx[:, None] >= idx[None, :])
+
+    if scalar_decay:
+        # SSD "segsum" diagonal block: pairwise exponents directly —
+        # exact for arbitrarily fast decay (no clamp), scalar per head
+        cs_q = q_exp[..., 0]                         # [B,nc,c,H]
+        cs_k = cum[..., 0]
+        diff = cs_q.swapaxes(2, 3)[..., :, None] \
+            - cs_k.swapaxes(2, 3)[..., None, :]      # [B,nc,H,c,c]
+        w = jnp.exp(jnp.where(mask[None, None, None], diff, -jnp.inf))
+        dots = jnp.einsum("bnchd,bnmhd->bnhcm", qc, kc)
+        scores = dots * w
+        q_in = qc * jnp.exp(q_exp)                   # inter-chunk (safe: <=1)
+    else:
+        # factored form (vector decay, e.g. RWKV6 where |cum| stays small)
+        q_in = qc * jnp.exp(jnp.clip(q_exp, -CLAMP, 0.0))
+        k_in = kc * jnp.exp(jnp.clip(-cum, None, CLAMP))
+        scores = jnp.einsum("bnchd,bnmhd->bnhcm", q_in, k_in)
+        scores = jnp.where(mask[None, None, None], scores, 0.0)
+
+    # carry factor: prod_{l>j} a_l = exp(total - cum_j) <= 1
+    k_carry = kc * jnp.exp(total[:, :, None] - cum)
+    out = jnp.einsum("bnhcm,bnmhd->bnchd", scores, vc)
+
+    if bonus is not None:
+        diag = jnp.einsum("bnchd,hd,bnchd->bnch", qc, bonus.astype(f32), kc)
+        out = out + diag[..., None] * vc
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def body(s_prev, inp):
+        q_in_c, k_carry_c, v_c, tot_c = inp
+        inter = jnp.einsum("bchd,bhdv->bchv", q_in_c, s_prev)
+        s_new = s_prev * jnp.exp(tot_c)[..., None] + \
+            jnp.einsum("bchd,bchv->bhdv", k_carry_c, v_c)
+        return s_new, inter
+
+    xs = (q_in.swapaxes(0, 1), k_carry.swapaxes(0, 1), vc.swapaxes(0, 1),
+          total.swapaxes(0, 1))
+    s_final, inters = jax.lax.scan(body, s0, xs)
+    out = out + inters.swapaxes(0, 1)
+    out = out.reshape(b, t, h, dv)[:, :t_orig]
+    return out.astype(q.dtype), s_final
+
+
+def recurrent_step(state: jax.Array, q_t: jax.Array, k_t: jax.Array,
+                   v_t: jax.Array, log_a_t: jax.Array,
+                   bonus: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step.  state [B,H,dk,dv]; q/k/log_a [B,H,dk]; v [B,H,dv].
+
+    Returns (o_t [B,H,dv], new_state) using the matching read convention.
+    """
+    f32 = jnp.float32
+    st = state.astype(f32)
+    a = jnp.exp(log_a_t.astype(f32))[..., None]          # [B,H,dk,1]
+    kv = k_t.astype(f32)[..., None] * v_t.astype(f32)[..., None, :]
+    new_state = st * a + kv
+    if bonus is None:                                    # Mamba read
+        o = jnp.einsum("bhd,bhdv->bhv", q_t.astype(f32), new_state)
+    else:                                                # RWKV read
+        ukv = (bonus.astype(f32) * k_t.astype(f32))[..., None] \
+            * v_t.astype(f32)[..., None, :]
+        o = jnp.einsum("bhd,bhdv->bhv", q_t.astype(f32), st + ukv)
+    return o.astype(q_t.dtype), new_state
+
+
+def reference_scan(q, k, v, log_a, bonus=None, initial_state=None):
+    """O(T) sequential oracle for property tests (same conventions)."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    s = jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None \
+        else initial_state.astype(jnp.float32)
+    outs = []
+    for i in range(t):
+        o, s = recurrent_step(s, q[:, i], k[:, i], v[:, i], log_a[:, i],
+                              bonus)
+        outs.append(o)
+    return jnp.stack(outs, axis=1).astype(q.dtype), s

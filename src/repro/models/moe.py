@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN with capacity-based sorted dispatch + EP sharding.
+
+DeepSeek-style MoE: `num_shared` always-on shared experts plus
+`num_experts` routed experts with top-k gating (softmax for V2, sigmoid
+scores with normalized top-k for V3).
+
+Dispatch is sort-based (MegaBlocks/MaxText style): (token, choice) pairs
+are sorted by expert id, each expert takes up to C = ceil(T*k/E * cf)
+tokens, the rest are dropped (capacity overflow — standard for static
+shapes).  The [E, C, d] buffer is the tensor expert parallelism shards
+over the `model` axis; token->buffer scatter and buffer->token gather are
+where GSPMD inserts the all-to-all-equivalent collectives.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.partition import constrain
+
+
+def init_moe(key, cfg) -> Dict[str, Any]:
+    m = cfg.moe
+    d, dff = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": layers.dense_init(ks[0], (d, m.num_experts), 0,
+                                    jnp.float32),
+        "w_gate": layers.dense_init(ks[1], (m.num_experts, d, dff), 1,
+                                    cfg.param_dtype),
+        "w_up": layers.dense_init(ks[2], (m.num_experts, d, dff), 1,
+                                  cfg.param_dtype),
+        "w_down": layers.dense_init(ks[3], (m.num_experts, dff, d), 1,
+                                    cfg.param_dtype),
+    }
+    if m.num_shared:
+        sh = m.num_shared * dff
+        p["shared_gate"] = layers.dense_init(ks[4], (d, sh), 0,
+                                             cfg.param_dtype)
+        p["shared_up"] = layers.dense_init(ks[5], (d, sh), 0,
+                                           cfg.param_dtype)
+        p["shared_down"] = layers.dense_init(ks[6], (sh, d), 0,
+                                             cfg.param_dtype)
+    return p
+
+
+def _route(params, m, x_flat):
+    """Returns (weights [T,k], experts int32 [T,k], aux_loss)."""
+    logits = (x_flat.astype(jnp.float32) @ params["router"])
+    if m.router_score == "sigmoid":          # DeepSeek-V3
+        scores = jax.nn.sigmoid(logits)
+    else:                                    # softmax (V2 and classic)
+        scores = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(scores, m.top_k)
+    if m.norm_topk:
+        weights = weights / jnp.maximum(
+            jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    counts = jnp.zeros((m.num_experts,), jnp.float32).at[
+        experts.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    p_mean = probs.mean(axis=0)
+    aux = m.num_experts * jnp.sum(f * p_mean)
+    return weights.astype(x_flat.dtype), experts.astype(jnp.int32), aux
+
+
+def moe_ffn(params, cfg, x: jax.Array):
+    """x [B,S,d] -> ([B,S,d], aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    x_flat = x.reshape(t, d)
+    weights, experts, aux = _route(params, m, x_flat)
+    k = m.top_k
+    e = m.num_experts
+    cap = max(1, int(math.ceil(t * k / e * m.capacity_factor)))
+
+    # ---- sorted capacity dispatch -------------------------------------------
+    flat_e = experts.reshape(-1)                         # [T*k]
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    # position of each entry within its expert group
+    group_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(t * k, dtype=jnp.int32) - group_start
+    keep = pos < cap
+    # overflow entries scatter-add a zero into slot 0 (masked values), so
+    # no spare slot is needed — keeping the buffer shape cleanly
+    # reshape-able lets GSPMD shard the scatter instead of replicating it
+    dest = jnp.where(keep, sorted_e * cap + pos, 0)
+    token_of = (sort_idx // k).astype(jnp.int32)
+    vals = jnp.where(keep[:, None], x_flat[token_of],
+                     jnp.zeros((), x_flat.dtype))
+    # the dispatched-activation tensor is [T*k, d] — by far the largest
+    # intermediate; shard its row dim or it replicates per device
+    vals = constrain(vals, "batch", None)
+
+    # two-phase dispatch: scatter into a row-sharded buffer first (the
+    # scatter stays aligned with `vals`' sharding), THEN reshard to the
+    # expert-parallel layout — one explicit all-to-all-shaped move instead
+    # of GSPMD all-reducing the full [E, C, d] buffer per layer
+    buf = jnp.zeros((e * cap, d), x.dtype).at[dest].add(vals)
+    buf = constrain(buf, "batch", None)
+    buf = constrain(buf.reshape(e, cap, d), "model", "batch", None)
+
+    # ---- expert FFN (grouped matmul over the expert-sharded buffer) ---------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_buf = constrain(out_buf, "model", "batch", None)
+
+    # ---- combine -------------------------------------------------------------
+    out_flat = out_buf.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], out_flat[dest],
+                         jnp.zeros((), out_flat.dtype))
+    gathered = constrain(gathered, "batch", None)
+    w_sorted = weights.reshape(-1)[sort_idx][:, None]
+    y = jnp.zeros((t, d), x.dtype).at[token_of].add(gathered * w_sorted)
+
+    # ---- shared experts (always-on dense path) -------------------------------
+    if m.num_shared:
+        y = y + layers.swiglu(x_flat, params["shared_gate"],
+                              params["shared_up"], params["shared_down"])
+    return constrain(y.reshape(b, s, d), "batch", None, None), aux

@@ -1,0 +1,144 @@
+"""RWKV6 ("Finch") blocks: data-dependent-decay time mix + channel mix.
+
+Time mix: token shift with data-dependent lerp (the low-rank ddlerp),
+receptance/key/value/gate projections, per-channel decay
+w_t = exp(-exp(w0 + lora_w(x~_t))) and the bonus `u` for the current
+token; the WKV recurrence runs through the shared chunked linear scan.
+
+Channel mix: token shift + squared-ReLU MLP gated by receptance.
+
+Decode state per layer: {"shift_att": [B,d], "shift_ffn": [B,d],
+"wkv": [B,H,hd,hd]}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.linear_scan import chunked_linear_attention, recurrent_step
+from repro.models.partition import constrain
+
+LORA_R = 32
+
+
+def _heads(cfg):
+    hd = cfg.ssm.head_dim if cfg.ssm else 64
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_time_mix(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    n_heads, hd = _heads(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # ddlerp base mixes (5 interpolation targets: w,k,v,r,g)
+        "mix_base": 0.5 * jnp.ones((5, d), cfg.param_dtype),
+        "mix_lora_a": layers.dense_init(ks[0], (d, LORA_R), 0,
+                                        cfg.param_dtype),
+        "mix_lora_b": layers.dense_init(ks[1], (5, LORA_R, d), 1,
+                                        cfg.param_dtype),
+        "wr": layers.dense_init(ks[2], (d, d), 0, cfg.param_dtype),
+        "wk": layers.dense_init(ks[3], (d, d), 0, cfg.param_dtype),
+        "wv": layers.dense_init(ks[4], (d, d), 0, cfg.param_dtype),
+        "wg": layers.dense_init(ks[5], (d, d), 0, cfg.param_dtype),
+        "wo": layers.dense_init(ks[6], (d, d), 0, cfg.param_dtype),
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),   # decay bias (slow)
+        "w_lora_a": layers.dense_init(ks[7], (d, LORA_R), 0,
+                                      cfg.param_dtype),
+        "w_lora_b": layers.dense_init(ks[8], (LORA_R, d), 0,
+                                      cfg.param_dtype),
+        "u": layers.dense_init(ks[9], (n_heads, hd), 1, jnp.float32),
+        "ln_x": jnp.ones((d,), cfg.param_dtype),
+    }
+    return p
+
+
+def init_rwkv_channel_mix(key, cfg) -> Dict[str, Any]:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": 0.5 * jnp.ones((d,), cfg.param_dtype),
+        "mix_r": 0.5 * jnp.ones((d,), cfg.param_dtype),
+        "wk": layers.dense_init(ks[0], (d, dff), 0, cfg.param_dtype),
+        "wv": layers.dense_init(ks[1], (dff, d), 0, cfg.param_dtype),
+        "wr": layers.dense_init(ks[2], (d, d), 0, cfg.param_dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """Shifted sequence (previous token), and the new carry (last token)."""
+    if prev is None:
+        prev_tok = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev_tok = jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+    return prev_tok, x[:, -1, :]
+
+
+def rwkv_time_mix(params, cfg, x: jax.Array,
+                  state: Optional[Dict[str, Any]] = None
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """x [B,S,d]; decode when state is not None (S == 1)."""
+    b, s, d = x.shape
+    n_heads, hd = _heads(cfg)
+    prev = state["shift_att"] if state is not None else None
+    x_prev, carry = _token_shift(x, prev)
+    dx = x_prev - x
+
+    # ddlerp: shared low-rank modulation of the 5 mix coefficients
+    base = x + dx * params["mix_base"][0]
+    mod = jnp.tanh(base @ params["mix_lora_a"])           # [B,S,R]
+    mixes = params["mix_base"][:, None, None, :] + jnp.einsum(
+        "bsr,mrd->mbsd", mod, params["mix_lora_b"])       # [5,B,S,d]
+    xw, xk, xv, xr, xg = (x + dx * mixes[i] for i in range(5))
+
+    r = (xr @ params["wr"]).reshape(b, s, n_heads, hd)
+    k = (xk @ params["wk"]).reshape(b, s, n_heads, hd)
+    v = (xv @ params["wv"]).reshape(b, s, n_heads, hd)
+    g = jax.nn.silu(xg @ params["wg"])
+
+    w_raw = params["w0"] + jnp.tanh(xw @ params["w_lora_a"]) \
+        @ params["w_lora_b"]
+    log_w = -jnp.exp(w_raw.astype(jnp.float32))           # <= 0
+    log_w = log_w.reshape(b, s, n_heads, hd)
+
+    if state is None:
+        chunk = min(cfg.scan_chunk, s)
+        y, wkv = chunked_linear_attention(r, k, v, log_w, chunk=chunk,
+                                          bonus=params["u"])
+    else:
+        o, wkv = recurrent_step(state["wkv"], r[:, 0], k[:, 0], v[:, 0],
+                                log_w[:, 0], bonus=params["u"])
+        y = o[:, None]
+    # final state is returned in both modes (prefill needs it)
+    new_state = {"wkv": wkv, "shift_att": carry}
+
+    y = y.reshape(b, s, d)
+    y = layers.rms_norm(y, params["ln_x"], cfg.norm_eps) * g
+    out = y @ params["wo"]
+    return constrain(out, "batch", None, None), new_state
+
+
+def rwkv_channel_mix(params, cfg, x: jax.Array,
+                     state: Optional[Dict[str, Any]] = None
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    prev = state["shift_ffn"] if state is not None else None
+    x_prev, carry = _token_shift(x, prev)
+    dx = x_prev - x
+    xk = x + dx * params["mix_k"]
+    xr = x + dx * params["mix_r"]
+    h = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    out = jax.nn.sigmoid(xr @ params["wr"]) * (h @ params["wv"])
+    return constrain(out, "batch", None, None), carry
+
+
+def rwkv_state_init(cfg, batch: int, dtype) -> Dict[str, Any]:
+    n_heads, hd = _heads(cfg)
+    return {
+        "shift_att": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_ffn": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,132 @@
+"""Mamba2 block (SSD form) — used by zamba2's backbone.
+
+Structure follows the Mamba2 paper: fused input projection producing
+(z | xBC | dt), short causal conv over xBC, scalar-per-head decay
+A exp(dt), SSD recurrence via the shared chunked linear scan, gated
+RMSNorm and output projection.
+
+Decode state: {"conv": [B, K-1, d_conv_ch], "ssd": [B, H, d_state, hd]}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.linear_scan import chunked_linear_attention, recurrent_step
+from repro.models.partition import constrain
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.d_state      # xBC gets convolved jointly
+    return d_inner, n_heads, conv_ch
+
+
+def init_mamba2(key, cfg) -> Dict[str, Any]:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.dense_init(
+            ks[0], (d, d_inner + conv_ch + n_heads), 0, cfg.param_dtype),
+        "conv_w": layers.dense_init(ks[1], (s.d_conv, conv_ch), 0,
+                                    cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)
+                         ).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), cfg.param_dtype),
+        "out_norm": jnp.ones((d_inner,), cfg.param_dtype),
+        "out_proj": layers.dense_init(ks[4], (d_inner, d), 0,
+                                      cfg.param_dtype),
+    }
+
+
+def _split(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv, width K.  xbc [B,S,C]; prev [B,K-1,C]."""
+    k = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(full[:, i:full.shape[1] - (k - 1 - i)] * w[i]
+              for i in range(k))
+    return jax.nn.silu(out + b), full[:, -(k - 1):]
+
+
+def mamba2(params, cfg, x: jax.Array,
+           state: Optional[Dict[str, Any]] = None,
+           ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """x [B,S,d].  Train when state is None; else S==1 decode step."""
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    b_sz = x.shape[0]
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split(cfg, zxbcdt)
+
+    conv_prev = state["conv"] if state is not None else None
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  conv_prev)
+    xs = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner:d_inner + s.d_state]          # [B,S,N]
+    cmat = xbc[..., d_inner + s.d_state:]                 # [B,S,N]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])             # [B,S,H]
+    a = -jnp.exp(params["a_log"])                         # [H] (negative)
+    log_decay = (dt * a)[..., None]                       # [B,S,H,1] <= 0
+
+    # SSD as linear attention: q=C, k=B (shared across heads), v=dt*x
+    seq = x.shape[1]
+    q = jnp.broadcast_to(cmat[:, :, None, :],
+                         (b_sz, seq, n_heads, s.d_state))
+    kk = jnp.broadcast_to(bmat[:, :, None, :],
+                          (b_sz, seq, n_heads, s.d_state))
+    v = xs.reshape(b_sz, seq, n_heads, s.head_dim) * dt[..., None]
+    log_a = log_decay                        # [B,S,H,1] — scalar per head
+
+    if state is None:
+        chunk = min(cfg.scan_chunk, seq)
+        y, ssd = chunked_linear_attention(q, kk, v.astype(jnp.float32),
+                                          log_a, chunk=chunk)
+    else:
+        o, ssd = recurrent_step(state["ssd"], q[:, 0], kk[:, 0],
+                                v[:, 0].astype(jnp.float32), log_a[:, 0])
+        y = o[:, None]
+    # final state is returned in both modes (prefill needs it)
+    new_state = {"conv": conv_tail.astype(x.dtype), "ssd": ssd}
+
+    y = y.astype(x.dtype).reshape(b_sz, seq, d_inner) \
+        + xs * jnp.repeat(params["d_skip"], s.head_dim)[None, None, :]
+    y = layers.rms_norm(y * jax.nn.silu(z), params["out_norm"],
+                        cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return constrain(out, "batch", None, None), new_state
+
+
+def mamba2_state_init(cfg, batch: int, dtype) -> Dict[str, Any]:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((batch, n_heads, s.d_state, s.head_dim),
+                         jnp.float32),
+    }

@@ -1,0 +1,545 @@
+"""Composable decoder stack driving all 10 assigned architectures.
+
+A ModelConfig describes the block pattern:
+ - "uniform": [attention + FFN] x L, with a dense prefix and an MoE tail
+   when cfg.moe is set (DeepSeek layouts);
+ - "zamba":   Mamba2 backbone with one *shared* attention+FFN block applied
+   every `shared_attn_every` layers (Zamba2);
+ - "rwkv":    [time-mix + channel-mix] x L (RWKV6).
+
+Layers of each group are stacked on a leading axis and driven by
+`jax.lax.scan` (small HLO even at 61-81 layers), with optional per-layer
+remat.  Three entry points per model:
+ - `forward`    — full-sequence training pass -> logits (+ MoE aux loss)
+ - `prefill`    — forward + decode-cache construction
+ - `decode_step`— one token against the cache/state (serve_step)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers, moe as moe_mod, rwkv as rwkv_mod, ssm
+from repro.models.partition import constrain, gather_fsdp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    num_shared: int = 0
+    d_ff_expert: int = 0
+    first_dense: int = 0            # leading dense-FFN layers
+    capacity_factor: float = 1.25
+    router_score: str = "softmax"   # "softmax" (V2) | "sigmoid" (V3)
+    norm_topk: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense|moe|hybrid|ssm|audio|vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim_override: Optional[int] = None
+    attention: str = "gqa"          # gqa | mla
+    window: Optional[int] = None    # sliding-window width
+    qk_norm: bool = False
+    rotary_pct: float = 1.0
+    rope_theta: float = 1e4
+    # MLA
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # sub-structures
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    block_pattern: str = "uniform"  # uniform | zamba | rwkv
+    shared_attn_every: int = 6
+    # modality stubs
+    num_img_tokens: int = 0         # vlm: precomputed patch-embedding prefix
+    # numerics / impl
+    norm_eps: float = 1e-6
+    param_dtype: Any = jnp.float32
+    act_dtype: Any = jnp.float32
+    scan_chunk: int = 64
+    attn_chunk: int = 1024
+    remat: bool = True
+    tie_embeddings: bool = False
+    mtp: bool = False               # DeepSeek-V3 multi-token prediction
+    mtp_weight: float = 0.3
+    aux_loss_weight: float = 0.001
+
+    @property
+    def head_dim(self) -> int:
+        return self.head_dim_override or self.d_model // self.num_heads
+
+    @property
+    def rotary_dim(self) -> int:
+        rd = int(self.head_dim * self.rotary_pct)
+        return rd - rd % 2
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k+ contexts? (SSM/hybrid state or SWA)."""
+        return self.block_pattern in ("zamba", "rwkv") or \
+            self.window is not None
+
+
+# ---------------------------------------------------------------------------
+# block definitions
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelConfig, use_moe: bool) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                         "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    p["attn"] = attn_mod.init_mla(k1, cfg) if cfg.attention == "mla" \
+        else attn_mod.init_gqa(k1, cfg)
+    if use_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["ffn"] = {
+            "gate": layers.dense_init(k2, (cfg.d_model, cfg.d_ff), 0,
+                                      cfg.param_dtype),
+            "up": layers.dense_init(k3, (cfg.d_model, cfg.d_ff), 0,
+                                    cfg.param_dtype),
+            "down": layers.dense_init(
+                jax.random.fold_in(k3, 1), (cfg.d_ff, cfg.d_model), 0,
+                cfg.param_dtype),
+        }
+    return p
+
+
+def _attn_block(p, cfg: ModelConfig, x, positions, cache, use_moe: bool):
+    if cache is None:           # train/prefill: FSDP gather-at-use
+        p = gather_fsdp(p)
+    attn_fn = attn_mod.mla if cfg.attention == "mla" else attn_mod.gqa
+    h, new_cache = attn_fn(p["attn"], cfg,
+                           layers.rms_norm(x, p["ln1"], cfg.norm_eps),
+                           positions, cache)
+    x = x + h
+    hn = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        f, aux = moe_mod.moe_ffn(p["moe"], cfg, hn)
+    else:
+        f = layers.swiglu(hn, p["ffn"]["gate"], p["ffn"]["up"],
+                          p["ffn"]["down"])
+        aux = jnp.zeros((), jnp.float32)
+    return x + f, new_cache, aux
+
+
+def _init_mamba_block(key, cfg) -> Dict[str, Any]:
+    return {"ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "mix": ssm.init_mamba2(key, cfg)}
+
+
+def _mamba_block(p, cfg, x, state):
+    if state is None:
+        p = gather_fsdp(p)
+    h, new_state = ssm.mamba2(p["mix"], cfg,
+                              layers.rms_norm(x, p["ln"], cfg.norm_eps),
+                              state)
+    return x + h, new_state, jnp.zeros((), jnp.float32)
+
+
+def _init_rwkv_block(key, cfg) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "att": rwkv_mod.init_rwkv_time_mix(k1, cfg),
+            "ffn": rwkv_mod.init_rwkv_channel_mix(k2, cfg)}
+
+
+def _rwkv_block(p, cfg, x, state):
+    if state is None:
+        p = gather_fsdp(p)
+    h, new_att = rwkv_mod.rwkv_time_mix(
+        p["att"], cfg, layers.rms_norm(x, p["ln1"], cfg.norm_eps), state)
+    x = x + h
+    f, carry_ffn = rwkv_mod.rwkv_channel_mix(
+        p["ffn"], cfg, layers.rms_norm(x, p["ln2"], cfg.norm_eps), state)
+    new_state = {**new_att, "shift_ffn": carry_ffn}
+    return x + f, new_state, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# group layout
+# ---------------------------------------------------------------------------
+
+def _groups(cfg: ModelConfig):
+    """[(group_name, kind, n_layers)] driving init/forward/decode."""
+    if cfg.block_pattern == "uniform":
+        if cfg.moe and cfg.moe.first_dense < cfg.num_layers:
+            g = []
+            if cfg.moe.first_dense:
+                g.append(("dense", "attn_dense", cfg.moe.first_dense))
+            g.append(("moe", "attn_moe",
+                      cfg.num_layers - cfg.moe.first_dense))
+            return g
+        return [("layers", "attn_dense", cfg.num_layers)]
+    if cfg.block_pattern == "zamba":
+        return [("mamba", "mamba", cfg.num_layers)]
+    if cfg.block_pattern == "rwkv":
+        return [("layers", "rwkv", cfg.num_layers)]
+    raise ValueError(cfg.block_pattern)
+
+
+_INIT = {"attn_dense": lambda k, c: _init_attn_block(k, c, False),
+         "attn_moe": lambda k, c: _init_attn_block(k, c, True),
+         "mamba": _init_mamba_block,
+         "rwkv": _init_rwkv_block}
+
+_APPLY = {"attn_dense": lambda p, c, x, pos, st: _attn_block(p, c, x, pos,
+                                                             st, False),
+          "attn_moe": lambda p, c, x, pos, st: _attn_block(p, c, x, pos, st,
+                                                           True),
+          "mamba": lambda p, c, x, pos, st: _mamba_block(p, c, x, st),
+          "rwkv": lambda p, c, x, pos, st: _rwkv_block(p, c, x, st)}
+
+
+def _n_shared_apps(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.shared_attn_every \
+        if cfg.block_pattern == "zamba" else 0
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": layers.dense_init(keys[0],
+                                   (cfg.vocab_size, cfg.d_model), 1,
+                                   cfg.param_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), 0, cfg.param_dtype)
+    for gi, (name, kind, count) in enumerate(_groups(cfg)):
+        gkeys = jax.random.split(jax.random.fold_in(keys[2], gi), count)
+        params[name] = jax.vmap(
+            lambda k: _INIT[kind](k, cfg))(gkeys)
+    if cfg.block_pattern == "zamba":
+        params["shared_attn"] = _init_attn_block(keys[3], cfg, False)
+    if cfg.mtp:
+        params["mtp"] = {
+            "norm_h": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "norm_e": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "proj": layers.dense_init(keys[4],
+                                      (2 * cfg.d_model, cfg.d_model), 0,
+                                      cfg.param_dtype),
+            "block": _init_attn_block(keys[5], cfg, False),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _scan_group(cfg, stacked, kind, x, positions, *, remat: bool):
+    fn = _APPLY[kind]
+    if remat:
+        fn = jax.checkpoint(fn, static_argnums=(1,))
+
+    def body(carry, p):
+        h, aux = carry
+        h, _, aux_d = fn(p, cfg, h, positions, None)
+        return (h, aux + aux_d), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stacked)
+    return x, aux
+
+
+def _zamba_segments(cfg: ModelConfig):
+    """[(start, end, apply_shared_after)] segments of the mamba stack."""
+    per = cfg.shared_attn_every
+    segs = []
+    s = 0
+    while s < cfg.num_layers:
+        e = min(s + per, cfg.num_layers)
+        segs.append((s, e, e - s == per))
+        s = e
+    return segs
+
+
+def _backbone(params, cfg: ModelConfig, x, positions, *, remat: bool):
+    """Runs all blocks (no caches); returns (hidden, aux_loss)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.block_pattern == "zamba":
+        stacked = params["mamba"]
+        for (s, e, shared_after) in _zamba_segments(cfg):
+            seg = jax.tree.map(lambda a: a[s:e], stacked)
+            x, aux = _scan_group(cfg, seg, "mamba", x, positions,
+                                 remat=remat)
+            aux_total += aux
+            if shared_after:
+                x, _, _ = _attn_block(params["shared_attn"], cfg, x,
+                                      positions, None, False)
+        return x, aux_total
+    for (name, kind, _) in _groups(cfg):
+        x, aux = _scan_group(cfg, params[name], kind, x, positions,
+                             remat=remat)
+        aux_total += aux
+    return x, aux_total
+
+
+def _embed_inputs(params, cfg, tokens, img_embeds):
+    x = params["embed"][tokens].astype(cfg.act_dtype)
+    if cfg.num_img_tokens and img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(cfg.act_dtype), x], axis=1)
+    return constrain(x, "batch", None, None)
+
+
+def _logits(params, cfg, x):
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return constrain(x @ head, "batch", None, "model")
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            img_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S(+img), V], moe aux loss)."""
+    x = _embed_inputs(params, cfg, tokens, img_embeds)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux = _backbone(params, cfg, x, positions, remat=cfg.remat)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels,
+            img_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token CE (+ MoE aux + MTP second-token head for DeepSeek-V3)."""
+    x = _embed_inputs(params, cfg, tokens, img_embeds)
+    positions = jnp.arange(x.shape[1])[None, :]
+    h, aux = _backbone(params, cfg, x, positions, remat=cfg.remat)
+    if cfg.num_img_tokens and img_embeds is not None:
+        pad = jnp.full(
+            (labels.shape[0], cfg.num_img_tokens), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    logits = _logits(params, cfg, h)
+    loss = layers.cross_entropy_loss(logits, labels)
+    if cfg.mtp:
+        # second-token head: combine hidden with next-token embedding
+        emb_next = jnp.roll(x, -1, axis=1)
+        m = params["mtp"]
+        comb = jnp.concatenate(
+            [layers.rms_norm(h, m["norm_h"], cfg.norm_eps),
+             layers.rms_norm(emb_next, m["norm_e"], cfg.norm_eps)],
+            axis=-1) @ m["proj"]
+        h2, _, _ = _attn_block(m["block"], cfg, comb, positions, None,
+                               False)
+        logits2 = _logits(params, cfg, h2)
+        labels2 = jnp.roll(labels, -1, axis=1).at[:, -1].set(-1)
+        loss = loss + cfg.mtp_weight * layers.cross_entropy_loss(
+            logits2, labels2)
+    if cfg.moe:
+        loss = loss + cfg.aux_loss_weight * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int
+                      ) -> Dict[str, Any]:
+    dt = cfg.act_dtype
+
+    def stack(n, make):
+        return jax.vmap(lambda _: make())(jnp.arange(n))
+
+    state: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.block_pattern == "zamba":
+        state["mamba"] = stack(
+            cfg.num_layers, lambda: ssm.mamba2_state_init(cfg, batch, dt))
+        n_app = _n_shared_apps(cfg)
+        if cfg.attention == "mla":
+            mk = lambda: attn_mod.mla_cache_init(cfg, batch, max_len, dt)
+        else:
+            mk = lambda: attn_mod.gqa_cache_init(cfg, batch, max_len, dt)
+        state["shared_attn"] = stack(n_app, mk)
+        return state
+    if cfg.block_pattern == "rwkv":
+        state["layers"] = stack(
+            cfg.num_layers, lambda: rwkv_mod.rwkv_state_init(cfg, batch, dt))
+        return state
+    for (name, kind, count) in _groups(cfg):
+        if cfg.attention == "mla":
+            mk = lambda: attn_mod.mla_cache_init(cfg, batch, max_len, dt)
+        else:
+            mk = lambda: attn_mod.gqa_cache_init(cfg, batch, max_len, dt)
+        state[name] = stack(count, mk)
+    return state
+
+
+def decode_step(params, cfg: ModelConfig, state: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens [B, 1] + state -> (logits [B, 1, V], new state).
+
+    This is `serve_step`: one new token against a cache of `pos` history.
+    """
+    x = params["embed"][tokens].astype(cfg.act_dtype)
+    x = constrain(x, "batch", None, None)
+    positions = state["pos"][:, None]
+    new_state: Dict[str, Any] = {"pos": state["pos"] + 1}
+
+    def scan_decode(stacked_p, caches, kind):
+        fn = _APPLY[kind]
+
+        def body(h, pc):
+            p, cache = pc
+            h, new_cache, _ = fn(p, cfg, h, positions, cache)
+            return h, new_cache
+
+        return jax.lax.scan(body, x, (stacked_p, caches))
+
+    if cfg.block_pattern == "zamba":
+        h = x
+        app_i = 0
+        for (s, e, shared_after) in _zamba_segments(cfg):
+            seg_p = jax.tree.map(lambda a: a[s:e], params["mamba"])
+            seg_c = jax.tree.map(lambda a: a[s:e], state["mamba"])
+
+            def body(hh, pc):
+                p, cache = pc
+                hh, nc, _ = _mamba_block(p, cfg, hh, cache)
+                return hh, nc
+
+            h, seg_nc = jax.lax.scan(body, h, (seg_p, seg_c))
+            new_state.setdefault("_mamba_parts", []).append(seg_nc)
+            if shared_after:
+                cache = jax.tree.map(lambda a: a[app_i],
+                                     state["shared_attn"])
+                h, nc, _ = _attn_block(params["shared_attn"], cfg, h,
+                                       positions, cache, False)
+                new_state.setdefault("_shared_parts", []).append(nc)
+                app_i += 1
+        parts = new_state.pop("_mamba_parts")
+        new_state["mamba"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        sparts = new_state.pop("_shared_parts")
+        new_state["shared_attn"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0), *sparts)
+        return _logits(params, cfg, h), new_state
+
+    h = x
+    for (name, kind, _) in _groups(cfg):
+        fn = _APPLY[kind]
+
+        def body(hh, pc):
+            p, cache = pc
+            hh, new_cache, _ = fn(p, cfg, hh, positions, cache)
+            return hh, new_cache
+
+        h, new_caches = jax.lax.scan(body, h, (params[name], state[name]))
+        new_state[name] = new_caches
+    return _logits(params, cfg, h), new_state
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            img_embeds: Optional[jax.Array] = None, *,
+            max_len: Optional[int] = None):
+    """Full-context pass building the decode state; returns (last_logits,
+    state).  Attention archs cache all S keys; recurrent archs run the
+    chunked scan and keep only the final state (their long-context edge)."""
+    x = _embed_inputs(params, cfg, tokens, img_embeds)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    positions = jnp.arange(s)[None, :]
+    state: Dict[str, Any] = {"pos": jnp.full((b,), s, jnp.int32)}
+
+    cache_fn = attn_mod.mla_prefill_cache if cfg.attention == "mla" \
+        else attn_mod.gqa_prefill_cache
+
+    if cfg.block_pattern == "uniform":
+        h = x
+        for (name, kind, _) in _groups(cfg):
+            fn = _APPLY[kind]
+
+            def body(hh, p):
+                pre = layers.rms_norm(hh, p["ln1"], cfg.norm_eps)
+                cache = cache_fn(p["attn"], cfg, pre, positions,
+                                 cfg.act_dtype, max_len)
+                hh, _, _ = fn(p, cfg, hh, positions, None)
+                return hh, cache
+
+            h, caches = jax.lax.scan(body, h, params[name])
+            state[name] = caches
+        return _logits(params, cfg, h[:, -1:]), state
+
+    if cfg.block_pattern == "rwkv":
+        def body(hh, p):
+            hh, st, _ = _rwkv_block(p, cfg, hh, None)
+            return hh, st
+
+        h, states = jax.lax.scan(body, x, params["layers"])
+        state["layers"] = states
+        return _logits(params, cfg, h[:, -1:]), state
+
+    # zamba: mamba states from the chunked scan; shared-attn KV caches per
+    # application
+    h = x
+    mamba_states, shared_caches = [], []
+    for (s0, e0, shared_after) in _zamba_segments(cfg):
+        seg = jax.tree.map(lambda a: a[s0:e0], params["mamba"])
+
+        def body(hh, p):
+            hh, st, _ = _mamba_block(p, cfg, hh, None)
+            return hh, st
+
+        h, seg_states = jax.lax.scan(body, h, seg)
+        mamba_states.append(seg_states)
+        if shared_after:
+            p_sh = params["shared_attn"]
+            pre = layers.rms_norm(h, p_sh["ln1"], cfg.norm_eps)
+            shared_caches.append(cache_fn(p_sh["attn"], cfg, pre, positions,
+                                          cfg.act_dtype, max_len))
+            h, _, _ = _attn_block(p_sh, cfg, h, positions, None, False)
+    state["mamba"] = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                  *mamba_states)
+    state["shared_attn"] = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                                        *shared_caches)
+    return _logits(params, cfg, h[:, -1:]), state
+
+
+class Model:
+    """Convenience OO wrapper over the functional API."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Dict[str, Any]:
+        return init_params(self.cfg, key)
+
+    def __call__(self, params, tokens, img_embeds=None):
+        return forward(params, self.cfg, tokens, img_embeds)
+
+    def loss(self, params, tokens, labels, img_embeds=None):
+        return loss_fn(params, self.cfg, tokens, labels, img_embeds)
+
+    def decode_step(self, params, state, tokens):
+        return decode_step(params, self.cfg, state, tokens)
+
+    def param_count(self, params) -> int:
+        return sum(int(p.size) for p in jax.tree.leaves(params))

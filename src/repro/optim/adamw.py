@@ -1,0 +1,80 @@
+"""AdamW with fp32 master accumulators, global-norm clipping.
+
+Moments and (optionally) fp32 master params are plain pytrees mirroring
+the parameter tree, so the ZeRO/FSDP story is purely a sharding-spec
+choice in launch/sharding.py — states inherit the param sharding (or a
+data-sharded variant for ZeRO-1) with no optimizer-code changes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment  (fp32, param-tree shaped)
+    nu: Any          # second moment (fp32)
+    master: Any      # fp32 master copy of params (None if params are fp32)
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    mu = jax.tree.map(f32, params)
+    nu = jax.tree.map(f32, params)
+    needs_master = any(p.dtype != jnp.float32
+                       for p in jax.tree.leaves(params))
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+        if needs_master else None
+    return AdamWState(jnp.zeros((), jnp.int32), mu, nu, master)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state: AdamWState, *,
+                 lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: Optional[float] = 1.0
+                 ) -> Tuple[Any, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * base)
+        return new.astype(p.dtype), m, v, new
+
+    if state.master is not None:
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu,
+                           state.master)
+    else:
+        out = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
+                           params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[3], out,
+                          is_leaf=lambda t: isinstance(t, tuple)) \
+        if state.master is not None else None
+    return new_params, AdamWState(step, mu, nu, master), gnorm

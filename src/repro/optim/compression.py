@@ -1,0 +1,62 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+Two schemes:
+ - bf16 compression: cast grads to bf16 before the all-reduce, accumulate
+   in fp32 after — halves collective bytes, standard at pod scale.
+ - int8 error-feedback: per-tensor scale quantization with a residual
+   carried between steps (1-bit-Adam-style EF), quartering bytes; the
+   residual keeps the quantization error from biasing the update.
+
+Both act on pytrees and are exercised in the train-step variants; the
+roofline's collective term is what they buy down.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any
+
+
+def ef_init(grads) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def ef_int8_compress(grads, ef: ErrorFeedbackState
+                     ) -> Tuple[Any, Any, ErrorFeedbackState]:
+    """Returns (int8 payload, scales, new residual-state)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127
+                     ).astype(jnp.int8)
+        new_r = corrected - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    out = jax.tree.map(one, grads, ef.residual)
+    q = jax.tree.map(lambda t: t[0], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[2], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, ErrorFeedbackState(r)
+
+
+def ef_int8_decompress(q, scales):
+    return jax.tree.map(lambda qq, ss: qq.astype(jnp.float32) * ss,
+                        q, scales)

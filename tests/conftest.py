@@ -1,0 +1,19 @@
+"""Shared test config.
+
+jax jit caches accumulate across the full suite (dozens of compiled model
+graphs) and can exhaust the XLA CPU JIT's resources mid-run ("Failed to
+materialize symbols" INTERNAL errors poisoning later tests).  Clearing
+caches per test module keeps the single-process suite within budget.
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

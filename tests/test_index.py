@@ -1,0 +1,176 @@
+"""Integration tests: LSMVecIndex recall, dynamic updates, sampling, reorder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hnsw
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+
+
+from repro.data.synth import make_clustered_vectors
+
+
+def make_data(n, dim=32, seed=0, clusters=16):
+    """Synthetic SIFT-like clustered data (shared centers => queries are
+    in-distribution, like the SIFT1B query set)."""
+    return make_clustered_vectors(n, dim=dim, seed=seed, clusters=clusters)
+
+
+CFG = hnsw.HNSWConfig(cap=2048, dim=32, M=12, M_up=6, num_upper=2,
+                      ef_search=48, ef_construction=48, k=10,
+                      rho=1.0, use_filter=False, lsm_mem_cap=128,
+                      lsm_levels=2, lsm_fanout=8)
+
+
+@pytest.fixture(scope="module")
+def built_index():
+    data = make_data(1024)
+    idx = LSMVecIndex.build(CFG, data)
+    return idx, data
+
+
+def test_bulk_build_recall(built_index):
+    idx, data = built_index
+    queries = make_data(32, seed=7)
+    ids, dists = idx.search(queries, k=10)
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10)
+    r = recall_at_k(ids, truth)
+    assert r >= 0.85, f"bulk-build recall {r:.3f} too low"
+
+
+def test_search_returns_sorted_distances(built_index):
+    idx, _ = built_index
+    queries = make_data(8, seed=9)
+    _, dists = idx.search(queries, k=10)
+    for row in dists:
+        assert np.all(np.diff(row) >= -1e-5)
+
+
+def test_insert_then_find_self():
+    data = make_data(256, seed=1)
+    idx = LSMVecIndex.build(CFG, data)
+    new = make_data(8, seed=42) + 100.0  # far-away cluster
+    ids = [idx.insert(x) for x in new]
+    found, _ = idx.search(new, k=1)
+    assert set(found[:, 0].tolist()) == set(ids)
+
+
+def test_incremental_insert_recall():
+    """Start from a seed index, insert a batch, verify combined recall."""
+    base = make_data(512, seed=2)
+    extra = make_data(128, seed=3)
+    idx = LSMVecIndex.build(CFG, base)
+    for x in extra:
+        idx.insert(x)
+    assert idx.size == 640
+    allv = np.concatenate([base, extra])
+    queries = make_data(24, seed=8)
+    ids, _ = idx.search(queries, k=10)
+    truth = brute_force_knn(jnp.asarray(allv), jnp.asarray(queries), 10)
+    r = recall_at_k(ids, truth)
+    assert r >= 0.75, f"post-insert recall {r:.3f}"
+
+
+def test_delete_removes_from_results():
+    data = make_data(256, seed=4)
+    idx = LSMVecIndex.build(CFG, data)
+    queries = data[:8]
+    ids, _ = idx.search(queries, k=1)
+    victims = ids[:, 0].tolist()
+    for v in set(victims):
+        idx.delete(v)
+    ids2, _ = idx.search(queries, k=10)
+    for row in ids2:
+        assert not (set(row.tolist()) & set(victims)), "deleted id returned"
+
+
+def test_delete_preserves_recall_on_rest():
+    data = make_data(512, seed=5)
+    idx = LSMVecIndex.build(CFG, data)
+    rng = np.random.default_rng(0)
+    victims = rng.choice(512, 64, replace=False)
+    for v in victims:
+        idx.delete(int(v))
+    assert idx.size == 448
+    live = np.ones(512, bool)
+    live[victims] = False
+    queries = make_data(24, seed=6)
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
+                            live=jnp.asarray(live))
+    ids, _ = idx.search(queries, k=10)
+    r = recall_at_k(ids, truth)
+    assert r >= 0.7, f"post-delete recall {r:.3f}"
+
+
+def test_sampling_reduces_vector_fetches():
+    """Eq. 8-9: rho < 1 must fetch fewer vectors, recall degrades gently."""
+    data = make_data(1024, seed=10)
+    cfg = CFG._replace(rho=1.0, use_filter=False)
+    idx = LSMVecIndex.build(cfg, data)
+    queries = make_data(32, seed=11)
+
+    idx.reset_stats()
+    ids_full, _ = idx.search(queries, k=10, rho=1.0)
+    full_fetches = int(idx.stats.n_vec)
+
+    idx.reset_stats()
+    ids_samp, _ = idx.search(queries, k=10, rho=0.7)
+    samp_fetches = int(idx.stats.n_vec)
+
+    assert samp_fetches < full_fetches
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10)
+    r_full = recall_at_k(ids_full, truth)
+    r_samp = recall_at_k(ids_samp, truth)
+    assert r_samp >= r_full - 0.15, (r_full, r_samp)
+
+
+def test_hash_filter_counts_skips():
+    data = make_data(1024, seed=12)
+    cfg = CFG._replace(use_filter=True, eps=0.1)
+    idx = LSMVecIndex.build(cfg, data)
+    queries = make_data(16, seed=13)
+    idx.reset_stats()
+    idx.search(queries, k=10, use_filter=True)
+    assert int(idx.stats.n_filtered) >= 0
+    assert int(idx.stats.n_vec) > 0
+
+
+def test_memory_accounting_grows_with_inserts():
+    data = make_data(256, seed=14)
+    idx = LSMVecIndex.build(CFG, data)
+    m0 = idx.memory_bytes()
+    for x in make_data(64, seed=15):
+        idx.insert(x)
+    m1 = idx.memory_bytes()
+    assert m1 >= m0
+    # memory-resident part must be far below the full data size
+    assert m1 < 0.8 * idx.state.vectors.nbytes
+
+
+def test_reorder_preserves_results_and_improves_layout():
+    data = make_data(512, seed=16)
+    idx = LSMVecIndex.build(CFG, data)
+    queries = make_data(16, seed=17)
+    ids_before, d_before = idx.search(queries, k=5)
+    d_map_before = {tuple(np.round(r, 3)) for r in d_before}
+    idx.search(queries, k=5)  # accumulate heat
+    perm = idx.reorder(window=8, lam=1.0)
+    assert sorted(perm.tolist()) == list(range(512))  # valid permutation
+    ids_after, d_after = idx.search(queries, k=5)
+    # distances identical (same vectors, relabeled ids)
+    np.testing.assert_allclose(np.sort(d_after, axis=1),
+                               np.sort(d_before, axis=1), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_update_after_reorder():
+    data = make_data(256, seed=18)
+    idx = LSMVecIndex.build(CFG, data)
+    idx.search(make_data(8, seed=19), k=5)
+    idx.reorder()
+    new_vec = make_data(1, seed=20)[0] + 50.0
+    nid = idx.insert(new_vec)
+    found, _ = idx.search(new_vec[None, :], k=1)
+    assert int(found[0, 0]) == nid

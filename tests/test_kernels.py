@@ -1,0 +1,155 @@
+"""Shape/dtype sweeps: every Pallas kernel vs its pure-jnp oracle.
+
+Kernels run in interpret mode on CPU (the kernel body executes in Python);
+TPU is the compile target.  Tolerances follow FlashAttention-style practice:
+rtol 1e-3 on f32, 2e-2 on bf16 inputs (f32 accumulation inside the kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.gather_l2.kernel import gather_l2_pallas
+from repro.kernels.gather_l2.ops import gather_l2
+from repro.kernels.gather_l2.ref import gather_l2_ref
+from repro.kernels.l2_distance.kernel import l2_distance_pallas
+from repro.kernels.l2_distance.ops import l2_distance
+from repro.kernels.l2_distance.ref import l2_distance_ref
+from repro.kernels.simhash.kernel import (collision_count_pallas,
+                                          simhash_encode_pallas)
+from repro.kernels.simhash.ops import collision_count, simhash_encode
+from repro.kernels.simhash.ref import collision_count_ref, simhash_encode_ref
+
+TOL = {jnp.float32: dict(rtol=1e-3, atol=1e-3),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-1)}
+
+
+# ---------------------------------------------------------------------------
+# l2_distance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,n,d", [(8, 128, 128), (128, 256, 128),
+                                   (16, 128, 256), (8, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_distance_kernel_sweep(q, n, d, dtype):
+    kq, kc = jax.random.split(jax.random.key(q * n + d))
+    queries = jax.random.normal(kq, (q, d), dtype)
+    cands = jax.random.normal(kc, (n, d), dtype)
+    out = l2_distance_pallas(queries, cands, block_q=8, block_n=128,
+                             interpret=True)
+    ref = l2_distance_ref(queries, cands)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL[dtype])
+
+
+def test_l2_distance_ops_ragged_shapes():
+    """The ops wrapper pads/unpads non-tile-aligned shapes."""
+    kq, kc = jax.random.split(jax.random.key(0))
+    queries = jax.random.normal(kq, (5, 100))
+    cands = jax.random.normal(kc, (77, 100))
+    out = l2_distance(queries, cands, use_pallas=True, interpret=True)
+    ref = l2_distance_ref(queries, cands)
+    assert out.shape == (5, 77)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_l2_distance_zero_on_identical():
+    x = jax.random.normal(jax.random.key(0), (128, 128))
+    out = l2_distance_pallas(x, x, block_q=128, block_n=128, interpret=True)
+    diag = np.asarray(out)[np.arange(128), np.arange(128)]
+    np.testing.assert_allclose(diag, 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gather_l2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k,n,d", [(4, 16, 64, 128), (2, 8, 256, 128),
+                                     (8, 32, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_l2_kernel_sweep(b, k, n, d, dtype):
+    kq, kt, ki = jax.random.split(jax.random.key(b * k + n + d), 3)
+    queries = jax.random.normal(kq, (b, d), dtype)
+    table = jax.random.normal(kt, (n, d), dtype)
+    ids = jax.random.randint(ki, (b, k), 0, n, jnp.int32)
+    out = gather_l2_pallas(queries, table, ids, interpret=True)
+    ref = gather_l2_ref(queries, table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL[dtype])
+
+
+def test_gather_l2_negative_ids_are_inf():
+    queries = jax.random.normal(jax.random.key(0), (2, 128))
+    table = jax.random.normal(jax.random.key(1), (16, 128))
+    ids = jnp.array([[0, -1, 3, -1], [2, 2, -1, 5]], jnp.int32)
+    out = gather_l2_pallas(queries, table, ids, interpret=True)
+    out = np.asarray(out)
+    assert np.isinf(out[0, 1]) and np.isinf(out[0, 3]) and np.isinf(out[1, 2])
+    assert np.isfinite(out[0, 0]) and np.isfinite(out[1, 0])
+
+
+def test_gather_l2_ops_pads_dim():
+    queries = jax.random.normal(jax.random.key(0), (3, 100))
+    table = jax.random.normal(jax.random.key(1), (32, 100))
+    ids = jax.random.randint(jax.random.key(2), (3, 7), 0, 32, jnp.int32)
+    out = gather_l2(queries, table, ids, use_pallas=True, interpret=True)
+    ref = gather_l2_ref(queries, table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# simhash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,m", [(256, 128, 64), (512, 64, 128),
+                                   (256, 256, 32)])
+def test_simhash_encode_kernel_sweep(n, d, m):
+    kx, kp = jax.random.split(jax.random.key(n + d + m))
+    x = jax.random.normal(kx, (n, d))
+    proj = jax.random.normal(kp, (m, d))
+    out = simhash_encode_pallas(x, proj, block_n=256, interpret=True)
+    ref = simhash_encode_ref(x, proj)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("q,n,m", [(8, 512, 64), (16, 1024, 128)])
+def test_collision_count_kernel_sweep(q, n, m):
+    kx, ky, kp = jax.random.split(jax.random.key(q + n + m), 3)
+    proj = jax.random.normal(kp, (m, 32))
+    cq = simhash_encode_ref(jax.random.normal(kx, (q, 32)), proj)
+    cc = simhash_encode_ref(jax.random.normal(ky, (n, 32)), proj)
+    out = collision_count_pallas(cq, cc, m, block_q=8, block_n=512,
+                                 interpret=True)
+    ref = collision_count_ref(cq, cc, m)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_simhash_ops_ragged():
+    x = jax.random.normal(jax.random.key(0), (100, 48))
+    proj = jax.random.normal(jax.random.key(1), (64, 48))
+    out = simhash_encode(x, proj, use_pallas=True, interpret=True)
+    ref = simhash_encode_ref(x, proj)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    cols = collision_count(out[:10], out, 64, use_pallas=True, interpret=True)
+    refc = collision_count_ref(ref[:10], ref, 64)
+    np.testing.assert_array_equal(np.asarray(cols), np.asarray(refc))
+
+
+# ---------------------------------------------------------------------------
+# property: kernel/oracle agreement on random shapes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=40),
+       st.sampled_from([64, 128, 200]))
+def test_property_l2_ops_any_shape(q, n, d):
+    kq, kc = jax.random.split(jax.random.key(q * 1000 + n * 10 + d))
+    queries = jax.random.normal(kq, (q, d))
+    cands = jax.random.normal(kc, (n, d))
+    out = l2_distance(queries, cands, use_pallas=True, interpret=True)
+    ref = l2_distance_ref(queries, cands)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3,
+                               atol=1e-3)

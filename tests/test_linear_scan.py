@@ -1,0 +1,95 @@
+"""Property tests for the chunked linear-recurrence core (Mamba2/RWKV6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.linear_scan import (chunked_linear_attention,
+                                      recurrent_step, reference_scan)
+
+
+def _mk(seed, b, t, h, dk, dv, decay_scale, scalar):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (b, t, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, t, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, t, h, dv)), jnp.float32)
+    da = 1 if scalar else dk
+    la = jnp.asarray(-np.abs(rng.normal(0, decay_scale, (b, t, h, da))),
+                     jnp.float32)
+    return q, k, v, la
+
+
+@pytest.mark.parametrize("scalar,decay", [(True, 0.5), (True, 8.0),
+                                          (False, 0.05), (False, 0.5)])
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunked_matches_reference(scalar, decay, chunk):
+    q, k, v, la = _mk(0, 2, 16, 3, 8, 4, decay, scalar)
+    out_c, s_c = chunked_linear_attention(q, k, v, la, chunk=chunk)
+    out_r, s_r = reference_scan(q, k, v, la)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_chunked_rwkv_bonus_matches_reference(chunk):
+    q, k, v, la = _mk(1, 2, 16, 3, 8, 8, 0.05, scalar=False)
+    u = jnp.asarray(np.random.default_rng(2).normal(0, 1, (3, 8)),
+                    jnp.float32)
+    out_c, s_c = chunked_linear_attention(q, k, v, la, chunk=chunk, bonus=u)
+    out_r, s_r = reference_scan(q, k, v, la, bonus=u)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ragged_t_padding():
+    q, k, v, la = _mk(3, 1, 13, 2, 4, 4, 0.3, scalar=True)
+    out_c, s_c = chunked_linear_attention(q, k, v, la, chunk=8)
+    out_r, s_r = reference_scan(q, k, v, la)
+    assert out_c.shape == (1, 13, 2, 4)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_initial_state_carries():
+    """Splitting a sequence in half through the state == one pass."""
+    q, k, v, la = _mk(4, 1, 16, 2, 4, 4, 0.3, scalar=True)
+    out_full, s_full = chunked_linear_attention(q, k, v, la, chunk=4)
+    out_a, s_a = chunked_linear_attention(q[:, :8], k[:, :8], v[:, :8],
+                                          la[:, :8], chunk=4)
+    out_b, s_b = chunked_linear_attention(q[:, 8:], k[:, 8:], v[:, 8:],
+                                          la[:, 8:], chunk=4,
+                                          initial_state=s_a)
+    np.testing.assert_allclose(np.asarray(out_b),
+                               np.asarray(out_full[:, 8:]), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_b), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100), st.sampled_from([4, 8]),
+       st.booleans())
+def test_property_chunked_equals_scan(seed, chunk, scalar):
+    q, k, v, la = _mk(seed, 1, 8, 2, 4, 4, 0.4, scalar)
+    out_c, _ = chunked_linear_attention(q, k, v, la, chunk=chunk)
+    out_r, _ = reference_scan(q, k, v, la)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_decode_step_chains_to_full():
+    q, k, v, la = _mk(5, 2, 6, 2, 4, 4, 0.3, scalar=False)
+    out_r, _ = reference_scan(q, k, v, la)
+    s = jnp.zeros((2, 2, 4, 4), jnp.float32)
+    for t in range(6):
+        o, s = recurrent_step(s, q[:, t], k[:, t], v[:, t], la[:, t])
+        np.testing.assert_allclose(np.asarray(o), np.asarray(out_r[:, t]),
+                                   rtol=1e-4, atol=1e-4)

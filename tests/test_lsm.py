@@ -1,0 +1,217 @@
+"""Unit + property tests for the functional LSM-tree (core/lsm.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsm
+
+CFG = lsm.LSMConfig(mem_cap=8, num_levels=3, fanout=4, row_width=4)
+
+
+def row(*xs):
+    out = np.full((CFG.row_width,), lsm.EMPTY, np.int32)
+    out[: len(xs)] = xs
+    return jnp.asarray(out)
+
+
+def test_put_get_roundtrip():
+    s = lsm.init(CFG)
+    s = lsm.put(CFG, s, 7, row(1, 2, 3))
+    found, val, _ = lsm.get(CFG, s, 7)
+    assert bool(found)
+    np.testing.assert_array_equal(np.asarray(val)[:3], [1, 2, 3])
+    found, _, _ = lsm.get(CFG, s, 8)
+    assert not bool(found)
+
+
+def test_overwrite_newest_wins():
+    s = lsm.init(CFG)
+    s = lsm.put(CFG, s, 5, row(1))
+    s = lsm.put(CFG, s, 5, row(2))
+    _, val, _ = lsm.get(CFG, s, 5)
+    assert int(val[0]) == 2
+
+
+def test_overwrite_survives_flush():
+    s = lsm.init(CFG)
+    s = lsm.put(CFG, s, 5, row(1))
+    s = lsm.flush(CFG, s)
+    s = lsm.put(CFG, s, 5, row(2))
+    _, val, _ = lsm.get(CFG, s, 5)
+    assert int(val[0]) == 2
+    s = lsm.flush(CFG, s)
+    _, val, _ = lsm.get(CFG, s, 5)
+    assert int(val[0]) == 2
+
+
+def test_delete_tombstone():
+    s = lsm.init(CFG)
+    s = lsm.put(CFG, s, 3, row(9))
+    s = lsm.delete(CFG, s, 3)
+    found, _, _ = lsm.get(CFG, s, 3)
+    assert not bool(found)
+    # tombstone persists across flush
+    s = lsm.flush(CFG, s)
+    found, _, _ = lsm.get(CFG, s, 3)
+    assert not bool(found)
+
+
+def test_reinsert_after_delete():
+    s = lsm.init(CFG)
+    s = lsm.put(CFG, s, 3, row(9))
+    s = lsm.delete(CFG, s, 3)
+    s = lsm.put(CFG, s, 3, row(4))
+    found, val, _ = lsm.get(CFG, s, 3)
+    assert bool(found) and int(val[0]) == 4
+
+
+def test_auto_flush_on_full_memtable():
+    s = lsm.init(CFG)
+    for k in range(CFG.mem_cap + 3):
+        s = lsm.put(CFG, s, k, row(k))
+    assert int(s.n_flushes) >= 1
+    for k in range(CFG.mem_cap + 3):
+        found, val, _ = lsm.get(CFG, s, k)
+        assert bool(found), f"missing key {k}"
+        assert int(val[0]) == k
+
+
+def test_cascading_compaction_many_keys():
+    s = lsm.init(CFG)
+    n = CFG.level_caps[0] * 2  # force L0 -> L1 merges
+    put = jax.jit(lambda st, k, v: lsm.put(CFG, st, k, v))
+    for k in range(n):
+        s = put(s, k, row(k % 100))
+    assert int(s.n_compactions) >= 1
+    for k in range(0, n, 7):
+        found, val, _ = lsm.get(CFG, s, k)
+        assert bool(found)
+        assert int(val[0]) == k % 100
+
+
+def test_bulk_load_then_get():
+    keys = jnp.array([9, 4, 6, 1], jnp.int32)
+    vals = jnp.stack([row(90), row(40), row(60), row(10)])
+    s = lsm.bulk_load(CFG, keys, vals)
+    for k, v in [(9, 90), (4, 40), (6, 60), (1, 10)]:
+        found, val, _ = lsm.get(CFG, s, k)
+        assert bool(found) and int(val[0]) == v
+
+
+def test_bulk_load_then_update():
+    keys = jnp.arange(10, dtype=jnp.int32)
+    vals = jnp.stack([row(i) for i in range(10)])
+    s = lsm.bulk_load(CFG, keys, vals)
+    s = lsm.put(CFG, s, 4, row(444))
+    s = lsm.delete(CFG, s, 5)
+    _, val, _ = lsm.get(CFG, s, 4)
+    assert int(val[0]) == 444
+    found, _, _ = lsm.get(CFG, s, 5)
+    assert not bool(found)
+
+
+def test_compact_all_drops_tombstones():
+    s = lsm.init(CFG)
+    for k in range(6):
+        s = lsm.put(CFG, s, k, row(k))
+    for k in range(3):
+        s = lsm.delete(CFG, s, k)
+    s = lsm.compact_all(CFG, s)
+    # everything lives in the last level now; tombstones dropped
+    assert int(s.level_counts[-1]) == 3
+    for lvl in range(CFG.num_levels - 1):
+        assert int(s.level_counts[lvl]) == 0
+    for k in range(3):
+        assert not bool(lsm.get(CFG, s, k)[0])
+    for k in range(3, 6):
+        assert bool(lsm.get(CFG, s, k)[0])
+
+
+def test_remap_ids():
+    s = lsm.init(CFG)
+    s = lsm.put(CFG, s, 0, row(1, 2))
+    s = lsm.put(CFG, s, 1, row(0, 2))
+    s = lsm.put(CFG, s, 2, row(0, 1))
+    perm = jnp.array([2, 0, 1], jnp.int32)  # 0->2, 1->0, 2->1
+    s = lsm.remap_ids(CFG, s, perm)
+    found, val, _ = lsm.get(CFG, s, 2)  # was node 0
+    assert bool(found)
+    np.testing.assert_array_equal(sorted(np.asarray(val)[:2]), [0, 1])
+
+
+def test_get_batch_matches_get():
+    s = lsm.init(CFG)
+    for k in range(20):
+        s = lsm.put(CFG, s, k * 3, row(k))
+    keys = jnp.array([0, 3, 4, 57, 30], jnp.int32)
+    f_b, v_b, _ = lsm.get_batch(CFG, s, keys)
+    for i, k in enumerate(np.asarray(keys)):
+        f, v, _ = lsm.get(CFG, s, int(k))
+        assert bool(f_b[i]) == bool(f)
+        np.testing.assert_array_equal(np.asarray(v_b[i]), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# property tests: the LSM tree behaves exactly like a python dict
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["put", "del"]),
+              st.integers(min_value=0, max_value=30),
+              st.integers(min_value=0, max_value=1000)),
+    min_size=1, max_size=60))
+def test_property_dict_equivalence(ops):
+    cfg = lsm.LSMConfig(mem_cap=4, num_levels=3, fanout=3, row_width=2)
+    s = lsm.init(cfg)
+    model = {}
+    for op, k, v in ops:
+        if op == "put":
+            s = lsm.put(cfg, s, k, jnp.array([v, v + 1], jnp.int32))
+            model[k] = v
+        else:
+            s = lsm.delete(cfg, s, k)
+            model.pop(k, None)
+    for k in range(31):
+        found, val, _ = lsm.get(cfg, s, k)
+        if k in model:
+            assert bool(found), f"key {k} should exist"
+            assert int(val[0]) == model[k]
+        else:
+            assert not bool(found), f"key {k} should not exist"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(min_value=0, max_value=40),
+              st.integers(min_value=0, max_value=99)),
+    min_size=1, max_size=50))
+def test_property_compaction_preserves_view(puts_list):
+    cfg = lsm.LSMConfig(mem_cap=4, num_levels=3, fanout=3, row_width=2)
+    s = lsm.init(cfg)
+    model = {}
+    for k, v in puts_list:
+        s = lsm.put(cfg, s, k, jnp.array([v, 0], jnp.int32))
+        model[k] = v
+    s2 = lsm.compact_all(cfg, s)
+    for k, v in model.items():
+        found, val, _ = lsm.get(cfg, s2, k)
+        assert bool(found) and int(val[0]) == v
+
+
+def test_resolve_all_dense_view():
+    cfg = lsm.LSMConfig(mem_cap=4, num_levels=2, fanout=4, row_width=2)
+    s = lsm.init(cfg)
+    s = lsm.put(cfg, s, 2, jnp.array([5, 6], jnp.int32))
+    s = lsm.put(cfg, s, 0, jnp.array([1, 2], jnp.int32))
+    s = lsm.put(cfg, s, 2, jnp.array([7, 8], jnp.int32))  # overwrite
+    s = lsm.put(cfg, s, 3, jnp.array([9, 9], jnp.int32))
+    s = lsm.delete(cfg, s, 0)
+    live, rows = lsm.resolve_all(cfg, s, id_space=5)
+    live = np.asarray(live)
+    rows = np.asarray(rows)
+    assert live[0] == 0 and live[2] == 1 and live[3] == 1 and live[1] == 0
+    np.testing.assert_array_equal(rows[2], [7, 8])

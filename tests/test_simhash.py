@@ -1,0 +1,122 @@
+"""Tests for SimHash codes + Hoeffding filter (core/simhash.py)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simhash
+
+
+def test_encode_shape_and_dtype():
+    p = simhash.init(jax.random.key(0), dim=32, m_bits=64)
+    x = jax.random.normal(jax.random.key(1), (5, 32))
+    codes = simhash.encode(p, x)
+    assert codes.shape == (5, 2)
+    assert codes.dtype == jnp.uint32
+
+
+def test_self_collisions_are_m():
+    p = simhash.init(jax.random.key(0), dim=16, m_bits=64)
+    x = jax.random.normal(jax.random.key(1), (3, 16))
+    codes = simhash.encode(p, x)
+    cols = simhash.collisions(codes, codes, 64)
+    np.testing.assert_array_equal(np.asarray(cols), [64, 64, 64])
+
+
+def test_opposite_vectors_zero_collisions():
+    p = simhash.init(jax.random.key(0), dim=16, m_bits=64)
+    x = jax.random.normal(jax.random.key(1), (1, 16))
+    ca = simhash.encode(p, x)
+    cb = simhash.encode(p, -x)
+    cols = simhash.collisions(ca, cb, 64)
+    # sgn flips for every projection except exact zeros (prob ~0)
+    assert int(cols[0]) == 0
+
+
+def test_collision_count_matches_unpacked_bits():
+    """Packed popcount arithmetic == direct bit comparison (Eq. 5)."""
+    p = simhash.init(jax.random.key(0), dim=24, m_bits=96)
+    x = jax.random.normal(jax.random.key(1), (4, 24))
+    y = jax.random.normal(jax.random.key(2), (4, 24))
+    bits_x = np.asarray((x @ p.proj.T) >= 0)
+    bits_y = np.asarray((y @ p.proj.T) >= 0)
+    expected = (bits_x == bits_y).sum(axis=1)
+    got = simhash.collisions(simhash.encode(p, x), simhash.encode(p, y), 96)
+    np.testing.assert_array_equal(np.asarray(got), expected)
+
+
+def test_collision_probability_endpoints():
+    assert float(simhash.collision_probability(jnp.array(1.0))) == pytest.approx(1.0)
+    assert float(simhash.collision_probability(jnp.array(-1.0))) == pytest.approx(0.0)
+    assert float(simhash.collision_probability(jnp.array(0.0))) == pytest.approx(0.5)
+
+
+def test_collisions_monotone_in_angle():
+    """Closer vectors (higher cos) collide more, statistically."""
+    dim, m = 64, 256
+    p = simhash.init(jax.random.key(0), dim, m)
+    key = jax.random.key(1)
+    base = jax.random.normal(key, (200, dim))
+    near = base + 0.1 * jax.random.normal(jax.random.key(2), base.shape)
+    far = jax.random.normal(jax.random.key(3), base.shape)
+    cb = simhash.encode(p, base)
+    cn = simhash.encode(p, near)
+    cf = simhash.encode(p, far)
+    mean_near = float(jnp.mean(simhash.collisions(cb, cn, m)))
+    mean_far = float(jnp.mean(simhash.collisions(cb, cf, m)))
+    assert mean_near > mean_far + 20  # near ~ cos 0.99 -> ~0.97m; far ~ 0.5m
+
+
+def test_hoeffding_guarantee_empirical():
+    """Candidates within delta pass the threshold w.p. >= 1 - eps (Eq. 6)."""
+    dim, m, eps = 32, 128, 0.05
+    p = simhash.init(jax.random.key(0), dim, m)
+    key = jax.random.key(1)
+    q = jax.random.normal(key, (500, dim))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    # construct candidates at a known angle (cos = 0.9)
+    noise = jax.random.normal(jax.random.key(2), q.shape)
+    noise = noise - jnp.sum(noise * q, axis=1, keepdims=True) * q
+    noise = noise / jnp.linalg.norm(noise, axis=1, keepdims=True)
+    cos_target = 0.9
+    u = cos_target * q + math.sqrt(1 - cos_target**2) * noise
+    cq, cu = simhash.encode(p, q), simhash.encode(p, u)
+    cols = simhash.collisions(cq, cu, m)
+    thr = simhash.hoeffding_threshold(m, eps, jnp.array(cos_target))
+    pass_rate = float(jnp.mean(cols.astype(jnp.float32) >= thr))
+    assert pass_rate >= 1 - eps - 0.02  # small empirical slack
+
+
+def test_cos_from_l2_roundtrip():
+    q = jnp.array([3.0, 4.0])          # norm 5
+    u = jnp.array([4.0, 3.0])          # norm 5
+    d2 = jnp.sum((q - u) ** 2)
+    cos = simhash.cos_from_l2(d2, jnp.linalg.norm(q), jnp.linalg.norm(u))
+    expected = float(q @ u / 25.0)
+    assert float(cos) == pytest.approx(expected, abs=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_property_collisions_symmetric(seed):
+    p = simhash.init(jax.random.key(0), dim=8, m_bits=32)
+    x = jax.random.normal(jax.random.key(seed), (2, 8))
+    c = simhash.encode(p, x)
+    ab = simhash.collisions(c[0], c[1], 32)
+    ba = simhash.collisions(c[1], c[0], 32)
+    assert int(ab) == int(ba)
+    assert 0 <= int(ab) <= 32
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(min_value=-0.99, max_value=0.99),
+       st.sampled_from([0.01, 0.05, 0.1, 0.3]))
+def test_property_threshold_monotone_in_eps(cos, eps):
+    """Larger eps (more tolerance for misses) -> higher threshold."""
+    lo = simhash.hoeffding_threshold(128, eps, jnp.array(cos))
+    hi = simhash.hoeffding_threshold(128, eps * 0.5, jnp.array(cos))
+    assert float(hi) <= float(lo)
