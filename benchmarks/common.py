@@ -91,23 +91,33 @@ def run_workloads(*, n_base: int = 4096, dim: int = 64, n_batches: int = 8,
                 stats_before = idx.stats
                 n_ins = int(round(batch_n * p_ins))
                 n_del = batch_n - n_ins
-                # inserts
-                for _ in range(n_ins):
-                    c = fresh_cursor[name]
-                    fresh_cursor[name] += 1
-                    x = fresh[c]
-                    new_id = idx.insert(x)
-                    allv = np.concatenate(vectors[name] + [x[None]])
+                # inserts — batched systems (LSM-VEC) take the whole batch
+                # in one device call; baselines fall back to the loop
+                c = fresh_cursor[name]
+                fresh_cursor[name] += n_ins
+                batch_xs = fresh[c:c + n_ins]
+                if n_ins:
+                    if hasattr(idx, "insert_batch"):
+                        new_ids = idx.insert_batch(batch_xs)
+                    else:
+                        new_ids = [idx.insert(x) for x in batch_xs]
+                    allv = np.concatenate(vectors[name] + [batch_xs])
                     vectors[name] = [allv]
-                    live[name] = np.append(live[name], True)
-                    assert new_id == len(live[name]) - 1
+                    live[name] = np.append(live[name],
+                                           np.ones(n_ins, bool))
+                    assert list(new_ids) == list(
+                        range(len(live[name]) - n_ins, len(live[name])))
                 # deletes (uniform over live ids)
                 live_ids = np.flatnonzero(live[name])
                 victims = rng.choice(live_ids, min(n_del, len(live_ids)),
                                      replace=False)
-                for v in victims:
-                    idx.delete(int(v))
-                    live[name][v] = False
+                if len(victims):
+                    if hasattr(idx, "delete_batch"):
+                        idx.delete_batch(victims)
+                    else:
+                        for v in victims:
+                            idx.delete(int(v))
+                    live[name][victims] = False
                 upd_wall = time.monotonic() - t0
                 stats_delta = jax.tree.map(
                     lambda a, b: a - b, idx.stats, stats_before)

@@ -46,6 +46,8 @@ class HNSWConfig(NamedTuple):
     lsm_mem_cap: int = 256
     lsm_levels: int = 3
     lsm_fanout: int = 8
+    n_expand: int = 1        # query-path multi-expansion width (B); 1 = classic
+    batch_expand: int = 4    # multi-expansion width for insert_batch searches
 
     @property
     def lsm_cfg(self) -> lsm.LSMConfig:
@@ -120,15 +122,19 @@ def _dist_fn(state: HNSWState, q: jax.Array):
 
 
 def _bottom_adj_fn(cfg: HNSWConfig, state: HNSWState):
-    def fn(node):
-        found, row, probes = lsm.get(cfg.lsm_cfg, state.store, node)
-        return jnp.where(found, row, -1), probes
+    """Batched bottom-layer adjacency: B node ids -> one LSM batch lookup."""
+    def fn(nodes):
+        found, rows, probes = lsm.get_batch(cfg.lsm_cfg, state.store, nodes)
+        return jnp.where(found[:, None], rows, -1), probes
     return fn
 
 
 def _upper_adj_fn(state: HNSWState, u: int):
-    def fn(node):
-        return state.upper_adj[u, node], jnp.zeros((), jnp.int32)
+    """Batched upper-layer adjacency (memory-resident dense rows)."""
+    def fn(nodes):
+        rows = state.upper_adj[u, jnp.maximum(nodes, 0)]
+        return jnp.where((nodes >= 0)[:, None], rows, -1), \
+            jnp.zeros_like(nodes)
     return fn
 
 
@@ -211,11 +217,22 @@ def _dedup_to_inf(ids: jax.Array, dists: jax.Array):
 
 def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
            *, rho: float | None = None, ef: int | None = None,
-           use_filter: bool | None = None) -> BeamResult:
-    """Single-query search: upper greedy descent -> sampled bottom beam."""
+           use_filter: bool | None = None,
+           n_expand: int | None = None) -> BeamResult:
+    """Single-query search: upper greedy descent -> sampled bottom beam.
+
+    `n_expand` > 1 turns on multi-expansion (DESIGN.md §3): that many
+    frontier nodes are expanded per beam iteration through one batched
+    adjacency read and one fused distance block.  The default (1) is the
+    paper's classic one-node-per-hop traversal.
+    """
     ef = ef or cfg.ef_search
     rho = cfg.rho if rho is None else rho
     use_filter = cfg.use_filter if use_filter is None else use_filter
+    n_expand = cfg.n_expand if n_expand is None else n_expand
+    # clamp like beam_search does, so the max_iters budget below stays
+    # B-invariant even for n_expand > ef
+    n_expand = max(1, min(n_expand, ef))
     ep, d_ep = _descend_upper(cfg, state, q, jnp.zeros((), jnp.int32))
     code_q = simhash.encode(simhash.SimHashParams(state.proj), q[None, :])[0]
     return beam_search(
@@ -224,7 +241,8 @@ def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
         state.codes, code_q, state.levels >= 0,
         cap=cfg.cap, ef=ef, k=cfg.k, m_bits=cfg.m_bits, eps=cfg.eps,
         rho=rho, max_iters=2 * ef, use_filter=use_filter,
-        q_norm=jnp.sqrt(jnp.sum(q * q)), mean_norm=state.mean_norm)
+        q_norm=jnp.sqrt(jnp.sum(q * q)), mean_norm=state.mean_norm,
+        n_expand=n_expand)
 
 
 def search_batch(cfg: HNSWConfig, state: HNSWState, qs: jax.Array,
@@ -235,6 +253,25 @@ def search_batch(cfg: HNSWConfig, state: HNSWState, qs: jax.Array,
 # ---------------------------------------------------------------------------
 # insert (Algorithm 1)
 # ---------------------------------------------------------------------------
+
+def _backlink_rows(cfg: HNSWConfig, store: lsm.LSMState, vectors: jax.Array,
+                   nbrs: jax.Array, x: jax.Array, i) -> lsm.LSMState:
+    """Bulk bottom-layer backlink pass: read the M neighbor rows in one
+    batched lookup, evict each row's most redundant slot, write everything
+    back with a single `lsm.puts`.  Masked (-1) neighbors land on the
+    reserved dead key, exactly like the per-edge `_put_masked` path did."""
+    ok = nbrs >= 0
+    nbrs_safe = jnp.maximum(nbrs, 0)
+    found, rows, _ = lsm.get_batch(cfg.lsm_cfg, store, nbrs_safe)  # [M, M]
+    rows = jnp.where(found[:, None], rows, -1)
+    d_new = jnp.sum((vectors[jnp.maximum(rows, 0)]
+                     - x[None, None, :]) ** 2, axis=-1)            # [M, M]
+    slots = jax.vmap(_evict_slot)(rows, d_new)
+    new_rows = rows.at[jnp.arange(nbrs.shape[0]), slots].set(i)
+    dead = jnp.asarray(cfg.cap, jnp.int32)
+    return lsm.puts(cfg.lsm_cfg, store,
+                    jnp.where(ok, nbrs_safe, dead), new_rows)
+
 
 def _put_masked(cfg: HNSWConfig, store: lsm.LSMState, key, row, active):
     """LSM put that lands on a reserved dead key when inactive.
@@ -270,6 +307,11 @@ def insert(cfg: HNSWConfig, state: HNSWState, x: jax.Array,
     first = state.n_live == 0
 
     # ---- phase 1+2: upper layers ------------------------------------------
+    # This block intentionally stays the paper-exact, unconditional form of
+    # Algorithm 1 (beam + where-selects on every layer, sequential
+    # backlinks): it is the parity reference the tests pin.  The batched
+    # pipeline's `_connect_upper` is the cond-gated, vectorized variant of
+    # the same logic — a change to the linking rule must land in both.
     ep = jnp.maximum(state.entry, 0)
     d_ep = _point_dist(state, x, ep)
     upper_adj = state.upper_adj
@@ -321,18 +363,12 @@ def insert(cfg: HNSWConfig, state: HNSWState, x: jax.Array,
     store = _put_masked(cfg, state.store, i, nbrs, jnp.bool_(True))
     # bidirectional links (Fig. 3: links are always formed; when the row is
     # full the most redundant existing edge is evicted, keeping the new
-    # node reachable without stripping long-range portals)
-    for j in range(cfg.M):
-        n = nbrs[j]
-        ok = n >= 0
-        n_safe = jnp.maximum(n, 0)
-        found, row, _ = lsm.get(cfg.lsm_cfg, store, n_safe)
-        row = jnp.where(found, row, -1)
-        d_new = jnp.sum((state.vectors[jnp.maximum(row, 0)]
-                         - x[None, :]) ** 2, axis=-1)
-        slot = _evict_slot(row, d_new)
-        new_row = row.at[slot].set(i)
-        store = _put_masked(cfg, store, n_safe, new_row, ok)
+    # node reachable without stripping long-range portals).  The whole
+    # backlink pass is amortized: one batched row read over the M
+    # neighbors and one bulk `puts` instead of M get+put round-trips —
+    # exact because beam candidates (hence `nbrs`) are distinct ids, so
+    # no backlink row feeds another's lookup.
+    store = _backlink_rows(cfg, store, state.vectors, nbrs, x, i)
 
     new_entry = jnp.where(first | (lvl > state.max_level), i, state.entry)
     state = state._replace(
@@ -344,6 +380,245 @@ def insert(cfg: HNSWConfig, state: HNSWState, x: jax.Array,
     stats = res.stats._replace(
         n_vec=res.stats.n_vec + cfg.M)  # backlink row re-rankings
     return state, stats
+
+
+# ---------------------------------------------------------------------------
+# batched updates (DESIGN.md §4) — the FreshDiskANN-style bulk pipeline
+# ---------------------------------------------------------------------------
+
+def _connect_upper(cfg: HNSWConfig, state: HNSWState, upper_adj: jax.Array,
+                   u: int, x, code, xnorm, i, ep, d_ep, n_expand: int):
+    """Connect node i on upper layer u: ef-search, diversity-select, and a
+    vectorized backlink-eviction pass (exact because the selected neighbors
+    are distinct beam candidates, so their row updates are independent).
+    Returns the updated (upper_adj, ep, d_ep)."""
+    n_expand = max(1, min(n_expand, cfg.ef_construction))
+    live_u = (state.levels > u) & (jnp.arange(cfg.cap) != i)
+    adj = _upper_adj_fn(state._replace(upper_adj=upper_adj), u)
+    res = beam_search(
+        x, ep, d_ep, adj, _dist_fn(state, x), state.codes, code, live_u,
+        cap=cfg.cap, ef=cfg.ef_construction, k=cfg.k, m_bits=cfg.m_bits,
+        eps=cfg.eps, rho=1.0, max_iters=2 * cfg.ef_construction,
+        use_filter=False, q_norm=xnorm, mean_norm=state.mean_norm,
+        n_expand=n_expand)
+    nbrs, _ = _diversity_topm(res.ids[:max(2 * cfg.M_up, cfg.M_up + 4)],
+                              res.dists[:max(2 * cfg.M_up, cfg.M_up + 4)],
+                              state.vectors, cfg.M_up)
+    upper_adj = upper_adj.at[u, i].set(nbrs)
+    ok = nbrs >= 0
+    ns = jnp.maximum(nbrs, 0)
+    rows = upper_adj[u, ns]                                  # [M_up, M_up]
+    d_new = jnp.sum((state.vectors[jnp.maximum(rows, 0)]
+                     - x[None, None, :]) ** 2, axis=-1)
+    slots = jax.vmap(_evict_slot)(rows, d_new)
+    new_rows = rows.at[jnp.arange(cfg.M_up), slots].set(i)
+    # masked entries scatter out of bounds and are dropped
+    idx = jnp.where(ok, ns, cfg.cap)
+    upper_adj = upper_adj.at[u, idx].set(new_rows, mode="drop")
+    ep = jnp.where(res.dists[0] < INF, res.ids[0], ep)
+    d_ep = jnp.minimum(res.dists[0], d_ep)
+    return upper_adj, ep, d_ep
+
+
+def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
+                 keys: jax.Array, *,
+                 n_expand: int | None = None) -> Tuple[HNSWState, IOStats]:
+    """Insert a batch of vectors in one jit — zero per-item host syncs.
+
+    Two phases (DESIGN.md §4):
+      A (vmapped): every vector's bottom-layer candidate search runs
+        against the *pre-batch* graph snapshot with multi-expansion beams,
+        so the whole batch is one embarrassingly parallel sweep — the
+        FreshDiskANN streaming-update recipe.
+      B (`lax.scan`): graph writes are sequential and ids are computed
+        inside the scan from the carried `count`.  Upper-layer connects
+        run under `lax.cond` (only ~e^-1 of inserts reach layer >= 1, so
+        the expensive construction beams are skipped for the rest), and
+        the bottom backlink pass is the bulk read + `lsm.puts` path.
+
+    Items in the same batch do not see each other as bottom-layer
+    neighbor *candidates* (they still become mutually reachable through
+    base-graph backlinks, like sequential inserts).  Callers should seed
+    a small graph per-item first; `LSMVecIndex.insert_batch` does.
+    """
+    if n_expand is None:
+        n_expand = cfg.batch_expand
+    n_expand = max(1, min(n_expand, cfg.ef_construction))
+    n = xs.shape[0]
+    base_id = state.count
+    codes = simhash.encode(simhash.SimHashParams(state.proj), xs)
+    xnorms = jnp.sqrt(jnp.sum(xs * xs, axis=1))
+    u01 = jax.vmap(
+        lambda kk: jax.random.uniform(kk, (), jnp.float32, 1e-7, 1.0))(keys)
+    lvls = jnp.minimum(jnp.floor(-jnp.log(u01)).astype(jnp.int32),
+                       cfg.num_upper)
+
+    # Intra-batch neighbor candidates: the snapshot cannot see batch
+    # siblings, and an out-of-distribution batch (say, a brand-new
+    # cluster) would otherwise compete for the same few base-node
+    # backlink slots and come out mostly unreachable.  One triangular
+    # [n, n] distance block (RAM-resident, no t_v cost — the batch is in
+    # memory) lets item i also link to its nearest *earlier* items j < i,
+    # whose ids (base_id + j) are deterministic and whose rows are
+    # already staged in the overlay when i's backlink pass reads them —
+    # the same "link to already-placed nodes" rule sequential insert has.
+    bb = (xnorms[:, None] ** 2 + xnorms[None, :] ** 2
+          - 2.0 * (xs @ xs.T))
+    bb = jnp.where(jnp.tril(jnp.ones((n, n), jnp.bool_), k=-1), bb, INF)
+    m_in = max(1, min(cfg.M, n - 1))
+    nb_negd, nb_j = jax.lax.top_k(-bb, m_in)
+    in_d = -nb_negd                                            # [n, m_in]
+    in_ids = jnp.where(jnp.isfinite(in_d), base_id + nb_j, -1)
+
+    # phase-A view with the batch vectors materialized, so diversity
+    # selection can measure candidate pairs that include batch siblings
+    vectors_view = state.vectors.at[base_id + jnp.arange(n)].set(xs)
+
+    # ---- phase A: batch-parallel candidate search on the snapshot ---------
+    # The pre-batch bottom graph is frozen for the whole sweep, so resolve
+    # the LSM tree into a dense newest-wins view once (FreshDiskANN
+    # searches its frozen disk index the same way) and serve adjacency by
+    # row gather instead of per-hop LSM probes.  Rows are identical to
+    # what `get_batch` would return; `n_probes` keeps the 1-read-per-row
+    # cost model of `lsm.get`.
+    snap_live, snap_rows = lsm.resolve_all(cfg.lsm_cfg, state.store, cfg.cap)
+    snapshot = jnp.where(snap_live[:, None] > 0, snap_rows, -1)
+
+    def snap_adj(nodes):
+        rows = snapshot[jnp.maximum(nodes, 0)]
+        return jnp.where((nodes >= 0)[:, None], rows, -1), \
+            jnp.ones_like(nodes)
+
+    def cand_search(x, code, xnorm, ids_in, d_in):
+        ep, d_ep = _descend_upper(cfg, state, x, jnp.zeros((), jnp.int32))
+        res = beam_search(
+            x, ep, d_ep, snap_adj, _dist_fn(state, x),
+            state.codes, code, state.levels >= 0,
+            cap=cfg.cap, ef=cfg.ef_construction, k=cfg.k, m_bits=cfg.m_bits,
+            eps=cfg.eps, rho=cfg.rho,
+            max_iters=2 * cfg.ef_construction,
+            use_filter=cfg.use_filter, q_norm=xnorm,
+            mean_norm=state.mean_norm, n_expand=n_expand)
+        # diversity-select the bottom neighbors here: it only reads the
+        # frozen snapshot + batch view, and vmapping it runs the
+        # sequential dominance loop once for the whole batch instead of
+        # once per scanned item.  The beam is distance-sorted and
+        # keepPruned almost never reaches past ~2M candidates, so
+        # truncate before merging the intra-batch pool (disjoint ids:
+        # beam ids are pre-batch, ids_in are >= base_id).
+        pool = min(2 * cfg.M, res.ids.shape[0])
+        cand_ids = jnp.concatenate([res.ids[:pool], ids_in])
+        cand_d = jnp.concatenate([res.dists[:pool], d_in])
+        nbrs, _ = _diversity_topm(cand_ids, cand_d, vectors_view, cfg.M)
+        return nbrs, res.stats
+
+    cand_nbrs, stats_a = jax.vmap(cand_search)(xs, codes, xnorms,
+                                               in_ids, in_d)
+
+    # ---- phase B: sequential graph writes ---------------------------------
+    # Bottom-layer rows are staged in a dense overlay carried through the
+    # scan instead of being put into the LSM per item: a flush `lax.cond`
+    # inside a scan makes XLA copy the level arrays on every step
+    # (measured ~20x the cost of the appends themselves).  Reads resolve
+    # overlay-first, then the phase-A snapshot — exactly the newest-wins
+    # view the in-scan puts would have produced — and the LSM absorbs all
+    # staged rows in one bulk `puts` after the scan.
+    overlay_rows = jnp.full((cfg.cap + 1, cfg.M), -1, jnp.int32)
+    overlay_valid = jnp.zeros((cfg.cap + 1,), jnp.bool_)
+    dead = jnp.asarray(cfg.cap, jnp.int32)
+
+    def step(carry, inp):
+        st, orows, ovalid = carry
+        x, code, xnorm, lvl, nbrs = inp
+        i = st.count
+        st = st._replace(
+            vectors=st.vectors.at[i].set(x),
+            norms=st.norms.at[i].set(xnorm),
+            codes=st.codes.at[i].set(code),
+            levels=st.levels.at[i].set(lvl),
+            mean_norm=(st.mean_norm * st.n_live + xnorm)
+            / jnp.maximum(st.n_live + 1, 1))
+        first = st.n_live == 0
+
+        # Upper-layer work only matters for items that reach layer >= 1
+        # (~1 - e^-1 of them): bottom-layer candidates are precomputed, so
+        # for lvl == 0 the greedy descents and connects would all be dead
+        # code.  One cond skips the whole loop for the common case.
+        def upper_work(ua):
+            ep = jnp.maximum(st.entry, 0)
+            d_ep = _point_dist(st, x, ep)
+            for u in reversed(range(cfg.num_upper)):
+                live_u = (st.levels > u) & (jnp.arange(cfg.cap) != i)
+                g_ep, g_d = greedy_descent(x, ep, d_ep, ua[u],
+                                           st.vectors, live_u)
+                above = jnp.asarray(u, jnp.int32) >= lvl
+
+                def connect(op, u=u):
+                    a, e, de = op
+                    return _connect_upper(cfg, st, a, u, x, code, xnorm, i,
+                                          e, de, n_expand)
+
+                def skip(op, g_ep=g_ep, g_d=g_d):
+                    a, e, de = op
+                    return a, g_ep, g_d
+
+                ua, ep, d_ep = jax.lax.cond(
+                    ~above, connect, skip, (ua, ep, d_ep))
+            return ua
+
+        upper_adj = jax.lax.cond((lvl > 0) & (~first), upper_work,
+                                 lambda ua: ua, st.upper_adj)
+        st = st._replace(upper_adj=upper_adj)
+
+        nbrs = jnp.where(first, -1, nbrs)
+        # backlink pass against overlay-else-snapshot rows (pure gathers)
+        ok = nbrs >= 0
+        nbrs_safe = jnp.maximum(nbrs, 0)
+        rows = jnp.where(ovalid[nbrs_safe][:, None],
+                         orows[nbrs_safe], snapshot[nbrs_safe])
+        d_new = jnp.sum((st.vectors[jnp.maximum(rows, 0)]
+                         - x[None, None, :]) ** 2, axis=-1)
+        slots = jax.vmap(_evict_slot)(rows, d_new)
+        new_rows = rows.at[jnp.arange(cfg.M), slots].set(i)
+        w_keys = jnp.concatenate([i[None], jnp.where(ok, nbrs_safe, dead)])
+        w_vals = jnp.concatenate([nbrs[None, :], new_rows])
+        orows = orows.at[w_keys].set(w_vals)
+        ovalid = ovalid.at[w_keys].set(True)
+
+        new_entry = jnp.where(first | (lvl > st.max_level), i, st.entry)
+        st = st._replace(
+            count=st.count + 1, n_live=st.n_live + 1,
+            entry=new_entry, max_level=jnp.maximum(st.max_level, lvl))
+        return (st, orows, ovalid), w_keys
+
+    (state, overlay_rows, _), w_keys = jax.lax.scan(
+        step, (state, overlay_rows, overlay_valid),
+        (xs, codes, xnorms, lvls, cand_nbrs))
+    # one bulk LSM apply: every staged key carries its *final* overlay row,
+    # so duplicate keys across items all write the same (last) value and
+    # newest-wins is preserved.  (Deduping here would not save memtable
+    # slots — static shapes mean duplicates could only be renamed to the
+    # dead key, which occupies a slot all the same.)  Dead-key rows pad
+    # exactly like the per-item `_put_masked` path.
+    w_keys = w_keys.reshape(-1)
+    w_vals = overlay_rows[jnp.minimum(w_keys, cfg.cap)]
+    state = state._replace(
+        store=lsm.puts(cfg.lsm_cfg, state.store, w_keys, w_vals))
+    stats = IOStats(*(jnp.sum(a).astype(jnp.int32) for a in stats_a))
+    # backlink row re-rankings, as in the per-item path
+    stats = stats._replace(n_vec=stats.n_vec + n * cfg.M)
+    return state, stats
+
+
+def delete_batch(cfg: HNSWConfig, state: HNSWState,
+                 ids: jax.Array) -> Tuple[HNSWState, IOStats]:
+    """Delete a batch of nodes in one jit'd `lax.scan` of Algorithm 2."""
+    def step(st, i):
+        st, stats = delete(cfg, st, i)
+        return st, stats
+
+    state, stats = jax.lax.scan(step, state, jnp.asarray(ids, jnp.int32))
+    return state, IOStats(*(jnp.sum(a).astype(jnp.int32) for a in stats))
 
 
 # ---------------------------------------------------------------------------
@@ -380,26 +655,28 @@ def delete(cfg: HNSWConfig, state: HNSWState, node) -> Tuple[HNSWState, IOStats]
     state = state._replace(upper_adj=upper_adj)
 
     # ---- bottom layer (Algorithm 2 lines 13-22) -----------------------------
+    # The per-neighbor relink rows all derive from the same up-front
+    # 2-hop candidate pool (no read-after-write dependency), so the whole
+    # pass vectorizes: one [M, C] distance block, vmapped dedup/top-M, and
+    # one bulk `puts` for the M rewritten rows.
     found, n1, _ = lsm.get(cfg.lsm_cfg, state.store, i)
     n1 = jnp.where(found, n1, -1)                               # [M]
     n1_safe = jnp.maximum(n1, 0)
     _, rows, _ = lsm.get_batch(cfg.lsm_cfg, state.store, n1_safe)  # [M, M]
-    cand = jnp.concatenate([rows.reshape(-1), n1])              # [M*M + M]
-    store = state.store
-    n_vec = jnp.zeros((), jnp.int32)
-    for jj in range(cfg.M):
-        p = n1[jj]
-        ok = p >= 0
-        p_safe = jnp.maximum(p, 0)
-        d = jnp.sum((state.vectors[jnp.maximum(cand, 0)]
-                     - state.vectors[p_safe][None, :]) ** 2, axis=-1)
-        bad = (cand < 0) | (cand == i) | (cand == p) \
-            | (state.levels[jnp.maximum(cand, 0)] < 0)
-        d = jnp.where(bad, INF, d)
-        d = _dedup_to_inf(jnp.where(bad, -1, cand), d)
-        new_row, _ = _topm(cand, d, cfg.M)
-        store = _put_masked(cfg, store, p_safe, new_row, ok)
-        n_vec = n_vec + jnp.sum(jnp.isfinite(d)).astype(jnp.int32)
+    cand = jnp.concatenate([rows.reshape(-1), n1])              # C = M*M + M
+    d = jnp.sum((state.vectors[jnp.maximum(cand, 0)][None, :, :]
+                 - state.vectors[n1_safe][:, None, :]) ** 2, axis=-1)
+    bad = (cand[None, :] < 0) | (cand[None, :] == i) \
+        | (cand[None, :] == n1[:, None]) \
+        | (state.levels[jnp.maximum(cand, 0)][None, :] < 0)
+    d = jnp.where(bad, INF, d)
+    masked_ids = jnp.where(bad, -1, jnp.broadcast_to(cand, bad.shape))
+    d = jax.vmap(_dedup_to_inf)(masked_ids, d)
+    new_rows, _ = jax.vmap(lambda dd: _topm(cand, dd, cfg.M))(d)
+    dead = jnp.asarray(cfg.cap, jnp.int32)
+    store = lsm.puts(cfg.lsm_cfg, state.store,
+                     jnp.where(n1 >= 0, n1_safe, dead), new_rows)
+    n_vec = jnp.sum(jnp.isfinite(d)).astype(jnp.int32)
     store = lsm.delete(cfg.lsm_cfg, store, i)
 
     was_live = state.levels[i] >= 0

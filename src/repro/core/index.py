@@ -47,6 +47,11 @@ def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
 class LSMVecIndex:
     """Dynamic disk-based vector index (LSM-VEC)."""
 
+    #: below this many live nodes, insert_batch falls back to per-item
+    #: inserts: the batched pipeline searches the pre-batch graph snapshot,
+    #: which must exist for the new nodes to link into (DESIGN.md §4)
+    BATCH_MIN_GRAPH = 64
+
     def __init__(self, cfg: hnsw.HNSWConfig, seed: int = 0,
                  state: Optional[hnsw.HNSWState] = None):
         self.cfg = cfg
@@ -54,6 +59,9 @@ class LSMVecIndex:
             cfg, jax.random.key(seed))
         self._rng = jax.random.key(seed + 1)
         self.stats = IOStats.zero()
+        # host mirror of state.count: id allocation and maintenance never
+        # pay a device sync on the hot path
+        self._count = int(self.state.count)
 
         cfg_ = self.cfg
 
@@ -62,14 +70,23 @@ class LSMVecIndex:
             return hnsw.insert(cfg_, state, x, key)
 
         @functools.partial(jax.jit, donate_argnums=0)
+        def _insert_batch(state, xs, keys):
+            return hnsw.insert_batch(cfg_, state, xs, keys)
+
+        @functools.partial(jax.jit, donate_argnums=0)
         def _delete(state, i):
             return hnsw.delete(cfg_, state, i)
 
+        @functools.partial(jax.jit, donate_argnums=0)
+        def _delete_batch(state, ids):
+            return hnsw.delete_batch(cfg_, state, ids)
+
         @functools.partial(jax.jit, static_argnames=("rho", "use_filter",
-                                                     "ef"))
-        def _search(state, qs, rho, use_filter, ef):
+                                                     "ef", "n_expand"))
+        def _search(state, qs, rho, use_filter, ef, n_expand):
             res = hnsw.search_batch(cfg_, state, qs, rho=rho,
-                                    use_filter=use_filter, ef=ef)
+                                    use_filter=use_filter, ef=ef,
+                                    n_expand=n_expand)
             heat_delta = _heat_delta(state, res)
             return res, heat_delta
 
@@ -82,7 +99,9 @@ class LSMVecIndex:
                 contrib.astype(jnp.int32))
 
         self._insert_fn = _insert
+        self._insert_batch_fn = _insert_batch
         self._delete_fn = _delete
+        self._delete_batch_fn = _delete_batch
         self._search_fn = _search
 
     # -- construction ---------------------------------------------------------
@@ -99,38 +118,78 @@ class LSMVecIndex:
     def insert(self, x) -> int:
         """Insert one vector; returns its id."""
         self._rng, sub = jax.random.split(self._rng)
-        new_id = int(self.state.count)
+        new_id = self._count
         self.state, st = self._insert_fn(
             self.state, jnp.asarray(x, jnp.float32), sub)
+        self._count += 1
         self.stats = self.stats + st
         return new_id
 
     def insert_batch(self, xs) -> list[int]:
-        return [self.insert(x) for x in np.asarray(xs)]
+        """Insert a batch in one jit'd device call; returns the new ids.
+
+        The whole batch is dispatched as a single donated-buffer
+        `hnsw.insert_batch` (vmapped candidate search + scanned writes)
+        with zero per-item host syncs.  While the graph is smaller than
+        BATCH_MIN_GRAPH the leading items fall back to per-item inserts so
+        the batch pipeline always has a snapshot to search.  Note the jit
+        specializes on batch length; feed fixed-size batches for best
+        throughput.
+        """
+        xs = np.asarray(xs, np.float32)
+        if xs.size == 0:
+            return []
+        xs = np.atleast_2d(xs)
+        # guard on *live* size, not allocated ids: a graph emptied by
+        # deletes must re-seed per-item too (one scalar sync per batch
+        # call, never per item)
+        n_seed = max(0, min(len(xs), self.BATCH_MIN_GRAPH - self.size))
+        ids = [self.insert(x) for x in xs[:n_seed]]
+        rest = xs[n_seed:]
+        if len(rest) == 0:
+            return ids
+        self._rng, sub = jax.random.split(self._rng)
+        keys = jax.random.split(sub, len(rest))
+        ids.extend(range(self._count, self._count + len(rest)))
+        self.state, st = self._insert_batch_fn(
+            self.state, jnp.asarray(rest), keys)
+        self._count += len(rest)
+        self.stats = self.stats + st
+        return ids
 
     def delete(self, node_id: int) -> None:
         self.state, st = self._delete_fn(self.state, jnp.asarray(node_id))
         self.stats = self.stats + st
 
     def delete_batch(self, ids) -> None:
-        for i in ids:
-            self.delete(int(i))
+        """Delete a batch of ids in one jit'd `lax.scan` device call."""
+        ids = np.atleast_1d(np.asarray(ids, np.int32))
+        if len(ids) == 0:
+            return
+        self.state, st = self._delete_batch_fn(self.state, jnp.asarray(ids))
+        self.stats = self.stats + st
 
     # -- search ---------------------------------------------------------------
 
     def search(self, queries, k: Optional[int] = None, *,
                rho: Optional[float] = None, ef: Optional[int] = None,
                use_filter: Optional[bool] = None,
+               n_expand: Optional[int] = None,
                record_heat: bool = True) -> Tuple[np.ndarray, np.ndarray]:
-        """Batched ANN search.  queries [B, dim] -> (ids [B, k], dists)."""
+        """Batched ANN search.  queries [B, dim] -> (ids [B, k], dists).
+
+        `n_expand` > 1 expands that many frontier nodes per beam iteration
+        (multi-expansion); 1 is the classic exact-parity path.
+        """
         cfg = self.cfg
         k = k or cfg.k
         rho = cfg.rho if rho is None else float(rho)
         use_filter = cfg.use_filter if use_filter is None else use_filter
         ef = ef or cfg.ef_search
+        n_expand = cfg.n_expand if n_expand is None else int(n_expand)
         qs = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         res, heat_delta = self._search_fn(self.state, qs, rho, use_filter,
-                                          ef)
+                                          ef, n_expand)
         if record_heat:
             self.state = self.state._replace(
                 heat=self.state.heat + heat_delta)
@@ -142,7 +201,7 @@ class LSMVecIndex:
 
     def reorder(self, *, window: int = 8, lam: float = 1.0) -> np.ndarray:
         """Connectivity-aware relayout (§3.4), applied at compaction."""
-        n = int(self.state.count)
+        n = self._count
         live, rows = lsm.resolve_all(self.cfg.lsm_cfg, self.state.store, n)
         live_np = np.asarray(live).astype(bool) & (
             np.asarray(self.state.levels[:n]) >= 0)

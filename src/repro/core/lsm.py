@@ -161,26 +161,31 @@ def flush(cfg: LSMConfig, st: LSMState) -> LSMState:
         cfg.level_caps[0], drop_tombstones=(cfg.num_levels == 1))
 
     n_comp = st.n_compactions
-    # cascade: if level i exceeds a fill threshold, merge it into i+1
+    # cascade: if level i exceeds a fill threshold, merge it into i+1.
+    # The merge runs under lax.cond, not a where-select: compactions are
+    # rare (every ~fanout flushes) but the merge sorts the *target* level,
+    # so computing it unconditionally would put an O(cap_{i+1} log) sort
+    # on every flush — measured as the dominant cost of bulk update
+    # batches before this gate.
     for i in range(cfg.num_levels - 1):
         thresh = int(cfg.level_caps[i] * 0.75)
         need = lc[i] > thresh
         last = (i + 1 == cfg.num_levels - 1)
-        merged = _merge_runs(lk[i], lv[i], ll[i], lc[i],
-                             lk[i + 1], lv[i + 1], ll[i + 1], lc[i + 1],
-                             cfg.level_caps[i + 1], drop_tombstones=last)
-        mk, mv_, ml_, mc, _ = merged
-        empty_k = jnp.full_like(lk[i], PAD_KEY)
-        empty_v = jnp.full_like(lv[i], EMPTY)
-        empty_l = jnp.zeros_like(ll[i])
-        lk[i + 1] = jnp.where(need, mk, lk[i + 1])
-        lv[i + 1] = jnp.where(need, mv_, lv[i + 1])
-        ll[i + 1] = jnp.where(need, ml_, ll[i + 1])
-        lc[i + 1] = jnp.where(need, mc, lc[i + 1])
-        lk[i] = jnp.where(need, empty_k, lk[i])
-        lv[i] = jnp.where(need, empty_v, lv[i])
-        ll[i] = jnp.where(need, empty_l, ll[i])
-        lc[i] = jnp.where(need, 0, lc[i])
+
+        def do_merge(args, i=i, last=last):
+            ki, vi, li, ci, kj, vj, lj, cj = args
+            mk, mv_, ml_, mc, _ = _merge_runs(
+                ki, vi, li, ci, kj, vj, lj, cj,
+                cfg.level_caps[i + 1], drop_tombstones=last)
+            return (jnp.full_like(ki, PAD_KEY), jnp.full_like(vi, EMPTY),
+                    jnp.zeros_like(li), jnp.zeros_like(ci),
+                    mk, mv_, ml_, mc)
+
+        (lk[i], lv[i], ll[i], lc[i],
+         lk[i + 1], lv[i + 1], ll[i + 1], lc[i + 1]) = jax.lax.cond(
+            need, do_merge, lambda args: args,
+            (lk[i], lv[i], ll[i], lc[i],
+             lk[i + 1], lv[i + 1], ll[i + 1], lc[i + 1]))
         n_comp = n_comp + need.astype(jnp.int32)
 
     return st._replace(
@@ -265,12 +270,45 @@ def get_batch(cfg: LSMConfig, st: LSMState, keys):
     return jax.vmap(lambda k: get(cfg, st, k))(keys)
 
 
-def puts(cfg: LSMConfig, st: LSMState, keys, vals) -> LSMState:
-    """Sequential batch put (scan) — preserves newest-wins ordering."""
-    def body(s, kv):
-        k, v = kv
-        return put(cfg, s, k, v), None
-    st, _ = jax.lax.scan(body, st, (keys, vals))
+def _append_run(cfg: LSMConfig, st: LSMState, keys, vals, lives) -> LSMState:
+    """Append one batch (size <= mem_cap) to the memtable in a single
+    vectorized scatter, flushing around it as needed."""
+    b = keys.shape[0]
+    # pre-flush so the whole batch fits ...
+    st = jax.lax.cond(st.mem_count + b > cfg.mem_cap,
+                      lambda s: flush(cfg, s), lambda s: s, st)
+    slots = st.mem_count + jnp.arange(b)
+    st = st._replace(
+        mem_keys=st.mem_keys.at[slots].set(keys),
+        mem_vals=st.mem_vals.at[slots].set(vals),
+        mem_live=st.mem_live.at[slots].set(lives),
+        mem_count=st.mem_count + b,
+        write_seq=st.write_seq + b)
+    # ... post-flush to restore the `mem_count < mem_cap` rest invariant
+    # that point puts rely on for their append slot
+    return jax.lax.cond(st.mem_count >= cfg.mem_cap,
+                        lambda s: flush(cfg, s), lambda s: s, st)
+
+
+def puts(cfg: LSMConfig, st: LSMState, keys, vals, lives=None) -> LSMState:
+    """Bulk put: one vectorized memtable append per mem_cap-sized chunk.
+
+    Semantically equivalent to sequential `put` calls — newest-wins is by
+    slot order, so duplicate keys within the batch resolve to the later
+    entry — but the flush check runs once per chunk instead of once per
+    key: the tree flushes *before* a chunk that would overflow rather than
+    exactly at the high-water mark.  `lives` (int8, default all-1) writes
+    tombstones where 0, making this the bulk form of `delete` too.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    vals = jnp.asarray(vals, jnp.int32)
+    if lives is None:
+        lives = jnp.ones(keys.shape, jnp.int8)
+    else:
+        lives = jnp.asarray(lives, jnp.int8)
+    for s in range(0, keys.shape[0], cfg.mem_cap):
+        st = _append_run(cfg, st, keys[s:s + cfg.mem_cap],
+                         vals[s:s + cfg.mem_cap], lives[s:s + cfg.mem_cap])
     return st
 
 

@@ -16,6 +16,13 @@ Implementation notes (TPU adaptation — DESIGN.md §2):
  - Edge-heat is recorded per hop as (node, fetched-mask) pairs so the
    caller can build the reordering heatmap (§3.4) without carrying a
    [cap, M] array through the loop.
+ - Multi-expansion (DESIGN.md §3): `n_expand` (B) frontier nodes are
+   popped per iteration, their adjacency rows are read through one
+   batched LSM lookup, and the SimHash prefilter plus the fused
+   gather+distance kernel run over the whole B*M candidate block before a
+   single merge.  This cuts the `while_loop` trip count ~B× and makes
+   each distance call wide enough to feed the MXU.  B=1 reproduces the
+   classic one-node-per-hop search exactly.
 """
 
 from __future__ import annotations
@@ -36,8 +43,11 @@ class BeamResult(NamedTuple):
     ids: jax.Array       # int32[ef] — best ids found, ascending distance
     dists: jax.Array     # f32[ef]
     stats: IOStats
-    heat_nodes: jax.Array   # int32[max_iters] — expanded node per hop (-1 pad)
-    heat_mask: jax.Array    # bool[max_iters, M] — fetched slots per hop
+    # heat arrays have length iter_cap * n_expand, where iter_cap =
+    # min(max_iters, ceil(max_iters / n_expand) + 3); for n_expand=1 that
+    # is max_iters.  Callers reshape with (-1, ...), never a fixed size.
+    heat_nodes: jax.Array   # int32[iter_cap * n_expand] — expanded nodes (-1 pad)
+    heat_mask: jax.Array    # bool[iter_cap * n_expand, M] — fetched slots per hop
 
 
 def _rank_desc(score: jax.Array) -> jax.Array:
@@ -50,8 +60,8 @@ def beam_search(
     q: jax.Array,                    # f32[dim]
     entry: jax.Array,                # int32[] — entry node id
     entry_dist: jax.Array,           # f32[] — distance(q, entry)
-    adj_fn: Callable,                # id -> (row int32[M], n_probes int32)
-    dist_fn: Callable,               # ids int32[M] -> f32[M] (inf for id<0)
+    adj_fn: Callable,                # ids int32[B] -> (rows int32[B, M], probes int32[B])
+    dist_fn: Callable,               # ids int32[n] -> f32[n] (inf for id<0)
     codes: jax.Array,                # uint32[cap, W] in-memory hash codes
     code_q: jax.Array,               # uint32[W]
     live: jax.Array,                 # bool[cap] — node liveness
@@ -66,16 +76,38 @@ def beam_search(
     use_filter: bool,
     q_norm: jax.Array,               # f32[]
     mean_norm: jax.Array,            # f32[]
+    n_expand: int = 1,               # B: frontier nodes expanded per iteration
 ) -> BeamResult:
-    """Single-query sampling-guided beam search.  vmap over queries."""
-    M = adj_fn(jnp.int32(0))[0].shape[0]
+    """Single-query sampling-guided beam search.  vmap over queries.
+
+    `adj_fn` is the *batched* adjacency reader: it takes the B popped node
+    ids at once (-1 for inactive expansion slots, which must yield all -1
+    rows) so the storage layer can serve the whole frontier block in one
+    lookup (`lsm.get_batch`) instead of B point reads.
+
+    `max_iters` budgets *expansions*, not loop trips: with B > 1 an
+    iteration can pop fewer than B nodes when the frontier is thin (the
+    first hops always are), so trip-count budgeting would starve wide
+    beams.  The loop runs until the expansion budget or the frontier is
+    exhausted; for B=1 expansions == iterations, the seed semantics.
+    """
+    B = max(1, min(n_expand, ef))
+    M = adj_fn(jnp.zeros((B,), jnp.int32))[0].shape[1]
+    # trip cap: budget/B trips suffice once the frontier is B wide, plus
+    # slack for the thin ramp-up hops (the frontier grows ~M-fold per
+    # trip, so 3 trips reach any B <= M^3).  Without the cap a single
+    # thin-but-alive straggler would drag a vmapped batch through up to
+    # `max_iters` trips.  B=1 keeps the exact seed cap.  Heat storage is
+    # sized to the cap, so every trip records.
+    iter_cap = min(max_iters, -(-max_iters // B) + 3)
+    heat_len = iter_cap
 
     beam_ids = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
     beam_d = jnp.full((ef,), INF, jnp.float32).at[0].set(entry_dist)
     expanded = jnp.zeros((ef,), jnp.bool_)
     visited = jnp.zeros((cap + 1,), jnp.bool_).at[entry].set(True)
-    heat_nodes = jnp.full((max_iters,), -1, jnp.int32)
-    heat_mask = jnp.zeros((max_iters, M), jnp.bool_)
+    heat_nodes = jnp.full((heat_len, B), -1, jnp.int32)
+    heat_mask = jnp.zeros((heat_len, B, M), jnp.bool_)
     stats = IOStats.zero()
     # entry vector was fetched to compute entry_dist
     stats = stats._replace(n_vec=stats.n_vec + 1)
@@ -87,30 +119,50 @@ def beam_search(
     fidx = min(ef, 3 * k) - 1
 
     def cond(carry):
-        it, beam_ids, beam_d, expanded, *_ = carry
+        it, beam_ids, beam_d, expanded, _, stats, *_ = carry
         thresh = beam_d[fidx]
         frontier = (~expanded) & jnp.isfinite(beam_d) & (beam_d <= thresh)
-        return (it < max_iters) & jnp.any(frontier)
+        return (it < iter_cap) & (stats.n_hops < max_iters) \
+            & jnp.any(frontier)
 
     def body(carry):
         (it, beam_ids, beam_d, expanded, visited, stats,
          heat_nodes, heat_mask) = carry
 
-        # -- pop the closest unexpanded candidate --------------------------
+        # -- pop the B closest unexpanded candidates -----------------------
         frontier_d = jnp.where(expanded, INF, beam_d)
-        slot = jnp.argmin(frontier_d)
-        node = beam_ids[slot]
-        expanded = expanded.at[slot].set(True)
+        thresh = beam_d[fidx]
+        if B == 1:
+            slots = jnp.argmin(frontier_d)[None]
+        else:
+            # top_k, not a full sort: ties resolve to the lower slot, same
+            # as the stable argmin pop
+            _, slots = jax.lax.top_k(-frontier_d, B)
+        sel_d = frontier_d[slots]
+        # extras past the frontier threshold would never be expanded by the
+        # B=1 loop (the threshold only tightens) — keep them inert
+        active = jnp.isfinite(sel_d) & (sel_d <= thresh)
+        expanded = expanded.at[slots].set(expanded[slots] | active)
+        nodes = jnp.where(active, beam_ids[slots], -1)
 
-        # -- adjacency read (t_n) ------------------------------------------
-        row, n_probes = adj_fn(node)
+        # -- batched adjacency read (t_n) ----------------------------------
+        rows, n_probes = adj_fn(nodes)                  # [B, M], [B]
+        row = rows.reshape(B * M)
         valid = (row >= 0) & (row <= cap - 1)
         safe = jnp.where(valid, row, cap)
         seen = visited[safe]
         alive = jnp.where(valid, live[jnp.minimum(safe, cap - 1)], False)
         eligible = valid & (~seen) & alive
+        if B > 1:
+            # duplicates across the B rows would enter the beam twice
+            # (visited is only updated after the block): keep the first
+            # occurrence of each id within the block.  An O((BM)^2)
+            # comparison triangle beats sort+scatter at these widths.
+            eq = safe[None, :] == safe[:, None]
+            earlier = jnp.tril(eq, k=-1)
+            eligible = eligible & ~jnp.any(earlier, axis=1)
 
-        # -- SimHash prefilter (Eq. 5-6), in-memory ------------------------
+        # -- SimHash prefilter (Eq. 5-6), in-memory, whole block -----------
         cand_codes = codes[jnp.minimum(safe, cap - 1)]
         cols = simhash.collisions(code_q[None, :], cand_codes, m_bits)
         delta_sq = beam_d[k - 1]
@@ -124,36 +176,42 @@ def beam_search(
 
         # -- sampling cap (Eq. 8): evaluate only rho of the survivors,
         #    keeping the most-colliding ones ------------------------------
-        score = jnp.where(pre_mask, cols, -1)
-        rank = _rank_desc(score)
-        n_elig = jnp.sum(pre_mask)
-        cap_dyn = jnp.ceil(rho * n_elig).astype(jnp.int32)
-        fetch_mask = pre_mask & (rank < cap_dyn)
+        if isinstance(rho, (int, float)) and rho >= 1.0:
+            # static fast path: everything eligible is fetched, so the two
+            # ranking argsorts vanish from the loop body
+            fetch_mask = pre_mask
+        else:
+            score = jnp.where(pre_mask, cols, -1)
+            rank = _rank_desc(score)
+            n_elig = jnp.sum(pre_mask)
+            cap_dyn = jnp.ceil(rho * n_elig).astype(jnp.int32)
+            fetch_mask = pre_mask & (rank < cap_dyn)
         fetch_ids = jnp.where(fetch_mask, row, -1)
 
-        # -- vector fetches (t_v each) + distance --------------------------
+        # -- one fused gather+distance call over the B*M block (t_v each) --
         dists = dist_fn(fetch_ids)
 
         # -- bookkeeping ----------------------------------------------------
         visited = visited.at[jnp.where(fetch_mask, safe, cap)].set(True)
         n_fetch = jnp.sum(fetch_mask).astype(jnp.int32)
         stats = IOStats(
-            n_adj=stats.n_adj + n_probes,
+            n_adj=stats.n_adj + jnp.sum(jnp.where(active, n_probes, 0)),
             n_vec=stats.n_vec + n_fetch,
             n_filtered=stats.n_filtered
             + jnp.sum(eligible).astype(jnp.int32) - n_fetch,
-            n_hops=stats.n_hops + 1,
+            n_hops=stats.n_hops + jnp.sum(active).astype(jnp.int32),
         )
-        heat_nodes = heat_nodes.at[it].set(node)
-        heat_mask = heat_mask.at[it].set(fetch_mask)
+        heat_nodes = heat_nodes.at[it].set(nodes)
+        heat_mask = heat_mask.at[it].set(fetch_mask.reshape(B, M))
 
-        # -- merge fetched neighbors into the beam --------------------------
+        # -- single merge of the whole block into the beam ------------------
         all_ids = jnp.concatenate([beam_ids, fetch_ids])
         all_d = jnp.concatenate([beam_d, dists])
-        all_exp = jnp.concatenate([expanded, jnp.ones((M,), jnp.bool_)])
+        all_exp = jnp.concatenate([expanded, jnp.ones((B * M,), jnp.bool_)])
         # new candidates are unexpanded; mark masked ones expanded (inert)
         all_exp = all_exp.at[ef:].set(~fetch_mask)
-        order = jnp.argsort(all_d, stable=True)[:ef]
+        # top_k == stable argsort prefix here: ties prefer the lower index
+        _, order = jax.lax.top_k(-all_d, ef)
         return (it + 1, all_ids[order], all_d[order], all_exp[order],
                 visited, stats, heat_nodes, heat_mask)
 
@@ -161,7 +219,9 @@ def beam_search(
             heat_nodes, heat_mask)
     (_, beam_ids, beam_d, _, _, stats, heat_nodes, heat_mask) = \
         jax.lax.while_loop(cond, body, init)
-    return BeamResult(beam_ids, beam_d, stats, heat_nodes, heat_mask)
+    return BeamResult(beam_ids, beam_d, stats,
+                      heat_nodes.reshape(heat_len * B),
+                      heat_mask.reshape(heat_len * B, M))
 
 
 def greedy_descent(

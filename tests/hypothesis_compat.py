@@ -1,0 +1,43 @@
+"""Graceful degradation when `hypothesis` is not installed.
+
+Property-test modules import `given`, `settings`, and `st` from here
+instead of from `hypothesis` directly.  With hypothesis available this is
+a pure re-export; without it the decorators turn each property test into
+a pytest skip (and `st` becomes an inert stub so strategy expressions at
+decoration time still evaluate), letting the plain unit tests in the same
+module run.  Install the real package via the `test` extra:
+`pip install -e .[test]`.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised only without extra
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Accepts any attribute access / call chain and returns itself."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _StrategyStub()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install -e .[test])"
+            )(fn)
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

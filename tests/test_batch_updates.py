@@ -1,0 +1,177 @@
+"""Tests for the batched update pipeline (hnsw.insert_batch /
+delete_batch) and multi-expansion beam search (DESIGN.md §3-§4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hnsw, lsm
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+
+
+def make_data(n, dim=32, seed=0):
+    return make_clustered_vectors(n, dim=dim, seed=seed, clusters=16)
+
+
+CFG = hnsw.HNSWConfig(cap=2048, dim=32, M=12, M_up=6, num_upper=2,
+                      ef_search=48, ef_construction=48, k=10,
+                      rho=1.0, use_filter=False, lsm_mem_cap=128,
+                      lsm_levels=2, lsm_fanout=8, batch_expand=4)
+
+
+@pytest.fixture(scope="module")
+def built_index():
+    data = make_data(768)
+    return LSMVecIndex.build(CFG, data), data
+
+
+def test_insert_batch_ids_size_and_count_mirror():
+    data = make_data(256, seed=1)
+    idx = LSMVecIndex.build(CFG, data)
+    xs = make_data(96, seed=2)
+    ids = idx.insert_batch(xs)
+    assert ids == list(range(256, 256 + 96))
+    assert idx.size == 352
+    assert idx._count == int(idx.state.count) == 352
+
+
+def test_insert_batch_find_self(built_index):
+    idx, data = built_index
+    new = make_data(32, seed=42) + 100.0     # far-away cluster
+    ids = idx.insert_batch(new)
+    found, _ = idx.search(new, k=1)
+    assert set(found[:, 0].tolist()) == set(ids)
+
+
+def test_insert_batch_recall():
+    base = make_data(512, seed=3)
+    extra = make_data(128, seed=4)
+    idx = LSMVecIndex.build(CFG, base)
+    idx.insert_batch(extra)
+    allv = np.concatenate([base, extra])
+    queries = make_data(24, seed=8)
+    ids, _ = idx.search(queries, k=10)
+    truth = brute_force_knn(jnp.asarray(allv), jnp.asarray(queries), 10)
+    r = recall_at_k(ids, truth)
+    assert r >= 0.75, f"post-batch-insert recall {r:.3f}"
+
+
+def test_insert_batch_rows_written_to_lsm():
+    base = make_data(256, seed=5)
+    idx = LSMVecIndex.build(CFG, base)
+    ids = idx.insert_batch(make_data(64, seed=6))
+    live, rows = lsm.resolve_all(CFG.lsm_cfg, idx.state.store, idx._count)
+    live = np.asarray(live)
+    rows = np.asarray(rows)
+    for i in ids:
+        assert live[i] == 1, f"node {i} has no bottom row"
+        assert (rows[i] >= 0).any(), f"node {i} row is empty"
+
+
+def test_insert_batch_cold_start_seeds_per_item():
+    cfg = CFG._replace(cap=512)
+    idx = LSMVecIndex(cfg, seed=0)
+    xs = make_data(96, seed=7)
+    ids = idx.insert_batch(xs)
+    assert ids == list(range(96))
+    assert idx.size == 96
+    found, _ = idx.search(xs[:8], k=1)
+    assert (found[:, 0] == np.arange(8)).mean() >= 0.9
+
+
+def test_delete_batch_matches_sequential_deletes():
+    """delete_batch is a scan of Algorithm 2: bit-identical to the
+    per-item loop over the same ids in the same order."""
+    data = make_data(256, seed=9)
+    idx_a = LSMVecIndex.build(CFG, data)
+    idx_b = LSMVecIndex.build(CFG, data)
+    victims = [3, 77, 150, 9, 201, 42]
+    for v in victims:
+        idx_a.delete(v)
+    idx_b.delete_batch(victims)
+    for name, a, b in zip(hnsw.HNSWState._fields, idx_a.state, idx_b.state):
+        if name == "store":
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+def test_delete_batch_removes_from_results(built_index):
+    idx, _ = built_index
+    queries = make_data(8, seed=10)
+    ids, _ = idx.search(queries, k=1)
+    victims = sorted(set(ids[:, 0].tolist()))
+    idx.delete_batch(victims)
+    ids2, _ = idx.search(queries, k=10)
+    for row in ids2:
+        assert not (set(row.tolist()) & set(victims)), "deleted id returned"
+
+
+def test_multi_expansion_recall_parity(built_index):
+    """n_expand=4 must stay within 0.01 recall of the exact B=1 path and
+    return sorted distances."""
+    idx, data = built_index
+    queries = make_data(32, seed=11)
+    live = np.asarray(idx.state.levels[:len(data)]) >= 0
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
+                            live=jnp.asarray(live))
+    ids1, d1 = idx.search(queries, k=10, n_expand=1)
+    ids4, d4 = idx.search(queries, k=10, n_expand=4)
+    r1 = recall_at_k(ids1, truth)
+    r4 = recall_at_k(ids4, truth)
+    assert abs(r4 - r1) <= 0.01, (r1, r4)
+    for row in d4:
+        assert np.all(np.diff(row) >= -1e-5)
+
+
+def test_multi_expansion_parity_on_damaged_graph():
+    """The trip cap must not starve B>1 searches where the frontier stays
+    thin — a heavily deleted graph is the worst case (searches there
+    terminate by frontier exhaustion, which the cap must not preempt)."""
+    data = make_data(512, seed=20)
+    idx = LSMVecIndex.build(CFG, data)
+    rng = np.random.default_rng(0)
+    victims = rng.choice(512, 200, replace=False)
+    idx.delete_batch(victims)
+    live = np.ones(512, bool)
+    live[victims] = False
+    queries = make_data(24, seed=21)
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
+                            live=jnp.asarray(live))
+    r1 = recall_at_k(idx.search(queries, k=10, n_expand=1)[0], truth)
+    r4 = recall_at_k(idx.search(queries, k=10, n_expand=4)[0], truth)
+    assert r4 >= r1 - 0.01, (r1, r4)
+
+
+def test_multi_expansion_visits_no_fewer_nodes(built_index):
+    """B=4 expands at least as many nodes as B=1 on the same queries
+    (speculative expansions are a superset-ish frontier)."""
+    idx, _ = built_index
+    queries = make_data(16, seed=12)
+    idx.reset_stats()
+    idx.search(queries, k=10, n_expand=1, record_heat=False)
+    hops1 = int(idx.stats.n_hops)
+    idx.reset_stats()
+    idx.search(queries, k=10, n_expand=4, record_heat=False)
+    hops4 = int(idx.stats.n_hops)
+    idx.reset_stats()
+    assert hops4 >= hops1
+
+
+def test_mixed_batch_and_single_updates():
+    """Batched and per-item updates interleave cleanly."""
+    base = make_data(300, seed=13)
+    idx = LSMVecIndex.build(CFG, base)
+    ids = idx.insert_batch(make_data(40, seed=14))
+    one = idx.insert(make_data(1, seed=15)[0])
+    assert one == ids[-1] + 1
+    idx.delete_batch(ids[:10])
+    idx.delete(ids[10])
+    assert idx.size == 300 + 40 + 1 - 11
+    q = make_data(4, seed=16)
+    ids_s, d = idx.search(q, k=5)
+    assert np.isfinite(d).all()

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips gracefully when absent
 
 from repro.kernels.gather_l2.kernel import gather_l2_pallas
 from repro.kernels.gather_l2.ops import gather_l2

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips gracefully when absent
 
 from repro.core import lsm
 
@@ -200,6 +200,92 @@ def test_property_compaction_preserves_view(puts_list):
     for k, v in model.items():
         found, val, _ = lsm.get(cfg, s2, k)
         assert bool(found) and int(val[0]) == v
+
+
+def test_puts_bulk_newest_wins_and_overflow():
+    """Bulk append: later entries win within a batch; chunks > mem_cap
+    flush in between; point `get` sees the merged view."""
+    s = lsm.init(CFG)
+    n = CFG.mem_cap * 3 + 5          # forces several in-call flushes
+    keys = jnp.asarray(np.arange(n) % 10, jnp.int32)
+    vals = jnp.stack([row(i) for i in range(n)])
+    s = lsm.puts(CFG, s, keys, vals)
+    assert int(s.n_flushes) >= 2
+    for k in range(10):
+        last = max(i for i in range(n) if i % 10 == k)
+        found, val, _ = lsm.get(CFG, s, k)
+        assert bool(found) and int(val[0]) == last
+
+
+def test_puts_lives_writes_tombstones():
+    s = lsm.init(CFG)
+    s = lsm.puts(CFG, s, jnp.array([1, 2], jnp.int32),
+                 jnp.stack([row(10), row(20)]))
+    s = lsm.puts(CFG, s, jnp.array([1], jnp.int32), jnp.stack([row(0)]),
+                 lives=jnp.array([0], jnp.int8))
+    assert not bool(lsm.get(CFG, s, 1)[0])
+    assert bool(lsm.get(CFG, s, 2)[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(min_value=0, max_value=30),
+              st.integers(min_value=0, max_value=999)),
+    min_size=1, max_size=80),
+    st.integers(min_value=1, max_value=9))
+def test_property_puts_cascade_dict_equivalence(kvs, chunk):
+    """Bulk `puts` in arbitrary chunk sizes (including > mem_cap, which
+    triggers overflow flush/compaction mid-call) preserves newest-wins
+    against a dict oracle."""
+    cfg = lsm.LSMConfig(mem_cap=4, num_levels=3, fanout=3, row_width=2)
+    s = lsm.init(cfg)
+    model = {}
+    for i in range(0, len(kvs), chunk):
+        part = kvs[i:i + chunk]
+        keys = jnp.asarray([k for k, _ in part], jnp.int32)
+        vals = jnp.asarray([[v, v + 1] for _, v in part], jnp.int32)
+        s = lsm.puts(cfg, s, keys, vals)
+        model.update(part)
+    for k in range(31):
+        found, val, _ = lsm.get(cfg, s, k)
+        if k in model:
+            assert bool(found) and int(val[0]) == model[k]
+        else:
+            assert not bool(found)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["put", "del"]),
+              st.integers(min_value=0, max_value=25),
+              st.integers(min_value=0, max_value=999)),
+    min_size=1, max_size=60))
+def test_property_get_batch_matches_get_mixed_trace(ops):
+    """`get_batch` agrees with per-key `get` (and the dict oracle) after
+    an arbitrary interleaving of bulk puts and deletes."""
+    cfg = lsm.LSMConfig(mem_cap=4, num_levels=3, fanout=3, row_width=2)
+    s = lsm.init(cfg)
+    model = {}
+    for i in range(0, len(ops), 5):
+        part = ops[i:i + 5]
+        keys = jnp.asarray([k for _, k, _ in part], jnp.int32)
+        vals = jnp.asarray([[v, v] for _, _, v in part], jnp.int32)
+        lives = jnp.asarray([1 if op == "put" else 0 for op, _, _ in part],
+                            jnp.int8)
+        s = lsm.puts(cfg, s, keys, vals, lives=lives)
+        for op, k, v in part:
+            if op == "put":
+                model[k] = v
+            else:
+                model.pop(k, None)
+    probe = jnp.arange(26, dtype=jnp.int32)
+    f_b, v_b, _ = lsm.get_batch(cfg, s, probe)
+    for k in range(26):
+        f, v, _ = lsm.get(cfg, s, k)
+        assert bool(f_b[k]) == bool(f) == (k in model)
+        np.testing.assert_array_equal(np.asarray(v_b[k]), np.asarray(v))
+        if k in model:
+            assert int(v_b[k][0]) == model[k]
 
 
 def test_resolve_all_dense_view():

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips gracefully when absent
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data.synth import token_pipeline
