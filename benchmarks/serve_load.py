@@ -1,0 +1,330 @@
+"""Sustained mixed-workload serving benchmark (DESIGN.md §8).
+
+Drives the `repro.serve` engine with an interleaved 80/10/10
+query/insert/delete stream in saturation (every request pre-enqueued,
+relaxed coalescing) and records:
+
+  - **serve_qps** — queries completed / total drain wall, i.e. query
+    throughput *while also absorbing the write stream* and any
+    threshold-triggered LSM compactions;
+  - **fixed_batch_qps** — the PR-1 reference path measured in-run: direct
+    fixed-shape `LSMVecIndex.search` batches (no scheduler, no writes) on
+    the same machine and index;
+  - **zero-retrace proof** — jit trace counts per entry point are
+    snapshotted after warmup and must not grow during the load phase
+    (fixed pad shapes mean ragged micro-batches reuse one traced shape);
+  - **recall parity** — a held-out query set evaluated through the engine
+    vs the same op stream applied per-item to a bare index (the
+    sequential baseline), both against brute force over the final live
+    set.
+
+Results go to ``BENCH_serve.json``.  ``--smoke`` runs a tiny instance and
+validates the schema only (the CI mode), like ``throughput.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+
+from repro.core import hnsw                                    # noqa: E402
+from repro.core.index import (LSMVecIndex, brute_force_knn,    # noqa: E402
+                              recall_at_k)
+from repro.data.synth import make_clustered_vectors            # noqa: E402
+from repro.serve import (MaintenancePolicy, Op, ServeConfig,   # noqa: E402
+                         ServeEngine)
+
+SCHEMA = {
+    "meta": ("mode", "backend", "n_base", "n_ops", "mix", "dim", "batch",
+             "n_expand", "serve_query_batch", "serve_n_expand", "config"),
+    "serve": ("qps", "insert_ops_s", "delete_ops_s", "query_p50_ms",
+              "query_p99_ms", "mean_query_batch", "snapshot_resolves",
+              "compactions", "wall_s"),
+    "baseline": ("fixed_batch_qps", "qps_ratio"),
+    "recall": ("serve", "sequential", "delta"),
+    "retraces": ("after_warmup", "after_load", "new_during_load"),
+    "criteria": ("zero_retraces_after_warmup", "qps_within_10pct_of_fixed",
+                 "recall_within_0p01"),
+}
+
+
+def validate_schema(doc: dict) -> None:
+    """Raise ValueError unless `doc` matches the BENCH_serve schema."""
+    for section, fields in SCHEMA.items():
+        if section not in doc:
+            raise ValueError(f"missing section {section!r}")
+        for f in fields:
+            if f not in doc[section]:
+                raise ValueError(f"missing field {section}.{f}")
+    for section in ("serve", "baseline", "recall"):
+        for f, v in doc[section].items():
+            if not isinstance(v, (int, float)) or not np.isfinite(v):
+                raise ValueError(f"non-finite {section}.{f}: {v!r}")
+    for f, v in doc["retraces"].items():
+        if not isinstance(v, dict) and not isinstance(v, int):
+            raise ValueError(f"retraces.{f} must be dict|int, got {v!r}")
+    for f, v in doc["criteria"].items():
+        if not isinstance(v, bool):
+            raise ValueError(f"criteria.{f} must be bool, got {v!r}")
+
+
+def _cfg(dim: int, cap: int) -> hnsw.HNSWConfig:
+    # the BENCH_throughput instance shape, so qps numbers are comparable
+    return hnsw.HNSWConfig(
+        cap=cap, dim=dim, M=12, M_up=6, num_upper=2, ef_search=48,
+        ef_construction=48, k=10, m_bits=64, rho=1.0, eps=0.1,
+        use_filter=False, lsm_mem_cap=256, lsm_levels=2, lsm_fanout=8,
+        n_expand=1, batch_expand=4)
+
+
+def make_stream(rng, n_ops: int, n_base: int, fresh: np.ndarray,
+                base: np.ndarray):
+    """80/10/10 interleaved stream; deletes target distinct base ids."""
+    stream = []
+    victims = list(rng.permutation(n_base))
+    fi = 0
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.8 or (r >= 0.9 and not victims) or (r < 0.9 and
+                                                     fi >= len(fresh)):
+            stream.append(("q", base[rng.integers(0, n_base)]))
+        elif r < 0.9:
+            stream.append(("i", fresh[fi]))
+            fi += 1
+        else:
+            stream.append(("d", int(victims.pop())))
+    return stream
+
+
+SERVE_TRIALS = 2  # best-of-N full load drains (fresh index copy each):
+                  # the reference takes its best trial, so the serve side
+                  # must get the same chance against container jitter
+
+
+def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
+        n_expand: int, mode: str) -> dict:
+    rng = np.random.default_rng(seed)
+    n_fresh = max(n_ops // 8, 8)
+    cap = n_base + n_fresh + 4 * batch + 64
+    cfg = _cfg(dim, cap)
+    base = make_clustered_vectors(n_base, dim=dim, seed=seed)
+    fresh = make_clustered_vectors(n_fresh, dim=dim, seed=seed + 1)
+    stream = make_stream(rng, n_ops, n_base, fresh, base)
+    mix = {op: round(sum(1 for o, _ in stream if o == op) / n_ops, 3)
+           for op in ("q", "i", "d")}
+
+    # Serving configuration: query micro-batches coalesce 4x wider than
+    # the write pad width (at saturation the scheduler's advantage is
+    # filling large fixed shapes from the backlog), and beams expand 2x
+    # wider than the reference path — on a churn-damaged graph the
+    # vmapped batch runs as long as its slowest lane, and wider expansion
+    # halves the straggler trip count.  Recall is guarded by the
+    # sequential-baseline criterion below.
+    serve_cfg = ServeConfig(
+        query_batch=4 * batch, insert_batch=batch, delete_batch=batch,
+        query_window=0.0, insert_window=0.0, delete_window=0.0,
+        strict_order=False, n_expand=2 * n_expand,
+        maintenance=MaintenancePolicy(tombstone_ratio=0.25, heat_budget=None,
+                                      check_every=8))
+    state0 = LSMVecIndex.build(cfg, base).state
+    warm_vecs = make_clustered_vectors(3, dim=dim, seed=seed + 9)
+    n_warm = len(warm_vecs)
+
+    wall = float("inf")
+    idx = eng = warm_traces = load_traces = None
+    for _ in range(SERVE_TRIALS):
+        # fresh copy: the previous trial's donated jits consumed its state
+        idx_t = LSMVecIndex(cfg, state=jax.tree.map(jnp.copy, state0))
+        eng_t = ServeEngine(idx_t, serve_cfg)
+
+        # warmup: compile every serving shape outside the timed region.
+        # The warmup inserts are deleted again right away, so the index
+        # content entering the load phase is exactly `base` (only the id
+        # space advanced by n_warm) — the recall accounting relies on it.
+        warm_ids = [eng_t.submit_insert(v) for v in warm_vecs]
+        for i in range(5):
+            eng_t.submit_query(base[i])
+        eng_t.drain()
+        for t in warm_ids:
+            eng_t.submit_delete(t.result())
+        eng_t.drain()
+        jax.block_until_ready(idx_t.state.count)
+        warm_t = dict(idx_t.trace_counts())
+
+        # the load phase: saturation drain of the interleaved stream
+        for op, payload in stream:
+            if op == "q":
+                eng_t.submit_query(payload)
+            elif op == "i":
+                eng_t.submit_insert(payload)
+            else:
+                eng_t.submit_delete(payload)
+        t0 = time.monotonic()
+        eng_t.drain()
+        jax.block_until_ready(idx_t.state.count)
+        wall_t = time.monotonic() - t0
+        if wall_t < wall:
+            wall = wall_t
+        # keep the last trial's artifacts for the recall/reference phases
+        idx, eng = idx_t, eng_t
+        warm_traces, load_traces = warm_t, dict(idx_t.trace_counts())
+
+    new_traces = {k: load_traces[k] - warm_traces.get(k, 0)
+                  for k in load_traces if load_traces[k]
+                  != warm_traces.get(k, 0)}
+
+    # ---- fixed-batch reference QPS (the PR-1 path): measured on the SAME
+    # post-churn index, same query distribution and same statistical
+    # footing as the serve drain — one pass over as many distinct queries
+    # as the stream carried, best of SERVE_TRIALS passes.  The ratio then
+    # isolates the serving layer (scheduling + padding + snapshot reads +
+    # absorbed writes) from workload-inherent graph damage and container
+    # jitter alike.
+    n_stream_q = sum(1 for o, _ in stream if o == "q")
+    n_fixed_batches = max(n_stream_q // batch, 1)
+    fixed_pool = base[rng.integers(0, n_base,
+                                   size=n_fixed_batches * batch)]
+    idx.search(fixed_pool[:batch], k=cfg.k, n_expand=n_expand)  # compile
+    dt_fixed = float("inf")
+    for _ in range(SERVE_TRIALS):
+        t0 = time.monotonic()
+        for b in range(n_fixed_batches):
+            idx.search(fixed_pool[b * batch:(b + 1) * batch], k=cfg.k,
+                       n_expand=n_expand, record_heat=False)
+        jax.block_until_ready(idx.state.count)
+        dt_fixed = min(dt_fixed, time.monotonic() - t0)
+    fixed_qps = n_fixed_batches * batch / dt_fixed
+
+    m = eng.metrics.snapshot()
+    serve_qps = n_stream_q / wall
+
+    # ---- recall: engine vs the sequential per-item baseline --------------
+    # Same op stream applied one-by-one to a bare index (the sequential
+    # reference), then one shared eval query set through both.  The serve
+    # index's id space carries the 3 (deleted) warmup inserts, so its
+    # ground truth is built in its own id space.
+    idx_seq = LSMVecIndex.build(cfg, base)
+    live = np.ones(n_base + n_fresh, bool)
+    n_ins = 0
+    for op, payload in stream:
+        if op == "i":
+            idx_seq.insert(payload)
+            n_ins += 1
+        elif op == "d":
+            idx_seq.delete(payload)
+            live[payload] = False
+    live_all = live[:n_base + n_ins].copy()
+    eval_q = make_clustered_vectors(64, dim=dim, seed=seed + 3)
+    allv_seq = np.concatenate([base, fresh[:n_ins]])
+    truth_seq = brute_force_knn(allv_seq, eval_q, cfg.k, live=live_all)
+    ids_seq, _ = idx_seq.search(eval_q, k=cfg.k)
+    recall_seq = recall_at_k(ids_seq, truth_seq)
+
+    serve_tickets = [eng.submit_query(q) for q in eval_q]
+    eng.drain()
+    ids_serve = np.stack([t.result().ids for t in serve_tickets])
+    allv_serve = np.concatenate([base, warm_vecs, fresh[:n_ins]])
+    live_serve = np.concatenate(
+        [live_all[:n_base], np.zeros(n_warm, bool), live_all[n_base:]])
+    truth_serve = brute_force_knn(allv_serve, eval_q, cfg.k,
+                                  live=live_serve)
+    recall_serve = recall_at_k(ids_serve, truth_serve)
+
+    doc = {
+        "meta": {
+            "mode": mode, "backend": jax.default_backend(),
+            "n_base": n_base, "n_ops": n_ops, "mix": mix, "dim": dim,
+            "batch": batch, "n_expand": n_expand,
+            # the serving layer's own knobs (the reference path runs the
+            # PR-1 shape `batch`/`n_expand` above; wider coalescing and
+            # beams are the scheduler's prerogative, recall-guarded)
+            "serve_query_batch": serve_cfg.query_batch,
+            "serve_n_expand": serve_cfg.n_expand,
+            "config": {k: v for k, v in cfg._asdict().items()},
+        },
+        "serve": {
+            "qps": round(serve_qps, 1),
+            "insert_ops_s": m["insert"]["ops_per_s"],
+            "delete_ops_s": m["delete"]["ops_per_s"],
+            "query_p50_ms": m["query"]["p50_ms"],
+            "query_p99_ms": m["query"]["p99_ms"],
+            "mean_query_batch": m["query"]["mean_batch"],
+            "snapshot_resolves": m["snapshot_resolves"],
+            "compactions": eng.maintenance.compactions,
+            "wall_s": round(wall, 3),
+        },
+        "baseline": {
+            "fixed_batch_qps": round(fixed_qps, 1),
+            "qps_ratio": round(serve_qps / fixed_qps, 3),
+        },
+        "recall": {
+            "serve": round(recall_serve, 4),
+            "sequential": round(recall_seq, 4),
+            "delta": round(recall_serve - recall_seq, 4),
+        },
+        "retraces": {
+            "after_warmup": warm_traces,
+            "after_load": load_traces,
+            "new_during_load": new_traces,
+        },
+        "criteria": {
+            "zero_retraces_after_warmup": not new_traces,
+            "qps_within_10pct_of_fixed": bool(
+                serve_qps >= 0.9 * fixed_qps),
+            # one-sided: serving must not LOSE recall vs the sequential
+            # per-item reference; exceeding it (batched inserts with
+            # multi-expansion candidate search + intra-batch links build a
+            # better-connected graph) is a win, not a violation
+            "recall_within_0p01": bool(
+                recall_serve >= recall_seq - 0.01),
+        },
+    }
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run; validate the JSON schema only")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/BENCH_serve.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = args.out or os.path.join(root, "BENCH_serve.json")
+
+    if args.smoke:
+        doc = run(n_base=256, n_ops=96, batch=16, dim=16, seed=args.seed,
+                  n_expand=4, mode="smoke")
+    else:
+        doc = run(n_base=4096, n_ops=4096, batch=64, dim=64, seed=args.seed,
+                  n_expand=4, mode="full")
+
+    validate_schema(doc)
+    print(json.dumps(doc, indent=1))
+    if args.smoke:
+        print("smoke: schema OK (perf criteria not enforced)")
+        return 0
+
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+    for name, ok in doc["criteria"].items():
+        print(f"  {'PASS' if ok else 'FAIL'} {name}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,12 @@
-"""Dynamic-workload demo: the paper's balanced 50/50 insert-delete churn
-(Fig. 5 protocol) on a small index, printing per-batch recall, modeled
-latency, and memory.
+"""Dynamic-workload demo on the online serving engine: the paper's
+balanced insert-delete churn (Fig. 5 protocol) interleaved with queries,
+driven through `repro.serve` micro-batching (DESIGN.md §8).
+
+Each batch round submits individual insert/delete/query requests like
+independent clients; the engine coalesces them into fixed-shape padded
+micro-batches, serves queries from the cached LSM snapshot, and runs
+threshold-triggered compaction in the background.  Per round it prints
+recall, modeled update/search latency, memory, and engine stats.
 
     PYTHONPATH=src python examples/dynamic_workload.py
 """
@@ -15,6 +21,7 @@ import numpy as np
 from repro.core import DISK, HNSWConfig, LSMVecIndex, iostats
 from repro.core.index import brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
+from repro.serve import MaintenancePolicy, ServeConfig, ServeEngine
 
 
 def main(n_base=1024, dim=48, n_batches=5):
@@ -25,6 +32,9 @@ def main(n_base=1024, dim=48, n_batches=5):
                      ef_search=48, ef_construction=48, k=10, rho=0.8,
                      use_filter=True)
     idx = LSMVecIndex.build(cfg, base)
+    engine = ServeEngine(idx, ServeConfig(
+        query_batch=32, insert_batch=16, delete_batch=16,
+        maintenance=MaintenancePolicy(tombstone_ratio=0.15, check_every=2)))
 
     allv = [base.copy()]
     live = np.ones(n_base, bool)
@@ -32,33 +42,42 @@ def main(n_base=1024, dim=48, n_batches=5):
     cursor = 0
     batch_n = max(8, n_base // 100)
 
-    print("batch,recall,update_ms,search_ms,memory_mb,n_live")
+    print("batch,recall,update_ms,search_ms,memory_mb,n_live,compactions")
     for b in range(n_batches):
         idx.reset_stats()
         for _ in range(batch_n // 2):          # 50% inserts
             x = fresh[cursor]
             cursor += 1
-            idx.insert(x)
+            engine.submit_insert(x)
             allv = [np.concatenate(allv + [x[None]])]
             live = np.append(live, True)
         victims = rng.choice(np.flatnonzero(live), batch_n // 2,
                              replace=False)
         for v in victims:                      # 50% deletes
-            idx.delete(int(v))
+            engine.submit_delete(int(v))
             live[v] = False
+        engine.drain()
         upd_ms = float(iostats.search_cost(idx.stats, DISK)) * 1e3 / batch_n
 
         idx.reset_stats()
-        ids, _ = idx.search(queries, k=10)
+        tickets = [engine.submit_query(q) for q in queries]
+        engine.drain()
+        ids = np.stack([t.result().ids for t in tickets])
         srch_ms = float(iostats.search_cost(idx.stats, DISK)) * 1e3 \
             / len(queries)
         truth = brute_force_knn(jnp.asarray(allv[0]), jnp.asarray(queries),
                                 10, live=jnp.asarray(live))
         rec = recall_at_k(ids, truth)
         print(f"{b},{rec:.3f},{upd_ms:.2f},{srch_ms:.2f},"
-              f"{idx.memory_bytes()/1e6:.2f},{int(live.sum())}")
+              f"{idx.memory_bytes()/1e6:.2f},{int(live.sum())},"
+              f"{engine.maintenance.compactions}")
 
-    print("\nLSM store:", int(idx.state.store.n_flushes), "flushes,",
+    m = engine.metrics.snapshot()
+    print(f"\nengine: {m['query']['batches']} query / "
+          f"{m['insert']['batches']} insert / {m['delete']['batches']} "
+          f"delete micro-batches, {m['snapshot_resolves']} snapshot "
+          f"resolves, {engine.maintenance.compactions} compactions")
+    print("LSM store:", int(idx.state.store.n_flushes), "flushes,",
           int(idx.state.store.n_compactions), "compactions")
 
 

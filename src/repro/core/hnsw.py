@@ -129,6 +129,21 @@ def _bottom_adj_fn(cfg: HNSWConfig, state: HNSWState):
     return fn
 
 
+def _snapshot_adj_fn(snapshot: jax.Array):
+    """Adjacency served from a resolved dense view (`lsm.snapshot_rows`).
+
+    Row-for-row identical to `_bottom_adj_fn` against the frozen tree —
+    absent/tombstoned rows are already -1 in the view — but each read is a
+    single gather instead of a full LSM probe.  `n_probes` keeps the
+    1-read-per-row cost model of `lsm.get`.
+    """
+    def fn(nodes):
+        rows = snapshot[jnp.maximum(nodes, 0)]
+        return jnp.where((nodes >= 0)[:, None], rows, -1), \
+            jnp.ones_like(nodes)
+    return fn
+
+
 def _upper_adj_fn(state: HNSWState, u: int):
     """Batched upper-layer adjacency (memory-resident dense rows)."""
     def fn(nodes):
@@ -159,10 +174,15 @@ def _descend_upper(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
 
 
 def _topm(ids: jax.Array, dists: jax.Array, m: int):
-    """Best-m prefix of a distance-sorted candidate list (pad -1)."""
-    order = jnp.argsort(dists, stable=True)[:m]
+    """Best-m prefix of a distance-sorted candidate list (pad -1).
+
+    `lax.top_k` instead of a stable argsort: ties resolve to the lower
+    index either way, but top_k is a selection, not a full sort — XLA
+    CPU's stable sorts were the dominant cost of the delete relink scan.
+    """
+    neg_d, order = jax.lax.top_k(-dists, m)
     out_ids = ids[order]
-    out_d = dists[order]
+    out_d = -neg_d
     return jnp.where(jnp.isfinite(out_d), out_ids, -1), out_d
 
 
@@ -203,12 +223,45 @@ def _evict_slot(row: jax.Array, row_vecs_d_new: jax.Array) -> jax.Array:
 
 
 def _dedup_to_inf(ids: jax.Array, dists: jax.Array):
-    """Mask duplicate ids (keep first by distance order) with +inf."""
-    order = jnp.argsort(ids, stable=True)
-    sid = ids[order]
-    dup_sorted = jnp.concatenate([jnp.array([False]), sid[1:] == sid[:-1]])
-    dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    """Mask duplicate ids (keep the first occurrence) with +inf.
+
+    O(C^2) comparison triangle instead of sort+scatter: identical result
+    (the stable id-sort kept the lowest original index of each id group),
+    and at relink pool sizes the triangle is far cheaper than an XLA CPU
+    stable sort.
+    """
+    eq = ids[None, :] == ids[:, None]
+    dup = jnp.any(jnp.tril(eq, k=-1), axis=1)
     return jnp.where(dup, INF, dists)
+
+
+def _relink_upper_rows(cfg: HNSWConfig, state_vectors, state_levels,
+                       upper_adj, u: int, i, nbr, active):
+    """Vectorized Algorithm-2 relink of node i's layer-u neighbors.
+
+    All M_up relink rows derive from the same up-front 2-hop candidate
+    pool (`cand` is read once, before any write), so the per-neighbor
+    loop vectorizes into one [M_up, C] distance block + one scatter —
+    bit-identical to writing the rows one at a time, since no row's
+    computation reads another's write.
+    """
+    nbr_safe = jnp.maximum(nbr, 0)
+    cand = jnp.concatenate(
+        [upper_adj[u, nbr_safe].reshape(-1), nbr])              # 2-hop pool C
+    d = jnp.sum((state_vectors[jnp.maximum(cand, 0)][None, :, :]
+                 - state_vectors[nbr_safe][:, None, :]) ** 2, axis=-1)
+    bad = (cand[None, :] < 0) | (cand[None, :] == i) \
+        | (cand[None, :] == nbr[:, None]) \
+        | (state_levels[jnp.maximum(cand, 0)][None, :] <= u)
+    d = jnp.where(bad, INF, d)
+    masked = jnp.where(bad, -1, jnp.broadcast_to(cand, bad.shape))
+    d = jax.vmap(_dedup_to_inf)(masked, d)
+    new_rows, _ = jax.vmap(lambda dd: _topm(cand, dd, cfg.M_up))(d)
+    ok = active & (nbr >= 0)
+    idx_w = jnp.where(ok, nbr_safe, cfg.cap)   # masked rows drop
+    upper_adj = upper_adj.at[u, idx_w].set(new_rows, mode="drop")
+    return upper_adj.at[u, jnp.where(active, jnp.maximum(i, 0),
+                                     cfg.cap)].set(-1, mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -218,13 +271,22 @@ def _dedup_to_inf(ids: jax.Array, dists: jax.Array):
 def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
            *, rho: float | None = None, ef: int | None = None,
            use_filter: bool | None = None,
-           n_expand: int | None = None) -> BeamResult:
+           n_expand: int | None = None,
+           snapshot: jax.Array | None = None,
+           active: jax.Array | None = None) -> BeamResult:
     """Single-query search: upper greedy descent -> sampled bottom beam.
 
     `n_expand` > 1 turns on multi-expansion (DESIGN.md §3): that many
     frontier nodes are expanded per beam iteration through one batched
     adjacency read and one fused distance block.  The default (1) is the
     paper's classic one-node-per-hop traversal.
+
+    `snapshot` (optional, from `lsm.snapshot_rows`) serves bottom-layer
+    adjacency by row gather from a resolved dense view instead of per-hop
+    LSM probes — bit-identical results against an unchanged tree; the
+    caller owns invalidation (re-resolve after any write).  `active`
+    supports pad-and-mask dispatch: a False lane returns all -1/inf,
+    records nothing, and costs no IOStats (DESIGN.md §8).
     """
     ef = ef or cfg.ef_search
     rho = cfg.rho if rho is None else rho
@@ -235,19 +297,26 @@ def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
     n_expand = max(1, min(n_expand, ef))
     ep, d_ep = _descend_upper(cfg, state, q, jnp.zeros((), jnp.int32))
     code_q = simhash.encode(simhash.SimHashParams(state.proj), q[None, :])[0]
+    adj_fn = _bottom_adj_fn(cfg, state) if snapshot is None \
+        else _snapshot_adj_fn(snapshot)
     return beam_search(
         q, ep, d_ep,
-        _bottom_adj_fn(cfg, state), _dist_fn(state, q),
+        adj_fn, _dist_fn(state, q),
         state.codes, code_q, state.levels >= 0,
         cap=cfg.cap, ef=ef, k=cfg.k, m_bits=cfg.m_bits, eps=cfg.eps,
         rho=rho, max_iters=2 * ef, use_filter=use_filter,
         q_norm=jnp.sqrt(jnp.sum(q * q)), mean_norm=state.mean_norm,
-        n_expand=n_expand)
+        n_expand=n_expand, active=active)
 
 
 def search_batch(cfg: HNSWConfig, state: HNSWState, qs: jax.Array,
+                 *, active: jax.Array | None = None,
                  **kw) -> BeamResult:
-    return jax.vmap(lambda q: search(cfg, state, q, **kw))(qs)
+    """Batched search; `active` (bool[B]) masks padded query lanes."""
+    if active is None:
+        return jax.vmap(lambda q: search(cfg, state, q, **kw))(qs)
+    return jax.vmap(lambda q, a: search(cfg, state, q, active=a, **kw))(
+        qs, active)
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +491,7 @@ def _connect_upper(cfg: HNSWConfig, state: HNSWState, upper_adj: jax.Array,
 
 def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
                  keys: jax.Array, *,
+                 valid: jax.Array | None = None,
                  n_expand: int | None = None) -> Tuple[HNSWState, IOStats]:
     """Insert a batch of vectors in one jit — zero per-item host syncs.
 
@@ -440,11 +510,19 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
     neighbor *candidates* (they still become mutually reachable through
     base-graph backlinks, like sequential inserts).  Callers should seed
     a small graph per-item first; `LSMVecIndex.insert_batch` does.
+
+    `valid` (bool[n], default all-True) is the pad-and-mask hook
+    (DESIGN.md §8): masked items allocate no id and write nothing, so a
+    serving layer can dispatch ragged micro-batches through one traced
+    shape.  Valid items must form a *prefix* (padding at the tail) so the
+    ids computed from the scanned `count` stay consecutive.
     """
     if n_expand is None:
         n_expand = cfg.batch_expand
     n_expand = max(1, min(n_expand, cfg.ef_construction))
     n = xs.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), jnp.bool_)
     base_id = state.count
     codes = simhash.encode(simhash.SimHashParams(state.proj), xs)
     xnorms = jnp.sqrt(jnp.sum(xs * xs, axis=1))
@@ -464,7 +542,10 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
     # the same "link to already-placed nodes" rule sequential insert has.
     bb = (xnorms[:, None] ** 2 + xnorms[None, :] ** 2
           - 2.0 * (xs @ xs.T))
-    bb = jnp.where(jnp.tril(jnp.ones((n, n), jnp.bool_), k=-1), bb, INF)
+    # masked (padding) items are never candidates; valid items form a
+    # prefix, so the j < i triangle only ever pairs valid with valid
+    bb = jnp.where(jnp.tril(jnp.ones((n, n), jnp.bool_), k=-1)
+                   & valid[None, :], bb, INF)
     m_in = max(1, min(cfg.M, n - 1))
     nb_negd, nb_j = jax.lax.top_k(-bb, m_in)
     in_d = -nb_negd                                            # [n, m_in]
@@ -483,13 +564,9 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
     # cost model of `lsm.get`.
     snap_live, snap_rows = lsm.resolve_all(cfg.lsm_cfg, state.store, cfg.cap)
     snapshot = jnp.where(snap_live[:, None] > 0, snap_rows, -1)
+    snap_adj = _snapshot_adj_fn(snapshot)
 
-    def snap_adj(nodes):
-        rows = snapshot[jnp.maximum(nodes, 0)]
-        return jnp.where((nodes >= 0)[:, None], rows, -1), \
-            jnp.ones_like(nodes)
-
-    def cand_search(x, code, xnorm, ids_in, d_in):
+    def cand_search(x, code, xnorm, ids_in, d_in, v):
         ep, d_ep = _descend_upper(cfg, state, x, jnp.zeros((), jnp.int32))
         res = beam_search(
             x, ep, d_ep, snap_adj, _dist_fn(state, x),
@@ -498,7 +575,7 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
             eps=cfg.eps, rho=cfg.rho,
             max_iters=2 * cfg.ef_construction,
             use_filter=cfg.use_filter, q_norm=xnorm,
-            mean_norm=state.mean_norm, n_expand=n_expand)
+            mean_norm=state.mean_norm, n_expand=n_expand, active=v)
         # diversity-select the bottom neighbors here: it only reads the
         # frozen snapshot + batch view, and vmapping it runs the
         # sequential dominance loop once for the whole batch instead of
@@ -513,7 +590,7 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
         return nbrs, res.stats
 
     cand_nbrs, stats_a = jax.vmap(cand_search)(xs, codes, xnorms,
-                                               in_ids, in_d)
+                                               in_ids, in_d, valid)
 
     # ---- phase B: sequential graph writes ---------------------------------
     # Bottom-layer rows are staged in a dense overlay carried through the
@@ -529,15 +606,21 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
 
     def step(carry, inp):
         st, orows, ovalid = carry
-        x, code, xnorm, lvl, nbrs = inp
+        x, code, xnorm, lvl, nbrs, v = inp
         i = st.count
+        # masked (padding) items scatter to the out-of-bounds id `cap`,
+        # which mode="drop" discards — the step is then a pure no-op
+        i_w = jnp.where(v, i, cfg.cap)
         st = st._replace(
-            vectors=st.vectors.at[i].set(x),
-            norms=st.norms.at[i].set(xnorm),
-            codes=st.codes.at[i].set(code),
-            levels=st.levels.at[i].set(lvl),
-            mean_norm=(st.mean_norm * st.n_live + xnorm)
-            / jnp.maximum(st.n_live + 1, 1))
+            vectors=st.vectors.at[i_w].set(x, mode="drop"),
+            norms=st.norms.at[i_w].set(xnorm, mode="drop"),
+            codes=st.codes.at[i_w].set(code, mode="drop"),
+            levels=st.levels.at[i_w].set(lvl, mode="drop"),
+            mean_norm=jnp.where(
+                v,
+                (st.mean_norm * st.n_live + xnorm)
+                / jnp.maximum(st.n_live + 1, 1),
+                st.mean_norm))
         first = st.n_live == 0
 
         # Upper-layer work only matters for items that reach layer >= 1
@@ -566,11 +649,11 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
                     ~above, connect, skip, (ua, ep, d_ep))
             return ua
 
-        upper_adj = jax.lax.cond((lvl > 0) & (~first), upper_work,
+        upper_adj = jax.lax.cond((lvl > 0) & (~first) & v, upper_work,
                                  lambda ua: ua, st.upper_adj)
         st = st._replace(upper_adj=upper_adj)
 
-        nbrs = jnp.where(first, -1, nbrs)
+        nbrs = jnp.where(first | (~v), -1, nbrs)
         # backlink pass against overlay-else-snapshot rows (pure gathers)
         ok = nbrs >= 0
         nbrs_safe = jnp.maximum(nbrs, 0)
@@ -580,20 +663,25 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
                          - x[None, None, :]) ** 2, axis=-1)
         slots = jax.vmap(_evict_slot)(rows, d_new)
         new_rows = rows.at[jnp.arange(cfg.M), slots].set(i)
-        w_keys = jnp.concatenate([i[None], jnp.where(ok, nbrs_safe, dead)])
+        w_keys = jnp.concatenate([jnp.where(v, i, dead)[None],
+                                  jnp.where(ok, nbrs_safe, dead)])
         w_vals = jnp.concatenate([nbrs[None, :], new_rows])
         orows = orows.at[w_keys].set(w_vals)
         ovalid = ovalid.at[w_keys].set(True)
 
-        new_entry = jnp.where(first | (lvl > st.max_level), i, st.entry)
+        vi = v.astype(jnp.int32)
+        new_entry = jnp.where(v & (first | (lvl > st.max_level)),
+                              i, st.entry)
         st = st._replace(
-            count=st.count + 1, n_live=st.n_live + 1,
-            entry=new_entry, max_level=jnp.maximum(st.max_level, lvl))
+            count=st.count + vi, n_live=st.n_live + vi,
+            entry=new_entry,
+            max_level=jnp.where(v, jnp.maximum(st.max_level, lvl),
+                                st.max_level))
         return (st, orows, ovalid), w_keys
 
     (state, overlay_rows, _), w_keys = jax.lax.scan(
         step, (state, overlay_rows, overlay_valid),
-        (xs, codes, xnorms, lvls, cand_nbrs))
+        (xs, codes, xnorms, lvls, cand_nbrs, valid))
     # one bulk LSM apply: every staged key carries its *final* overlay row,
     # so duplicate keys across items all write the same (last) value and
     # newest-wins is preserved.  (Deduping here would not save memtable
@@ -604,20 +692,120 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
     w_vals = overlay_rows[jnp.minimum(w_keys, cfg.cap)]
     state = state._replace(
         store=lsm.puts(cfg.lsm_cfg, state.store, w_keys, w_vals))
+    # masked lanes already report zero beam stats (active-gated)
     stats = IOStats(*(jnp.sum(a).astype(jnp.int32) for a in stats_a))
     # backlink row re-rankings, as in the per-item path
-    stats = stats._replace(n_vec=stats.n_vec + n * cfg.M)
+    stats = stats._replace(
+        n_vec=stats.n_vec
+        + jnp.sum(valid).astype(jnp.int32) * cfg.M)
     return state, stats
 
 
 def delete_batch(cfg: HNSWConfig, state: HNSWState,
                  ids: jax.Array) -> Tuple[HNSWState, IOStats]:
-    """Delete a batch of nodes in one jit'd `lax.scan` of Algorithm 2."""
-    def step(st, i):
-        st, stats = delete(cfg, st, i)
-        return st, stats
+    """Delete a batch of nodes in one jit — Algorithm 2 through an overlay.
 
-    state, stats = jax.lax.scan(step, state, jnp.asarray(ids, jnp.int32))
+    Like `insert_batch`'s phase B, the scanned per-item relinks read and
+    stage bottom-layer rows in a dense newest-wins overlay (seeded from
+    one `lsm.resolve_all` of the pre-batch tree) instead of issuing LSM
+    puts inside the scan — in-scan puts drag the flush `lax.cond` into
+    the loop and XLA copies the level arrays every step (the cond-copy
+    tax, DESIGN.md §4).  One bulk `lsm.puts` after the scan applies every
+    staged key's final row and liveness, so the resulting tree *content*
+    is identical to the sequential per-item loop (flush/compaction timing
+    may differ, which only changes how entries are distributed across
+    runs, never what a lookup resolves).
+
+    Negative ids are masked no-ops (the pad-and-mask serving contract,
+    DESIGN.md §8): they allocate no writes and leave every state field
+    untouched.
+    """
+    M = cfg.M
+    ids = jnp.asarray(ids, jnp.int32)
+    snap_live, snap_rows = lsm.resolve_all(cfg.lsm_cfg, state.store, cfg.cap)
+    # spare slot cfg.cap absorbs masked writes, exactly like insert_batch
+    dlive = jnp.concatenate([snap_live, jnp.zeros((1,), jnp.int8)])
+    drows = jnp.concatenate(
+        [snap_rows, jnp.full((1, M), lsm.EMPTY, jnp.int32)])
+    dead = jnp.asarray(cfg.cap, jnp.int32)
+    tomb = jnp.full((M,), lsm.EMPTY, jnp.int32)
+
+    def step(carry, node):
+        st, dlive, drows = carry
+        i = jnp.asarray(node, jnp.int32)
+        v = i >= 0
+        i_safe = jnp.maximum(i, 0)
+
+        # ---- upper layers (same relink rule as `delete`, v-gated) --------
+        upper_adj = st.upper_adj
+        for u in range(cfg.num_upper):
+            active = v & (st.levels[i_safe] > u)
+            nbr = upper_adj[u, i_safe]                           # [M_up]
+            upper_adj = _relink_upper_rows(
+                cfg, st.vectors, st.levels, upper_adj, u, i, nbr, active)
+        st = st._replace(upper_adj=upper_adj)
+
+        # ---- bottom layer (Algorithm 2 lines 13-22) ----------------------
+        # reads resolve from the carried dense view: identical content to
+        # what per-item `lsm.get`/`get_batch` would return mid-sequence
+        n1 = jnp.where(v & (dlive[i_safe] > 0), drows[i_safe], -1)  # [M]
+        n1_safe = jnp.maximum(n1, 0)
+        rows = drows[n1_safe]                                   # [M, M]
+        cand = jnp.concatenate([rows.reshape(-1), n1])          # C = M*M + M
+        d = jnp.sum((st.vectors[jnp.maximum(cand, 0)][None, :, :]
+                     - st.vectors[n1_safe][:, None, :]) ** 2, axis=-1)
+        bad = (cand[None, :] < 0) | (cand[None, :] == i) \
+            | (cand[None, :] == n1[:, None]) \
+            | (st.levels[jnp.maximum(cand, 0)][None, :] < 0)
+        d = jnp.where(bad, INF, d)
+        masked_ids = jnp.where(bad, -1, jnp.broadcast_to(cand, bad.shape))
+        d = jax.vmap(_dedup_to_inf)(masked_ids, d)
+        new_rows, _ = jax.vmap(lambda dd: _topm(cand, dd, cfg.M))(d)
+
+        # stage: relinked neighbor rows (live), then i's tombstone —
+        # same write order as the sequential puts + lsm.delete
+        tgt = jnp.where(n1 >= 0, n1_safe, dead)
+        drows = drows.at[tgt].set(new_rows)
+        dlive = dlive.at[tgt].set(1)
+        ti = jnp.where(v, i_safe, dead)
+        drows = drows.at[ti].set(tomb)
+        dlive = dlive.at[ti].set(0)
+        w_keys = jnp.concatenate([tgt, ti[None]])               # [M + 1]
+
+        was_live = v & (st.levels[i_safe] >= 0)
+        levels = st.levels.at[i_safe].set(
+            jnp.where(v, -1, st.levels[i_safe]))
+        need_new_entry = v & (st.entry == i)
+        # entry repair is a full-cap argmax, needed only when the entry
+        # node itself dies — cond it out of the common per-item path
+        entry = jax.lax.cond(
+            need_new_entry,
+            lambda lv: jnp.argmax(
+                jnp.where(jnp.arange(cfg.cap) == i, -1, lv)
+            ).astype(jnp.int32),
+            lambda lv: st.entry, levels)
+        st = st._replace(
+            levels=levels, entry=entry,
+            max_level=jnp.where(
+                v, jnp.maximum(levels[jnp.maximum(entry, 0)], 0),
+                st.max_level),
+            n_live=st.n_live - was_live.astype(jnp.int32))
+        stats = IOStats(
+            n_adj=jnp.where(v, 1 + cfg.M, 0).astype(jnp.int32),
+            n_vec=jnp.where(
+                v, jnp.sum(jnp.isfinite(d)), 0).astype(jnp.int32),
+            n_filtered=jnp.zeros((), jnp.int32),
+            n_hops=jnp.zeros((), jnp.int32))
+        return (st, dlive, drows), (w_keys, stats)
+
+    (state, dlive, drows), (w_keys, stats) = jax.lax.scan(
+        step, (state, dlive, drows), ids)
+    # one bulk LSM apply: duplicate keys all carry their *final* overlay
+    # row + liveness, so newest-wins resolution matches the sequential loop
+    w_keys = w_keys.reshape(-1)
+    state = state._replace(
+        store=lsm.puts(cfg.lsm_cfg, state.store, w_keys,
+                       drows[w_keys], dlive[w_keys]))
     return state, IOStats(*(jnp.sum(a).astype(jnp.int32) for a in stats))
 
 
@@ -630,28 +818,12 @@ def delete(cfg: HNSWConfig, state: HNSWState, node) -> Tuple[HNSWState, IOStats]
     i = jnp.asarray(node, jnp.int32)
     upper_adj = state.upper_adj
 
-    # ---- upper layers -------------------------------------------------------
+    # ---- upper layers (vectorized relink, see _relink_upper_rows) -----------
     for u in range(cfg.num_upper):
         active = state.levels[i] > u
         nbr = upper_adj[u, i]                                   # [M_up]
-        nbr_safe = jnp.maximum(nbr, 0)
-        cand = jnp.concatenate(
-            [upper_adj[u, nbr_safe].reshape(-1), nbr])          # 2-hop pool C
-        for jj in range(cfg.M_up):
-            p = nbr[jj]
-            ok = active & (p >= 0)
-            p_safe = jnp.maximum(p, 0)
-            d = jnp.sum((state.vectors[jnp.maximum(cand, 0)]
-                         - state.vectors[p_safe][None, :]) ** 2, axis=-1)
-            bad = (cand < 0) | (cand == i) | (cand == p) \
-                | (state.levels[jnp.maximum(cand, 0)] <= u)
-            d = jnp.where(bad, INF, d)
-            d = _dedup_to_inf(jnp.where(bad, -1, cand), d)
-            new_row, _ = _topm(cand, d, cfg.M_up)
-            upper_adj = upper_adj.at[u, p_safe].set(
-                jnp.where(ok, new_row, upper_adj[u, p_safe]))
-        upper_adj = upper_adj.at[u, i].set(
-            jnp.where(active, -1, upper_adj[u, i]))
+        upper_adj = _relink_upper_rows(
+            cfg, state.vectors, state.levels, upper_adj, u, i, nbr, active)
     state = state._replace(upper_adj=upper_adj)
 
     # ---- bottom layer (Algorithm 2 lines 13-22) -----------------------------

@@ -62,6 +62,12 @@ class LSMVecIndex:
         # host mirror of state.count: id allocation and maintenance never
         # pay a device sync on the hot path
         self._count = int(self.state.count)
+        # write-epoch counter + cached dense read snapshot (DESIGN.md §8):
+        # every mutation bumps _version; the snapshot is lazily re-resolved
+        # when a snapshot read observes a version mismatch
+        self._version = 0
+        self._snap = None
+        self._snap_version = -1
 
         cfg_ = self.cfg
 
@@ -70,8 +76,8 @@ class LSMVecIndex:
             return hnsw.insert(cfg_, state, x, key)
 
         @functools.partial(jax.jit, donate_argnums=0)
-        def _insert_batch(state, xs, keys):
-            return hnsw.insert_batch(cfg_, state, xs, keys)
+        def _insert_batch(state, xs, keys, valid):
+            return hnsw.insert_batch(cfg_, state, xs, keys, valid=valid)
 
         @functools.partial(jax.jit, donate_argnums=0)
         def _delete(state, i):
@@ -90,6 +96,21 @@ class LSMVecIndex:
             heat_delta = _heat_delta(state, res)
             return res, heat_delta
 
+        @functools.partial(jax.jit, static_argnames=("rho", "use_filter",
+                                                     "ef", "n_expand"))
+        def _search_snap(state, qs, valid, snap, rho, use_filter, ef,
+                         n_expand):
+            res = hnsw.search_batch(cfg_, state, qs, rho=rho,
+                                    use_filter=use_filter, ef=ef,
+                                    n_expand=n_expand, snapshot=snap,
+                                    active=valid)
+            heat_delta = _heat_delta(state, res)
+            return res, heat_delta
+
+        @jax.jit
+        def _resolve(state):
+            return lsm.snapshot_rows(cfg_.lsm_cfg, state.store, cfg_.cap)
+
         def _heat_delta(state, res):
             nodes = res.heat_nodes.reshape(-1)
             mask = res.heat_mask.reshape(-1, cfg_.M)
@@ -103,6 +124,8 @@ class LSMVecIndex:
         self._delete_fn = _delete
         self._delete_batch_fn = _delete_batch
         self._search_fn = _search
+        self._search_snap_fn = _search_snap
+        self._resolve_fn = _resolve
 
     # -- construction ---------------------------------------------------------
 
@@ -122,19 +145,24 @@ class LSMVecIndex:
         self.state, st = self._insert_fn(
             self.state, jnp.asarray(x, jnp.float32), sub)
         self._count += 1
+        self._version += 1
         self.stats = self.stats + st
         return new_id
 
-    def insert_batch(self, xs) -> list[int]:
+    def insert_batch(self, xs, *, pad_to: Optional[int] = None) -> list[int]:
         """Insert a batch in one jit'd device call; returns the new ids.
 
         The whole batch is dispatched as a single donated-buffer
         `hnsw.insert_batch` (vmapped candidate search + scanned writes)
         with zero per-item host syncs.  While the graph is smaller than
         BATCH_MIN_GRAPH the leading items fall back to per-item inserts so
-        the batch pipeline always has a snapshot to search.  Note the jit
-        specializes on batch length; feed fixed-size batches for best
-        throughput.
+        the batch pipeline always has a snapshot to search.
+
+        `pad_to` is the fixed-shape dispatch hook (DESIGN.md §8): the
+        batch is zero-padded to that width with a validity prefix mask, so
+        every call reuses one traced shape regardless of how many items a
+        serving micro-batch actually carries (batches larger than `pad_to`
+        chunk).  Without it the jit specializes on the exact batch length.
         """
         xs = np.asarray(xs, np.float32)
         if xs.size == 0:
@@ -148,26 +176,47 @@ class LSMVecIndex:
         rest = xs[n_seed:]
         if len(rest) == 0:
             return ids
-        self._rng, sub = jax.random.split(self._rng)
-        keys = jax.random.split(sub, len(rest))
-        ids.extend(range(self._count, self._count + len(rest)))
-        self.state, st = self._insert_batch_fn(
-            self.state, jnp.asarray(rest), keys)
-        self._count += len(rest)
-        self.stats = self.stats + st
+        width = pad_to if pad_to else len(rest)
+        for s in range(0, len(rest), width):
+            chunk = rest[s:s + width]
+            n = len(chunk)
+            padded = np.zeros((width, rest.shape[1]), np.float32)
+            padded[:n] = chunk
+            valid = np.arange(width) < n
+            self._rng, sub = jax.random.split(self._rng)
+            keys = jax.random.split(sub, width)
+            ids.extend(range(self._count, self._count + n))
+            self.state, st = self._insert_batch_fn(
+                self.state, jnp.asarray(padded), keys, jnp.asarray(valid))
+            self._count += n
+            self._version += 1
+            self.stats = self.stats + st
         return ids
 
     def delete(self, node_id: int) -> None:
         self.state, st = self._delete_fn(self.state, jnp.asarray(node_id))
+        self._version += 1
         self.stats = self.stats + st
 
-    def delete_batch(self, ids) -> None:
-        """Delete a batch of ids in one jit'd `lax.scan` device call."""
+    def delete_batch(self, ids, *, pad_to: Optional[int] = None) -> None:
+        """Delete a batch of ids in one jit'd overlay-staged device call.
+
+        `pad_to` pads the id vector with -1 (masked no-ops in
+        `hnsw.delete_batch`) so serving micro-batches of any occupancy
+        dispatch through one traced shape; larger batches chunk.
+        """
         ids = np.atleast_1d(np.asarray(ids, np.int32))
         if len(ids) == 0:
             return
-        self.state, st = self._delete_batch_fn(self.state, jnp.asarray(ids))
-        self.stats = self.stats + st
+        width = pad_to or len(ids)
+        for s in range(0, len(ids), width):
+            chunk = ids[s:s + width]
+            padded = np.full((width,), -1, np.int32)
+            padded[:len(chunk)] = chunk
+            self.state, st = self._delete_batch_fn(
+                self.state, jnp.asarray(padded))
+            self._version += 1
+            self.stats = self.stats + st
 
     # -- search ---------------------------------------------------------------
 
@@ -175,11 +224,20 @@ class LSMVecIndex:
                rho: Optional[float] = None, ef: Optional[int] = None,
                use_filter: Optional[bool] = None,
                n_expand: Optional[int] = None,
-               record_heat: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+               record_heat: bool = True,
+               use_snapshot: bool = False,
+               pad_to: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
         """Batched ANN search.  queries [B, dim] -> (ids [B, k], dists).
 
         `n_expand` > 1 expands that many frontier nodes per beam iteration
         (multi-expansion); 1 is the classic exact-parity path.
+
+        `use_snapshot` serves bottom-layer adjacency from the cached dense
+        LSM view (`snapshot()`), re-resolved only after writes — identical
+        results, but each hop is a row gather instead of an LSM probe.
+        `pad_to` zero-pads the query batch to a fixed width with masked
+        lanes so every call shares one traced shape (implies the snapshot
+        path, which is where the mask-aware kernels live).
         """
         cfg = self.cfg
         k = k or cfg.k
@@ -187,15 +245,31 @@ class LSMVecIndex:
         use_filter = cfg.use_filter if use_filter is None else use_filter
         ef = ef or cfg.ef_search
         n_expand = cfg.n_expand if n_expand is None else int(n_expand)
-        qs = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
-        res, heat_delta = self._search_fn(self.state, qs, rho, use_filter,
-                                          ef, n_expand)
+        qs_np = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = len(qs_np)
+        if use_snapshot or pad_to is not None:
+            width = pad_to if pad_to else nq
+            if nq > width:
+                raise ValueError(f"batch {nq} exceeds pad width {width}")
+            padded = np.zeros((width, qs_np.shape[1]), np.float32)
+            padded[:nq] = qs_np
+            valid = np.arange(width) < nq
+            res, heat_delta = self._search_snap_fn(
+                self.state, jnp.asarray(padded), jnp.asarray(valid),
+                self.snapshot(), rho, use_filter, ef, n_expand)
+        else:
+            res, heat_delta = self._search_fn(
+                self.state, jnp.asarray(qs_np), rho, use_filter,
+                ef, n_expand)
         if record_heat:
             self.state = self.state._replace(
                 heat=self.state.heat + heat_delta)
         batch_stats = jax.tree.map(lambda a: jnp.sum(a), res.stats)
         self.stats = self.stats + IOStats(*batch_stats)
-        return np.asarray(res.ids[:, :k]), np.asarray(res.dists[:, :k])
+        # slice host-side: device slicing re-specializes on every distinct
+        # residual batch length (a fresh XLA program per shape)
+        return (np.asarray(res.ids)[:nq, :k],
+                np.asarray(res.dists)[:nq, :k])
 
     # -- maintenance ----------------------------------------------------------
 
@@ -209,16 +283,52 @@ class LSMVecIndex:
             np.asarray(rows), np.asarray(self.state.heat[:n]),
             window=window, lam=lam, live=live_np)
         self.state = reorder.apply_permutation(self.cfg, self.state, perm)
+        self._version += 1
         return perm
 
     def compact(self) -> None:
         self.state = self.state._replace(
             store=lsm.compact_all(self.cfg.lsm_cfg, self.state.store))
+        self._version += 1
+
+    # -- read snapshot (DESIGN.md §8) -----------------------------------------
+
+    def snapshot(self) -> jax.Array:
+        """Dense bottom-layer adjacency view int32[cap, M], cached.
+
+        Resolved lazily from the LSM tree and reused across consecutive
+        query batches; any write (insert/delete/compact/reorder) bumps the
+        index version and the next call re-resolves.
+        """
+        if self._snap is None or self._snap_version != self._version:
+            self._snap = self._resolve_fn(self.state)
+            self._snap_version = self._version
+        return self._snap
 
     # -- accounting -----------------------------------------------------------
 
     def reset_stats(self) -> None:
         self.stats = IOStats.zero()
+
+    def reset_heat(self) -> None:
+        """Zero the edge-heat accumulator (after a heat-driven relayout)."""
+        self.state = self.state._replace(heat=jnp.zeros_like(self.state.heat))
+
+    def trace_counts(self) -> dict:
+        """Compiled-variant counts per jitted entry point.
+
+        The serving layer's zero-retrace guarantee is asserted against
+        these: with fixed pad widths each op converges to a constant
+        number of traced shapes after warmup.
+        """
+        return {
+            "insert": self._insert_fn._cache_size(),
+            "insert_batch": self._insert_batch_fn._cache_size(),
+            "delete": self._delete_fn._cache_size(),
+            "delete_batch": self._delete_batch_fn._cache_size(),
+            "search": self._search_fn._cache_size(),
+            "search_snapshot": self._search_snap_fn._cache_size(),
+        }
 
     def io_cost(self, model: CostModel = iostats.DISK) -> float:
         return float(iostats.search_cost(self.stats, model))

@@ -393,8 +393,12 @@ def remap_ids(cfg: LSMConfig, st: LSMState, perm_map) -> LSMState:
 def resolve_all(cfg: LSMConfig, st: LSMState, id_space: int):
     """Dense newest-wins view: (live int8[id_space], rows int32[id_space, M]).
 
-    Test/maintenance utility (used by compaction-time reordering and the
-    property tests); cost O(id_space + total_cap).
+    The snapshot-resolve primitive: the serving read path and the batched
+    update pipelines materialize the whole tree into this view once per
+    write epoch, then serve adjacency by row gather.  Also used by
+    compaction-time reordering and the property tests.  Cost
+    O(id_space + total_cap), fully vectorized (the memtable is deduped
+    newest-wins by `_sorted_memtable`, so one scatter applies it).
     """
     # spare slot at id_space absorbs padding/out-of-range writes
     live = jnp.zeros((id_space + 1,), jnp.int8)
@@ -406,19 +410,25 @@ def resolve_all(cfg: LSMConfig, st: LSMState, id_space: int):
         safe = jnp.where(ok, keys, id_space)
         live = live.at[safe].set(st.level_live[lvl].astype(jnp.int8))
         rows = rows.at[safe].set(st.level_vals[lvl])
-    idx = jnp.arange(cfg.mem_cap)
-    ok = (idx < st.mem_count) & (st.mem_keys != PAD_KEY) \
-        & (st.mem_keys < id_space)
-    safe = jnp.where(ok, st.mem_keys, id_space)
-    # memtable slots are time-ordered; apply in order so newest wins
-    def body(carry, i):
-        live, rows = carry
-        k = safe[i]
-        live = live.at[k].set(st.mem_live[i])
-        rows = rows.at[k].set(st.mem_vals[i])
-        return (live, rows), None
-    (live, rows), _ = jax.lax.scan(body, (live, rows), jnp.arange(cfg.mem_cap))
+    run_k, run_v, run_l, _ = _sorted_memtable(cfg, st)
+    ok = (run_k != PAD_KEY) & (run_k < id_space)
+    safe = jnp.where(ok, run_k, id_space)
+    live = live.at[safe].set(run_l)
+    rows = rows.at[safe].set(run_v)
     return live[:id_space], rows[:id_space]
+
+
+def snapshot_rows(cfg: LSMConfig, st: LSMState, id_space: int) -> jax.Array:
+    """Resolve the tree into dense adjacency rows int32[id_space, M].
+
+    Rows of absent/tombstoned keys come back all -1 — exactly the
+    `found & alive`-masked contract of `get`, so a gather from this view
+    is interchangeable with per-hop point lookups against a frozen tree.
+    Consumers cache it per write epoch (`st.write_seq` is the version
+    counter) and re-resolve after any put/delete/compaction.
+    """
+    live, rows = resolve_all(cfg, st, id_space)
+    return jnp.where(live[:, None] > 0, rows, EMPTY)
 
 
 def memory_bytes(cfg: LSMConfig) -> int:

@@ -77,6 +77,7 @@ def beam_search(
     q_norm: jax.Array,               # f32[]
     mean_norm: jax.Array,            # f32[]
     n_expand: int = 1,               # B: frontier nodes expanded per iteration
+    active: jax.Array | None = None,  # bool[] — False: inert (padded) lane
 ) -> BeamResult:
     """Single-query sampling-guided beam search.  vmap over queries.
 
@@ -90,6 +91,11 @@ def beam_search(
     first hops always are), so trip-count budgeting would starve wide
     beams.  The loop runs until the expansion budget or the frontier is
     exhausted; for B=1 expansions == iterations, the seed semantics.
+
+    `active` supports pad-and-mask batch dispatch: a False lane never
+    enters the loop (its entry distance is masked to +inf), returns all
+    -1/inf results, records no heat, and contributes zero IOStats — under
+    vmap it costs nothing beyond the trips its live siblings need.
     """
     B = max(1, min(n_expand, ef))
     M = adj_fn(jnp.zeros((B,), jnp.int32))[0].shape[1]
@@ -102,15 +108,22 @@ def beam_search(
     iter_cap = min(max_iters, -(-max_iters // B) + 3)
     heat_len = iter_cap
 
+    if active is None:
+        entry_n_vec = jnp.ones((), jnp.int32)
+    else:
+        entry_dist = jnp.where(active, entry_dist, INF)
+        entry = jnp.where(active, entry, -1)
+        entry_n_vec = jnp.asarray(active, jnp.int32)
     beam_ids = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
     beam_d = jnp.full((ef,), INF, jnp.float32).at[0].set(entry_dist)
     expanded = jnp.zeros((ef,), jnp.bool_)
-    visited = jnp.zeros((cap + 1,), jnp.bool_).at[entry].set(True)
+    visited = jnp.zeros((cap + 1,), jnp.bool_).at[jnp.maximum(entry, 0)].set(
+        entry >= 0)
     heat_nodes = jnp.full((heat_len, B), -1, jnp.int32)
     heat_mask = jnp.zeros((heat_len, B, M), jnp.bool_)
     stats = IOStats.zero()
-    # entry vector was fetched to compute entry_dist
-    stats = stats._replace(n_vec=stats.n_vec + 1)
+    # entry vector was fetched to compute entry_dist (not on masked lanes)
+    stats = stats._replace(n_vec=stats.n_vec + entry_n_vec)
 
     # frontier threshold: stop expanding once every candidate within the
     # 3k-th best has been visited.  k-exact termination prunes too hard on

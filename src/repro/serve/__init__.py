@@ -1,0 +1,26 @@
+"""Online serving subsystem: continuous micro-batching over LSM-VEC.
+
+The first layer of the repo that owns *time* (DESIGN.md §8): everything
+under `repro.core` is pure functions over index state; this package
+schedules an interleaved query/insert/delete stream onto them as
+fixed-shape micro-batches with snapshot-cached reads and
+threshold-driven maintenance.
+
+- request    — Op/Request/Ticket plumbing
+- queue      — arrival-ordered coalescing queue (strict/relaxed modes)
+- scheduler  — ServeEngine: pad-and-mask dispatch, snapshot lifecycle
+- metrics    — p50/p99 latency, occupancy, QPS
+- maintenance— tombstone/heat thresholds -> compact()/reorder()
+"""
+
+from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import CoalescingQueue
+from repro.serve.request import Op, QueryResult, Request, Ticket
+from repro.serve.scheduler import ServeConfig, ServeEngine
+
+__all__ = [
+    "Op", "QueryResult", "Request", "Ticket", "CoalescingQueue",
+    "ServeMetrics", "MaintenancePolicy", "MaintenanceManager",
+    "ServeConfig", "ServeEngine",
+]

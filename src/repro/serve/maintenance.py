@@ -1,0 +1,92 @@
+"""Background maintenance policy: threshold-triggered compaction and
+connectivity-aware relayout (DESIGN.md §8).
+
+The paper runs graph reordering piggybacked on LSM compaction (§3.4);
+the seed repo left both as manual calls.  Here they become policy: the
+engine tracks tombstone pressure host-side (no device syncs) and samples
+the accumulated edge heat at a fixed batch cadence, triggering
+
+- `compact()` when staged deletes since the last compaction exceed
+  `tombstone_ratio` of the live set — bounding LSM read amplification
+  and the dead-entry tax on resolve, and
+- `reorder()` when total sampled edge heat exceeds `heat_budget` —
+  enough fresh traversal signal that a relayout pays for itself.
+
+Reordering permutes node ids, so the engine owns an external↔internal id
+mapping and folds each permutation into it; clients keep their ids.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class MaintenancePolicy:
+    """Thresholds; None disables the corresponding trigger."""
+
+    tombstone_ratio: Optional[float] = 0.25   # staged deletes / live size
+    heat_budget: Optional[int] = None         # total edge-heat counts
+    check_every: int = 16                     # write batches between checks
+    reorder_window: int = 8
+    reorder_lam: float = 1.0
+
+
+class MaintenanceManager:
+    """Applies a MaintenancePolicy to one LSMVecIndex."""
+
+    def __init__(self, index, policy: MaintenancePolicy):
+        self.index = index
+        self.policy = policy
+        self.deletes_since_compact = 0
+        self.write_batches_since_check = 0
+        self.compactions = 0
+        self.reorders = 0
+
+    def note_deletes(self, n: int) -> None:
+        self.deletes_since_compact += n
+
+    def note_write_batch(self) -> None:
+        self.write_batches_since_check += 1
+
+    def due(self) -> bool:
+        return self.write_batches_since_check >= self.policy.check_every
+
+    def run_if_due(self, *, force: bool = False) -> List[str]:
+        """Check thresholds and run triggered maintenance.
+
+        Returns the actions taken (possibly empty).  The heat check costs
+        one device->host scalar sync, which is why it rides the
+        `check_every` cadence instead of every batch.  Returns permutation
+        side effects through `index` (the engine re-maps ids via the perm
+        recorded in `last_perm`).
+        """
+        if not (force or self.due()):
+            return []
+        self.write_batches_since_check = 0
+        actions: List[str] = []
+        self.last_perm: Optional[np.ndarray] = None
+
+        pol = self.policy
+        if pol.tombstone_ratio is not None:
+            live = max(self.index.size, 1)
+            if self.deletes_since_compact / live >= pol.tombstone_ratio \
+                    and self.deletes_since_compact > 0:
+                self.index.compact()
+                self.deletes_since_compact = 0
+                self.compactions += 1
+                actions.append("compact")
+
+        if pol.heat_budget is not None:
+            heat = int(jnp.sum(self.index.state.heat))
+            if heat >= pol.heat_budget:
+                self.last_perm = self.index.reorder(
+                    window=pol.reorder_window, lam=pol.reorder_lam)
+                self.index.reset_heat()
+                self.reorders += 1
+                actions.append("reorder")
+        return actions

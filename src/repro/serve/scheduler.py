@@ -1,0 +1,238 @@
+"""The continuous micro-batching engine over LSMVecIndex (DESIGN.md §8).
+
+`ServeEngine` accepts an interleaved stream of query/insert/delete
+requests and executes it as fixed-shape micro-batches:
+
+  queue → coalesce (per-op caps + windows) → pad-and-mask dispatch
+        → snapshot-cached reads → threshold-driven maintenance
+
+Every op dispatches through one traced shape (`pad_to` on the index's
+batch entry points), so steady-state serving performs **zero jit
+retraces** regardless of how ragged the arrival pattern is.  Query
+batches read bottom-layer adjacency from the cached dense LSM snapshot,
+re-resolved lazily after each write batch.  Maintenance (LSM compaction,
+heat-driven reordering) runs from thresholds between batches; reordering
+permutes internal ids, which the engine hides behind a stable external
+id map.
+
+The engine is single-threaded at heart — `pump()` executes at most one
+micro-batch and is the unit the tests drive deterministically (with an
+injectable clock).  `start()`/`stop()` wrap it in a background thread
+for live serving; `drain()` pumps until the queue is empty.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import CoalescingQueue
+from repro.serve.request import Op, QueryResult, Request, Ticket
+
+
+@dataclass
+class ServeConfig:
+    """Engine knobs. Batch caps are also the fixed pad widths."""
+
+    query_batch: int = 32
+    insert_batch: int = 32
+    delete_batch: int = 32
+    query_window: float = 0.002       # seconds an under-full run may wait
+    insert_window: float = 0.005
+    delete_window: float = 0.005
+    #: strict = serializable in arrival order (parity mode); relaxed =
+    #: same-op coalescing across op boundaries (throughput mode)
+    strict_order: bool = False
+    k: Optional[int] = None           # search params; None = index config
+    ef: Optional[int] = None
+    rho: Optional[float] = None
+    n_expand: Optional[int] = None
+    #: None = record edge heat only when the maintenance policy consumes
+    #: it (heat_budget set); the per-batch heat scatter is pure cost
+    #: otherwise
+    record_heat: Optional[bool] = None
+    maintenance: MaintenancePolicy = field(default_factory=MaintenancePolicy)
+
+
+class ServeEngine:
+    def __init__(self, index, cfg: Optional[ServeConfig] = None,
+                 clock=time.monotonic):
+        self.index = index
+        self.cfg = cfg or ServeConfig()
+        self.clock = clock
+        self.metrics = ServeMetrics()
+        self.maintenance = MaintenanceManager(index, self.cfg.maintenance)
+        self.queue = CoalescingQueue(
+            batch_caps={Op.QUERY: self.cfg.query_batch,
+                        Op.INSERT: self.cfg.insert_batch,
+                        Op.DELETE: self.cfg.delete_batch},
+            windows={Op.QUERY: self.cfg.query_window,
+                     Op.INSERT: self.cfg.insert_window,
+                     Op.DELETE: self.cfg.delete_window},
+            strict_order=self.cfg.strict_order)
+        self._seq = 0
+        self._lock = threading.RLock()       # queue + id-map access
+        self._pump_lock = threading.RLock()  # serializes batch execution
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        # stable external ids across reorder permutations: a fresh insert's
+        # external id equals its internal id at birth; every relayout perm
+        # is folded into this pair of maps
+        cap = index.cfg.cap
+        self._int2ext = np.arange(cap, dtype=np.int64)
+        self._ext2int = np.arange(cap, dtype=np.int64)
+        self.batch_log: List[tuple] = []   # (op, size) per executed batch
+
+    # -- submission -----------------------------------------------------------
+
+    def _submit(self, op: Op, payload) -> Ticket:
+        with self._lock:
+            req = Request(op=op, payload=payload, seq=self._seq,
+                          t_enqueue=self.clock())
+            self._seq += 1
+            self.queue.push(req)
+            return req.ticket
+
+    def submit_query(self, q) -> Ticket:
+        """Query one vector; ticket resolves to QueryResult."""
+        return self._submit(Op.QUERY, np.asarray(q, np.float32))
+
+    def submit_insert(self, x) -> Ticket:
+        """Insert one vector; ticket resolves to its stable external id."""
+        return self._submit(Op.INSERT, np.asarray(x, np.float32))
+
+    def submit_delete(self, ext_id: int) -> Ticket:
+        """Delete by external id; ticket resolves to True.
+
+        Rejects ids outside [0, cap) up front: -1 (the search-result pad
+        value) would otherwise wrap through the numpy id map and delete
+        an unrelated node.
+        """
+        ext_id = int(ext_id)
+        if not 0 <= ext_id < self.index.cfg.cap:
+            raise ValueError(f"external id {ext_id} outside [0, "
+                             f"{self.index.cfg.cap})")
+        return self._submit(Op.DELETE, ext_id)
+
+    # -- execution ------------------------------------------------------------
+
+    def _exec_query(self, reqs: List[Request]) -> None:
+        qs = np.stack([r.payload for r in reqs])
+        idx = self.index
+        if idx._snap_version != idx._version:
+            self.metrics.snapshot_resolves += 1
+        record_heat = self.cfg.record_heat
+        if record_heat is None:
+            record_heat = self.cfg.maintenance.heat_budget is not None
+        ids, dists = idx.search(
+            qs, k=self.cfg.k, ef=self.cfg.ef, rho=self.cfg.rho,
+            n_expand=self.cfg.n_expand, record_heat=record_heat,
+            use_snapshot=True, pad_to=self.cfg.query_batch)
+        ext = np.where(ids >= 0, self._int2ext[np.maximum(ids, 0)], -1)
+        for row_ids, row_d, req in zip(ext, dists, reqs):
+            req.ticket._complete(QueryResult(ids=row_ids, dists=row_d))
+
+    def _exec_insert(self, reqs: List[Request]) -> None:
+        xs = np.stack([r.payload for r in reqs])
+        new_ids = self.index.insert_batch(xs, pad_to=self.cfg.insert_batch)
+        for i, req in zip(new_ids, reqs):
+            req.ticket._complete(int(self._int2ext[i]))
+
+    def _exec_delete(self, reqs: List[Request]) -> None:
+        ext = np.asarray([r.payload for r in reqs], np.int64)
+        internal = self._ext2int[ext].astype(np.int32)
+        self.index.delete_batch(internal, pad_to=self.cfg.delete_batch)
+        self.maintenance.note_deletes(len(reqs))
+        for req in reqs:
+            req.ticket._complete(True)
+
+    def _apply_perm(self, perm: np.ndarray) -> None:
+        """Fold a reorder permutation (perm[old_int] = new_int) into the
+        external id maps; ids allocated after the perm are untouched."""
+        n = len(perm)
+        old_ext = self._int2ext[:n].copy()
+        self._int2ext[perm] = old_ext
+        self._ext2int[old_ext] = perm
+
+    def pump(self, *, force: bool = False) -> Optional[Op]:
+        """Execute at most one micro-batch; returns its op, or None.
+
+        `force` releases under-full runs immediately (drain semantics).
+        Pumps are serialized against each other by `_pump_lock`, but the
+        queue lock is held only to pop the batch — submit_* never waits
+        behind a device dispatch.
+        """
+        with self._pump_lock:
+            with self._lock:
+                got = self.queue.next_batch(self.clock(), force=force)
+            if got is None:
+                return None
+            op, reqs = got
+            try:
+                if op is Op.QUERY:
+                    self._exec_query(reqs)
+                else:
+                    if op is Op.INSERT:
+                        self._exec_insert(reqs)
+                    else:
+                        self._exec_delete(reqs)
+                    self.maintenance.note_write_batch()
+                    actions = self.maintenance.run_if_due()
+                    if "reorder" in actions:
+                        self._apply_perm(self.maintenance.last_perm)
+                    for a in actions:
+                        self.metrics.maintenance_runs[a] += 1
+            except BaseException as e:
+                for r in reqs:
+                    if not r.ticket.done:
+                        r.ticket._fail(e)
+                raise
+            now = self.clock()
+            self.metrics.record_batch(
+                op, len(reqs), [now - r.t_enqueue for r in reqs], now)
+            self.batch_log.append((op, len(reqs)))
+            return op
+
+    def drain(self) -> int:
+        """Pump until the queue is empty; returns batches executed."""
+        n = 0
+        while True:
+            with self._lock:
+                if len(self.queue) == 0:
+                    return n
+            if self.pump(force=True) is not None:
+                n += 1
+
+    # -- background serving ---------------------------------------------------
+
+    def start(self) -> None:
+        """Run the pump loop in a daemon thread (live serving mode)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if self.pump() is None:
+                    # nothing released: sleep one coalescing quantum
+                    time.sleep(min(self.cfg.query_window,
+                                   self.cfg.insert_window, 0.001))
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="lsmvec-serve")
+        self._thread.start()
+
+    def stop(self, *, drain: bool = True) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        if drain:
+            self.drain()

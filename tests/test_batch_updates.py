@@ -82,8 +82,11 @@ def test_insert_batch_cold_start_seeds_per_item():
 
 
 def test_delete_batch_matches_sequential_deletes():
-    """delete_batch is a scan of Algorithm 2: bit-identical to the
-    per-item loop over the same ids in the same order."""
+    """delete_batch stages Algorithm 2 through an overlay + one bulk
+    `lsm.puts`: every non-store field is bit-identical to the per-item
+    loop over the same ids in the same order, and the LSM tree resolves
+    to identical content (flush timing may differ, never what a lookup
+    returns)."""
     data = make_data(256, seed=9)
     idx_a = LSMVecIndex.build(CFG, data)
     idx_b = LSMVecIndex.build(CFG, data)
@@ -93,11 +96,16 @@ def test_delete_batch_matches_sequential_deletes():
     idx_b.delete_batch(victims)
     for name, a, b in zip(hnsw.HNSWState._fields, idx_a.state, idx_b.state):
         if name == "store":
-            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
-                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+            la, ra = lsm.resolve_all(CFG.lsm_cfg, a, CFG.cap)
+            lb, rb = lsm.resolve_all(CFG.lsm_cfg, b, CFG.cap)
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+            np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
         else:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=name)
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.map(np.asarray, idx_a.stats)),
+        np.asarray(jax.tree.map(np.asarray, idx_b.stats)))
 
 
 def test_delete_batch_removes_from_results(built_index):
@@ -160,6 +168,109 @@ def test_multi_expansion_visits_no_fewer_nodes(built_index):
     hops4 = int(idx.stats.n_hops)
     idx.reset_stats()
     assert hops4 >= hops1
+
+
+def test_insert_batch_padded_matches_exact_shape():
+    """pad-and-mask dispatch: a padded batch produces the same ids and
+    graph as the exact-shape call never could prove alone — padding must
+    not perturb which neighbors valid items link to."""
+    data = make_data(256, seed=30)
+    idx = LSMVecIndex.build(CFG, data)
+    xs = make_data(20, seed=31)
+    ids = idx.insert_batch(xs, pad_to=32)
+    assert ids == list(range(256, 276))
+    assert idx.size == 276
+    assert idx._count == int(idx.state.count) == 276
+    found, _ = idx.search(xs, k=1)
+    assert (found[:, 0] == np.array(ids)).mean() >= 0.9
+    # padding ids were never allocated: nothing lives past the last valid
+    live, rows = lsm.resolve_all(CFG.lsm_cfg, idx.state.store, CFG.cap)
+    assert not np.asarray(live)[276:].any()
+    assert np.asarray(idx.state.levels)[276:].max() == -1
+
+
+def test_insert_batch_padded_no_retrace_across_occupancy():
+    """Different occupancies of the same pad width reuse one traced
+    shape; so does the all-consumed-by-seeding edge (empty rest skips
+    dispatch entirely)."""
+    cfg = CFG._replace(cap=1024)
+    idx = LSMVecIndex(cfg, seed=0)
+    seed_gap = LSMVecIndex.BATCH_MIN_GRAPH - idx.size
+    ids = idx.insert_batch(make_data(seed_gap, seed=32), pad_to=32)
+    assert ids == list(range(seed_gap))
+    assert idx.trace_counts()["insert_batch"] == 0   # all seeded per-item
+    before = None
+    for occupancy, seed in ((32, 33), (7, 34), (1, 35), (32, 36)):
+        ids = idx.insert_batch(make_data(occupancy, seed=seed), pad_to=32)
+        assert len(ids) == occupancy
+        counts = idx.trace_counts()["insert_batch"]
+        if before is not None:
+            assert counts == before, "padded insert retraced"
+        before = counts
+    assert before == 1
+    # ragged chunking: 70 items through width 32 = 3 calls, same trace
+    ids = idx.insert_batch(make_data(70, seed=37), pad_to=32)
+    assert len(ids) == 70 and idx.trace_counts()["insert_batch"] == 1
+
+
+def test_delete_batch_padded_and_masked_ids():
+    """-1 ids are exact no-ops; pad_to chunks and pads transparently."""
+    data = make_data(256, seed=40)
+    idx_a = LSMVecIndex.build(CFG, data)
+    idx_b = LSMVecIndex.build(CFG, data)
+    victims = [5, 99, 180]
+    idx_a.delete_batch(victims, pad_to=8)
+    idx_b.delete_batch(victims)
+    assert idx_a.size == idx_b.size == 253
+    for name, a, b in zip(hnsw.HNSWState._fields, idx_a.state, idx_b.state):
+        if name == "store":
+            la, ra = lsm.resolve_all(CFG.lsm_cfg, a, CFG.cap)
+            lb, rb = lsm.resolve_all(CFG.lsm_cfg, b, CFG.cap)
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+            np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+    # same traced shape across occupancies
+    n0 = idx_a.trace_counts()["delete_batch"]
+    idx_a.delete_batch([7], pad_to=8)
+    assert idx_a.trace_counts()["delete_batch"] == n0
+
+
+def test_search_snapshot_bit_parity(built_index):
+    """Snapshot-gather adjacency + pad-and-mask lanes return exactly what
+    the per-hop LSM path returns, and padded lanes record no heat/stats."""
+    idx, _ = built_index
+    queries = make_data(24, seed=50)
+    ids_a, d_a = idx.search(queries, k=10, record_heat=False)
+    ids_b, d_b = idx.search(queries, k=10, record_heat=False,
+                            use_snapshot=True, pad_to=32)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(d_a, d_b)
+    # stats parity between the two paths on identical queries
+    idx.reset_stats()
+    idx.search(queries, k=10, record_heat=False)
+    direct = jax.tree.map(int, idx.stats)
+    idx.reset_stats()
+    idx.search(queries, k=10, record_heat=False, use_snapshot=True,
+               pad_to=32)
+    snap = jax.tree.map(int, idx.stats)
+    idx.reset_stats()
+    assert direct == snap
+
+
+def test_snapshot_invalidated_on_writes(built_index):
+    """The cached dense view re-resolves after any write: a fresh insert
+    must be findable through the snapshot path immediately."""
+    idx, _ = built_index
+    new = make_data(4, seed=51) + 250.0
+    ids = idx.insert_batch(new, pad_to=8)
+    found, _ = idx.search(new, k=1, use_snapshot=True, pad_to=8)
+    assert set(found[:, 0].tolist()) == set(ids)
+    victim = ids[0]
+    idx.delete_batch([victim], pad_to=8)
+    found2, _ = idx.search(new[:1], k=5, use_snapshot=True, pad_to=8)
+    assert victim not in found2[0].tolist()
 
 
 def test_mixed_batch_and_single_updates():

@@ -1,0 +1,337 @@
+"""Tests for the online serving subsystem (repro.serve, DESIGN.md §8):
+scheduler parity with bare-index execution, coalescing-window policy,
+fixed-shape pad-and-mask dispatch, and maintenance triggers."""
+
+import numpy as np
+import pytest
+
+from repro.core import HNSWConfig, LSMVecIndex
+from repro.core.index import brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+from repro.serve import (CoalescingQueue, MaintenancePolicy, Op, Request,
+                         ServeConfig, ServeEngine)
+
+CFG = HNSWConfig(cap=2048, dim=32, M=12, M_up=6, num_upper=2,
+                 ef_search=48, ef_construction=48, k=10,
+                 rho=1.0, use_filter=False, lsm_mem_cap=128,
+                 lsm_levels=2, lsm_fanout=8, batch_expand=4)
+
+
+def make_data(n, seed=0):
+    return make_clustered_vectors(n, dim=32, seed=seed, clusters=16)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _req(op, payload, seq, t=0.0):
+    return Request(op=op, payload=payload, seq=seq, t_enqueue=t)
+
+
+NO_MAINT = MaintenancePolicy(tombstone_ratio=None, heat_budget=None)
+
+
+# ---------------------------------------------------------------------------
+# coalescing queue
+# ---------------------------------------------------------------------------
+
+def _queue(strict, caps=8, window=0.005):
+    return CoalescingQueue(
+        batch_caps={op: caps for op in Op},
+        windows={op: window for op in Op}, strict_order=strict)
+
+
+def test_queue_holds_underfull_run_until_window():
+    q = _queue(strict=True)
+    for s in range(3):
+        q.push(_req(Op.QUERY, None, s, t=0.0))
+    assert q.next_batch(0.001) is None          # open run, window not up
+    got = q.next_batch(0.006)                   # window expired -> release
+    assert got is not None and got[0] is Op.QUERY and len(got[1]) == 3
+    assert len(q) == 0
+
+
+def test_queue_releases_full_run_immediately():
+    q = _queue(strict=True, caps=4)
+    for s in range(6):
+        q.push(_req(Op.QUERY, None, s, t=0.0))
+    op, run = q.next_batch(0.0)
+    assert op is Op.QUERY and len(run) == 4     # cap reached, no wait
+    assert len(q) == 2
+
+
+def test_queue_strict_releases_at_op_boundary():
+    q = _queue(strict=True)
+    q.push(_req(Op.QUERY, None, 0, t=0.0))
+    q.push(_req(Op.QUERY, None, 1, t=0.0))
+    q.push(_req(Op.INSERT, None, 2, t=0.0))
+    op, run = q.next_batch(0.0)                 # run can't grow: closed
+    assert op is Op.QUERY and len(run) == 2
+    assert q.next_batch(0.0) is None            # lone insert: window holds it
+    op2, run2 = q.next_batch(0.006)             # ... until the window expires
+    assert op2 is Op.INSERT and len(run2) == 1
+
+
+def test_queue_strict_never_jumps_op_boundary():
+    q = _queue(strict=True)
+    q.push(_req(Op.QUERY, "a", 0, t=0.0))
+    q.push(_req(Op.INSERT, None, 1, t=0.0))
+    q.push(_req(Op.QUERY, "b", 2, t=0.0))
+    op, run = q.next_batch(0.0)
+    assert op is Op.QUERY and [r.payload for r in run] == ["a"]
+
+
+def test_queue_relaxed_coalesces_across_boundary():
+    q = _queue(strict=False)
+    q.push(_req(Op.QUERY, "a", 0, t=0.0))
+    q.push(_req(Op.INSERT, None, 1, t=0.0))
+    q.push(_req(Op.QUERY, "b", 2, t=0.0))
+    op, run = q.next_batch(1.0)                 # window long expired
+    assert op is Op.QUERY and [r.payload for r in run] == ["a", "b"]
+    op2, run2 = q.next_batch(1.0)
+    assert op2 is Op.INSERT and len(run2) == 1
+    assert len(q) == 0
+
+
+def test_queue_force_releases_open_run():
+    q = _queue(strict=False)
+    q.push(_req(Op.DELETE, 3, 0, t=0.0))
+    assert q.next_batch(0.0) is None
+    got = q.next_batch(0.0, force=True)
+    assert got is not None and got[0] is Op.DELETE
+
+
+# ---------------------------------------------------------------------------
+# scheduler parity: serve == the same ops applied on a bare index
+# ---------------------------------------------------------------------------
+
+def _interleaved_stream(rng, base, fresh, n_ops):
+    """(op, payload) stream, ~70/15/15, deletes always of live ids."""
+    stream = []
+    live = list(range(len(base)))
+    fi = 0
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.7 or (r >= 0.85 and len(live) < 32):
+            stream.append(("q", base[rng.integers(0, len(base))]))
+        elif r < 0.85 and fi < len(fresh):
+            stream.append(("i", fresh[fi]))
+            fi += 1
+        else:
+            stream.append(("d", live.pop(rng.integers(0, len(live)))))
+    return stream
+
+
+def _expected_runs(stream, caps):
+    """Strict-order coalescing: consecutive same-op runs capped per op."""
+    runs = []
+    for op, payload in stream:
+        if runs and runs[-1][0] == op and len(runs[-1][1]) < caps[op]:
+            runs[-1][1].append(payload)
+        else:
+            runs.append((op, [payload]))
+    return runs
+
+
+def test_strict_stream_parity_with_bare_index():
+    """The tentpole contract: an interleaved stream through the engine
+    (strict order, pad-and-mask dispatch, snapshot reads) returns ids
+    identical to the same micro-batches applied directly to a bare
+    LSMVecIndex, and recall matches the sequential baseline exactly."""
+    base = make_data(512, seed=0)
+    fresh = make_data(96, seed=1)
+    idx_serve = LSMVecIndex.build(CFG, base)
+    idx_bare = LSMVecIndex.build(CFG, base)
+    W = 16
+    eng = ServeEngine(
+        idx_serve,
+        ServeConfig(query_batch=W, insert_batch=W, delete_batch=W,
+                    strict_order=True, query_window=0.0, insert_window=0.0,
+                    delete_window=0.0, maintenance=NO_MAINT),
+        clock=FakeClock())
+
+    rng = np.random.default_rng(7)
+    stream = _interleaved_stream(rng, base, fresh, 400)
+
+    tickets = [(op, eng.submit_query(p) if op == "q" else
+                eng.submit_insert(p) if op == "i" else
+                eng.submit_delete(p)) for op, p in stream]
+    eng.drain()
+
+    # the engine executed exactly the strict coalescing schedule
+    caps = {"q": W, "i": W, "d": W}
+    expected = _expected_runs(stream, caps)
+    got = [(op.value[0], n) for op, n in eng.batch_log]
+    assert got == [(op, len(items)) for op, items in expected]
+
+    # replay the same runs on the bare index through the plain (unpadded
+    # search / padded update) entry points
+    serve_q = iter([t.result() for op, t in tickets if op == "q"])
+    for op, items in expected:
+        if op == "q":
+            ids, dists = idx_bare.search(np.stack(items), k=CFG.k)
+            for row_ids, row_d in zip(ids, dists):
+                res = next(serve_q)
+                np.testing.assert_array_equal(res.ids, row_ids)
+                np.testing.assert_array_equal(res.dists, row_d)
+        elif op == "i":
+            idx_bare.insert_batch(np.stack(items), pad_to=W)
+        else:
+            idx_bare.delete_batch(np.asarray(items), pad_to=W)
+
+    # insert tickets returned the bare-identical id sequence
+    serve_ids = [t.result() for op, t in tickets if op == "i"]
+    assert serve_ids == list(range(512, 512 + len(serve_ids)))
+    assert idx_serve.size == idx_bare.size
+    np.testing.assert_array_equal(np.asarray(idx_serve.state.levels),
+                                  np.asarray(idx_bare.state.levels))
+
+
+def test_serve_zero_retraces_after_warmup():
+    base = make_data(256, seed=2)
+    idx = LSMVecIndex.build(CFG, base)
+    eng = ServeEngine(idx, ServeConfig(query_batch=8, insert_batch=8,
+                                       delete_batch=8, maintenance=NO_MAINT),
+                      clock=FakeClock())
+    fresh = make_data(64, seed=3)
+    rng = np.random.default_rng(4)
+    # warmup: one batch of each op at ragged occupancies
+    for i in range(3):
+        eng.submit_insert(fresh[i])
+    for i in range(5):
+        eng.submit_query(base[i])
+    eng.submit_delete(int(rng.integers(0, 256)))
+    eng.drain()
+    warm = idx.trace_counts()
+    # sustained ragged traffic: occupancies vary, shapes must not
+    fi = 3
+    for round_ in range(6):
+        for _ in range(int(rng.integers(1, 8))):
+            eng.submit_query(base[rng.integers(0, 250)])
+        if round_ % 2 == 0:
+            eng.submit_insert(fresh[fi]); fi += 1
+        else:
+            eng.submit_delete(256 + round_)
+        eng.drain()
+    assert idx.trace_counts() == warm, "serving retraced after warmup"
+
+
+def test_serve_recall_matches_sequential_baseline():
+    """Mixed stream recall through the engine equals the recall of the
+    same final index state queried directly (snapshot path is exact)."""
+    base = make_data(512, seed=5)
+    fresh = make_data(64, seed=6)
+    idx = LSMVecIndex.build(CFG, base)
+    eng = ServeEngine(idx, ServeConfig(query_batch=16, insert_batch=16,
+                                       delete_batch=16, strict_order=True,
+                                       maintenance=NO_MAINT),
+                      clock=FakeClock())
+    ins = [eng.submit_insert(x) for x in fresh]
+    dels = list(range(0, 100, 7))
+    for d in dels:
+        eng.submit_delete(d)
+    eng.drain()
+    queries = make_data(32, seed=8)
+    tickets = [eng.submit_query(q) for q in queries]
+    eng.drain()
+    allv = np.concatenate([base, fresh])
+    live = np.ones(len(allv), bool)
+    live[dels] = False
+    truth = brute_force_knn(allv, queries, 10, live=live)
+    found = np.stack([t.result().ids for t in tickets])
+    r_serve = recall_at_k(found, truth)
+    direct_ids, _ = idx.search(queries, k=10)
+    r_direct = recall_at_k(direct_ids, truth)
+    assert r_serve == pytest.approx(r_direct, abs=1e-9)
+    assert r_serve >= 0.7
+
+
+# ---------------------------------------------------------------------------
+# maintenance policy
+# ---------------------------------------------------------------------------
+
+def test_maintenance_compacts_on_tombstone_ratio():
+    base = make_data(400, seed=9)
+    idx = LSMVecIndex.build(CFG, base)
+    pol = MaintenancePolicy(tombstone_ratio=0.10, heat_budget=None,
+                            check_every=1)
+    eng = ServeEngine(idx, ServeConfig(delete_batch=16, maintenance=pol),
+                      clock=FakeClock())
+    before = int(idx.state.store.n_compactions)
+    for v in range(50):
+        eng.submit_delete(v)
+    eng.drain()
+    assert eng.maintenance.compactions >= 1
+    assert int(idx.state.store.n_compactions) > before
+    assert eng.maintenance.deletes_since_compact < 50   # counter reset
+
+
+def test_maintenance_below_threshold_never_compacts():
+    base = make_data(400, seed=10)
+    idx = LSMVecIndex.build(CFG, base)
+    pol = MaintenancePolicy(tombstone_ratio=0.50, heat_budget=None,
+                            check_every=1)
+    eng = ServeEngine(idx, ServeConfig(delete_batch=16, maintenance=pol),
+                      clock=FakeClock())
+    for v in range(20):
+        eng.submit_delete(v)
+    eng.drain()
+    assert eng.maintenance.compactions == 0
+
+
+def test_maintenance_reorder_keeps_external_ids_stable():
+    """Heat-triggered reordering permutes internal ids; the engine's
+    external id map must keep client-visible ids stable: a vector keeps
+    answering to the id its insert returned, and deletes by old ids keep
+    hitting the right vector."""
+    base = make_data(400, seed=11)
+    idx = LSMVecIndex.build(CFG, base)
+    pol = MaintenancePolicy(tombstone_ratio=None, heat_budget=1,
+                            check_every=1)
+    eng = ServeEngine(idx, ServeConfig(query_batch=16, insert_batch=16,
+                                       delete_batch=16, maintenance=pol),
+                      clock=FakeClock())
+    probe = base[37]
+    t0 = eng.submit_query(probe)
+    eng.drain()
+    assert int(t0.result().ids[0]) == 37
+    # a write batch + accumulated heat triggers the reorder at the check
+    x = make_data(1, seed=12)[0] + 50.0
+    t_ins = eng.submit_insert(x)
+    eng.drain()
+    assert eng.maintenance.reorders >= 1
+    perm = eng.maintenance.last_perm
+    assert perm is not None and not np.array_equal(
+        perm, np.arange(len(perm)))          # the relayout actually moved ids
+    # same probe still answers to its original external id
+    t1 = eng.submit_query(probe)
+    t2 = eng.submit_query(x)
+    eng.drain()
+    assert int(t1.result().ids[0]) == 37
+    assert int(t2.result().ids[0]) == int(t_ins.result())
+    # delete by external id removes that vector
+    eng.submit_delete(37)
+    t3 = eng.submit_query(probe)
+    eng.drain()
+    assert int(t3.result().ids[0]) != 37
+    assert idx.size == 400   # 400 base + 1 insert - 1 delete
+
+
+def test_background_thread_serving():
+    base = make_data(256, seed=13)
+    idx = LSMVecIndex.build(CFG, base)
+    eng = ServeEngine(idx, ServeConfig(query_batch=8, query_window=0.001,
+                                       maintenance=NO_MAINT))
+    eng.start()
+    try:
+        tickets = [eng.submit_query(base[i]) for i in range(20)]
+        results = [t.result(timeout=60.0) for t in tickets]
+    finally:
+        eng.stop()
+    hits = [int(r.ids[0]) == i for i, r in enumerate(results)]
+    assert np.mean(hits) >= 0.9
