@@ -1,0 +1,16 @@
+"""Small shared helpers for the benchmark CLIs (no heavy imports)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def write_bench_json(path: str, doc: dict) -> None:
+    """Write a BENCH_*.json document (creating parent dirs)."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")

@@ -31,6 +31,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from _util import write_bench_json                            # noqa: E402
 from repro.core import hnsw                                   # noqa: E402
 from repro.core.index import (LSMVecIndex, brute_force_knn,   # noqa: E402
                               recall_at_k)
@@ -216,12 +217,14 @@ def main(argv=None) -> int:
     print(json.dumps(doc, indent=1))
     if args.smoke:
         print("smoke: schema OK (perf criteria not enforced)")
+        if args.out:
+            # an explicit --out in smoke mode gets the smoke doc (CI
+            # uploads the measurement it produced); the committed full-
+            # run JSON is only written by full runs
+            write_bench_json(args.out, doc)
         return 0
 
-    with open(out, "w") as f:
-        json.dump(doc, f, indent=1)
-        f.write("\n")
-    print(f"wrote {out}")
+    write_bench_json(out, doc)
     for name, ok in doc["criteria"].items():
         print(f"  {'PASS' if ok else 'FAIL'} {name}")
     return 0

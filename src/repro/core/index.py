@@ -87,6 +87,10 @@ class LSMVecIndex:
         def _delete_batch(state, ids):
             return hnsw.delete_batch(cfg_, state, ids)
 
+        @functools.partial(jax.jit, donate_argnums=0)
+        def _consolidate(state):
+            return hnsw.consolidate(cfg_, state)
+
         @functools.partial(jax.jit, static_argnames=("rho", "use_filter",
                                                      "ef", "n_expand"))
         def _search(state, qs, rho, use_filter, ef, n_expand):
@@ -123,6 +127,7 @@ class LSMVecIndex:
         self._insert_batch_fn = _insert_batch
         self._delete_fn = _delete
         self._delete_batch_fn = _delete_batch
+        self._consolidate_fn = _consolidate
         self._search_fn = _search
         self._search_snap_fn = _search_snap
         self._resolve_fn = _resolve
@@ -194,16 +199,22 @@ class LSMVecIndex:
         return ids
 
     def delete(self, node_id: int) -> None:
+        """Delete one id.  Under `cfg.lazy_delete` (default) this only
+        sets the tombstone bit — no LSM write, so the cached read
+        snapshot stays valid (the returnable mask, not the snapshot,
+        hides the node)."""
         self.state, st = self._delete_fn(self.state, jnp.asarray(node_id))
-        self._version += 1
+        if not self.cfg.lazy_delete:
+            self._version += 1
         self.stats = self.stats + st
 
     def delete_batch(self, ids, *, pad_to: Optional[int] = None) -> None:
-        """Delete a batch of ids in one jit'd overlay-staged device call.
+        """Delete a batch of ids in one jit'd device call.
 
         `pad_to` pads the id vector with -1 (masked no-ops in
         `hnsw.delete_batch`) so serving micro-batches of any occupancy
-        dispatch through one traced shape; larger batches chunk.
+        dispatch through one traced shape; larger batches chunk.  Lazy
+        deletes leave the read snapshot valid (tombstone-bit only).
         """
         ids = np.atleast_1d(np.asarray(ids, np.int32))
         if len(ids) == 0:
@@ -215,7 +226,8 @@ class LSMVecIndex:
             padded[:len(chunk)] = chunk
             self.state, st = self._delete_batch_fn(
                 self.state, jnp.asarray(padded))
-            self._version += 1
+            if not self.cfg.lazy_delete:
+                self._version += 1
             self.stats = self.stats + st
 
     # -- search ---------------------------------------------------------------
@@ -291,6 +303,20 @@ class LSMVecIndex:
             store=lsm.compact_all(self.cfg.lsm_cfg, self.state.store))
         self._version += 1
 
+    def consolidate(self) -> int:
+        """Splice tombstoned nodes out of the graph and reclaim slots
+        (lazy-deletion phase 2, DESIGN.md §9).  Returns the number of
+        slots reclaimed.  Internal ids are never reused, so external id
+        maps stay valid with no rewrite.  One scalar sync up front — this
+        is the rare maintenance path, not the serving hot path."""
+        n = int(self.state.n_tombstones)
+        if n == 0:
+            return 0
+        self.state, st = self._consolidate_fn(self.state)
+        self.stats = self.stats + st
+        self._version += 1
+        return n
+
     # -- read snapshot (DESIGN.md §8) -----------------------------------------
 
     def snapshot(self) -> jax.Array:
@@ -339,3 +365,13 @@ class LSMVecIndex:
     @property
     def size(self) -> int:
         return int(self.state.n_live)
+
+    @property
+    def n_tombstones(self) -> int:
+        """Nodes lazily deleted but not yet consolidated (one sync)."""
+        return int(self.state.n_tombstones)
+
+    @property
+    def delete_noops(self) -> int:
+        """Deletes of absent/already-deleted ids, counted not executed."""
+        return int(self.state.n_delete_noops)

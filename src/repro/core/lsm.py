@@ -339,6 +339,48 @@ def bulk_load(cfg: LSMConfig, keys, vals) -> LSMState:
                        level_live=level_live, level_counts=level_counts)
 
 
+def rebuild_from_dense(cfg: LSMConfig, st: LSMState, keep: jax.Array,
+                       rows: jax.Array) -> LSMState:
+    """Rewrite the whole tree from a dense view in one pass (jit-friendly).
+
+    `keep` (bool[id_space]) selects which ids survive; `rows` carries
+    their final adjacency.  The result is a fresh tree whose last level
+    holds exactly the kept rows (sorted, tombstone-free) — the
+    StreamingMerge-style consolidation write path: instead of staging one
+    put per repaired row plus one LSM tombstone per reclaimed id (and
+    paying cascade merges for all of them), the consolidated graph is
+    emitted as a single sorted run, like a major compaction that also
+    drops the reclaimed ids.  Requires id_space <= last-level capacity
+    (the HNSWConfig.lsm_cfg sizing invariant).  Write/flush counters are
+    carried forward; the rewrite itself counts as one compaction.
+    """
+    id_space = keep.shape[0]
+    cap = cfg.level_caps[-1]
+    if id_space > cap:
+        raise ValueError(
+            f"rebuild_from_dense of {id_space} ids exceeds last-level "
+            f"cap {cap}")
+    keep = jnp.asarray(keep, jnp.bool_)
+    ids = jnp.arange(id_space, dtype=jnp.int32)
+    keys = jnp.where(keep, ids, PAD_KEY)
+    order = jnp.argsort(keys)
+    n_keep = jnp.sum(keep).astype(jnp.int32)
+    lk = jnp.full((cap,), PAD_KEY, jnp.int32).at[:id_space].set(keys[order])
+    lv = jnp.full((cap, cfg.row_width), EMPTY, jnp.int32).at[:id_space].set(
+        jnp.asarray(rows, jnp.int32)[order])
+    ll = jnp.zeros((cap,), jnp.int8).at[:id_space].set(
+        keep[order].astype(jnp.int8))
+    fresh = init(cfg)
+    return fresh._replace(
+        level_keys=fresh.level_keys[:-1] + (lk,),
+        level_vals=fresh.level_vals[:-1] + (lv,),
+        level_live=fresh.level_live[:-1] + (ll,),
+        level_counts=fresh.level_counts[:-1] + (n_keep,),
+        write_seq=st.write_seq + n_keep,
+        n_flushes=st.n_flushes,
+        n_compactions=st.n_compactions + 1)
+
+
 def compact_all(cfg: LSMConfig, st: LSMState) -> LSMState:
     """Force-merge everything into the last level (major compaction)."""
     st = flush(cfg, st)

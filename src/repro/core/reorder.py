@@ -195,4 +195,5 @@ def apply_permutation(cfg: hnsw.HNSWConfig, state: hnsw.HNSWState,
         entry=jnp.where(state.entry >= 0,
                         perm_j[jnp.maximum(state.entry, 0)], state.entry),
         heat=state.heat[inv],
+        tombstone=state.tombstone[inv],
     )

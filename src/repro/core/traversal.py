@@ -78,6 +78,7 @@ def beam_search(
     mean_norm: jax.Array,            # f32[]
     n_expand: int = 1,               # B: frontier nodes expanded per iteration
     active: jax.Array | None = None,  # bool[] — False: inert (padded) lane
+    returnable: jax.Array | None = None,  # bool[cap] — None: all of `live`
 ) -> BeamResult:
     """Single-query sampling-guided beam search.  vmap over queries.
 
@@ -85,6 +86,14 @@ def beam_search(
     ids at once (-1 for inactive expansion slots, which must yield all -1
     rows) so the storage layer can serve the whole frontier block in one
     lookup (`lsm.get_batch`) instead of B point reads.
+
+    `live` is the *routable* mask: nodes the traversal may fetch and
+    expand through.  `returnable` (optional) is the stricter mask of
+    nodes allowed in the final result list — the lazy-deletion contract
+    (DESIGN.md §9): tombstoned nodes stay routable (their edges keep the
+    graph connected and the beam expands through them at full cost) but
+    are masked out of the returned heap after the loop.  None means
+    every routable node is returnable (the classic eager behavior).
 
     `max_iters` budgets *expansions*, not loop trips: with B > 1 an
     iteration can pop fewer than B nodes when the frontier is thin (the
@@ -232,6 +241,16 @@ def beam_search(
             heat_nodes, heat_mask)
     (_, beam_ids, beam_d, _, _, stats, heat_nodes, heat_mask) = \
         jax.lax.while_loop(cond, body, init)
+    if returnable is not None:
+        # routable-but-not-returnable entries (tombstones) are demoted to
+        # +inf/-1 and the survivors re-packed to the front — one selection
+        # outside the loop, so routing cost is identical with or without
+        # tombstones in the beam
+        ok = (beam_ids >= 0) & returnable[jnp.clip(beam_ids, 0, cap - 1)]
+        beam_d = jnp.where(ok, beam_d, INF)
+        neg_d, order = jax.lax.top_k(-beam_d, ef)
+        beam_d = -neg_d
+        beam_ids = jnp.where(jnp.isfinite(beam_d), beam_ids[order], -1)
     return BeamResult(beam_ids, beam_d, stats,
                       heat_nodes.reshape(heat_len * B),
                       heat_mask.reshape(heat_len * B, M))

@@ -10,7 +10,8 @@ threshold-driven maintenance.
 - queue      — arrival-ordered coalescing queue (strict/relaxed modes)
 - scheduler  — ServeEngine: pad-and-mask dispatch, snapshot lifecycle
 - metrics    — p50/p99 latency, occupancy, QPS
-- maintenance— tombstone/heat thresholds -> compact()/reorder()
+- maintenance— tombstone/heat thresholds -> consolidate()/compact()/
+  reorder() (lazy-delete consolidation: DESIGN.md §9)
 """
 
 from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy

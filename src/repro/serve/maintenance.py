@@ -1,11 +1,15 @@
-"""Background maintenance policy: threshold-triggered compaction and
-connectivity-aware relayout (DESIGN.md §8).
+"""Background maintenance policy: threshold-triggered consolidation,
+compaction, and connectivity-aware relayout (DESIGN.md §8-9).
 
 The paper runs graph reordering piggybacked on LSM compaction (§3.4);
 the seed repo left both as manual calls.  Here they become policy: the
 engine tracks tombstone pressure host-side (no device syncs) and samples
 the accumulated edge heat at a fixed batch cadence, triggering
 
+- `consolidate()` when lazily-deleted (routable-but-not-returnable)
+  nodes exceed `consolidate_ratio` of the index — the Quake-style
+  live-workload trigger for the FreshDiskANN-style graph repair that
+  splices tombstones out and reclaims their slots (DESIGN.md §9),
 - `compact()` when staged deletes since the last compaction exceed
   `tombstone_ratio` of the live set — bounding LSM read amplification
   and the dead-entry tax on resolve, and
@@ -14,6 +18,8 @@ the accumulated edge heat at a fixed batch cadence, triggering
 
 Reordering permutes node ids, so the engine owns an external↔internal id
 mapping and folds each permutation into it; clients keep their ids.
+Consolidation retires internal ids without reusing them, so the same map
+needs no rewrite — reclaimed entries simply become inert.
 """
 
 from __future__ import annotations
@@ -29,7 +35,12 @@ import numpy as np
 class MaintenancePolicy:
     """Thresholds; None disables the corresponding trigger."""
 
-    tombstone_ratio: Optional[float] = 0.25   # staged deletes / live size
+    #: LSM-staged deletes / live size (eager mode; lazy deletes stage
+    #: nothing — consolidation doubles as their major compaction)
+    tombstone_ratio: Optional[float] = 0.25
+    #: graph tombstones / (live + tombstones) before consolidation runs
+    #: (only meaningful under cfg.lazy_delete)
+    consolidate_ratio: Optional[float] = 0.25
     heat_budget: Optional[int] = None         # total edge-heat counts
     check_every: int = 16                     # write batches between checks
     reorder_window: int = 8
@@ -46,9 +57,20 @@ class MaintenanceManager:
         self.write_batches_since_check = 0
         self.compactions = 0
         self.reorders = 0
+        self.consolidations = 0
+        self.slots_reclaimed = 0
 
     def note_deletes(self, n: int) -> None:
-        self.deletes_since_compact += n
+        """Count LSM-staged deletes toward the compact trigger.
+
+        Lazy deletes are tombstone-bit-only — they stage nothing in the
+        LSM, so they must not accrue compaction pressure (a compact
+        would rewrite every level to drop zero dead entries and
+        invalidate the read snapshot for nothing); consolidation is
+        their compaction and resets the counter itself.
+        """
+        if not self.index.cfg.lazy_delete:
+            self.deletes_since_compact += n
 
     def note_write_batch(self) -> None:
         self.write_batches_since_check += 1
@@ -72,6 +94,19 @@ class MaintenanceManager:
         self.last_perm: Optional[np.ndarray] = None
 
         pol = self.policy
+        if pol.consolidate_ratio is not None \
+                and self.index.cfg.lazy_delete:
+            # one scalar sync per check (like the heat probe below): the
+            # live tombstone count is the Quake-style workload signal
+            nt = int(self.index.state.n_tombstones)
+            denom = max(self.index.size + nt, 1)
+            if nt > 0 and nt / denom >= pol.consolidate_ratio:
+                self.slots_reclaimed += self.index.consolidate()
+                self.consolidations += 1
+                # the rebuilt store is fully compacted and tombstone-free
+                self.deletes_since_compact = 0
+                actions.append("consolidate")
+
         if pol.tombstone_ratio is not None:
             live = max(self.index.size, 1)
             if self.deletes_since_compact / live >= pol.tombstone_ratio \

@@ -26,7 +26,13 @@ class ServeMetrics:
         self._t_start: float | None = None
         self._t_last: float | None = None
         self.snapshot_resolves = 0
-        self.maintenance_runs: Dict[str, int] = {"compact": 0, "reorder": 0}
+        self.maintenance_runs: Dict[str, int] = {
+            "compact": 0, "reorder": 0, "consolidate": 0}
+        #: deletes the engine dropped host-side as duplicates of an
+        #: already-deleted external id (relaxed coalescing can double-
+        #: submit); the device-side count of absent-id no-ops lives on
+        #: the index (`LSMVecIndex.delete_noops`)
+        self.delete_noops = 0
 
     def record_batch(self, op: Op, n: int, latencies, now: float) -> None:
         self._count[op] += n
@@ -50,6 +56,7 @@ class ServeMetrics:
             wall = max(self._t_last - self._t_start, 1e-9)
         out: dict = {"wall_s": round(wall, 4),
                      "snapshot_resolves": self.snapshot_resolves,
+                     "delete_noops": self.delete_noops,
                      "maintenance": dict(self.maintenance_runs)}
         for op in Op:
             nb = self._batches[op]

@@ -10,10 +10,13 @@ Every op dispatches through one traced shape (`pad_to` on the index's
 batch entry points), so steady-state serving performs **zero jit
 retraces** regardless of how ragged the arrival pattern is.  Query
 batches read bottom-layer adjacency from the cached dense LSM snapshot,
-re-resolved lazily after each write batch.  Maintenance (LSM compaction,
-heat-driven reordering) runs from thresholds between batches; reordering
-permutes internal ids, which the engine hides behind a stable external
-id map.
+re-resolved lazily after each write batch (lazy deletes are
+tombstone-bit-only and leave the snapshot valid).  Maintenance
+(tombstone consolidation, LSM compaction, heat-driven reordering) runs
+from thresholds between batches; reordering permutes internal ids,
+which the engine hides behind a stable external id map — consolidation
+retires ids without reuse, so the same map needs no rewrite
+(DESIGN.md §9).
 
 The engine is single-threaded at heart — `pump()` executes at most one
 micro-batch and is the unit the tests drive deterministically (with an
@@ -87,6 +90,12 @@ class ServeEngine:
         cap = index.cfg.cap
         self._int2ext = np.arange(cap, dtype=np.int64)
         self._ext2int = np.arange(cap, dtype=np.int64)
+        # external ids already deleted through this engine: a repeat
+        # delete (relaxed coalescing can double-submit one client retry)
+        # is dropped host-side as a counted no-op instead of reaching the
+        # device.  Internal ids are never reused (consolidation retires
+        # them, DESIGN.md §9), so entries are never removed.
+        self._deleted_ext: set = set()
         self.batch_log: List[tuple] = []   # (op, size) per executed batch
 
     # -- submission -----------------------------------------------------------
@@ -108,7 +117,9 @@ class ServeEngine:
         return self._submit(Op.INSERT, np.asarray(x, np.float32))
 
     def submit_delete(self, ext_id: int) -> Ticket:
-        """Delete by external id; ticket resolves to True.
+        """Delete by external id; ticket resolves to True, or False when
+        the id was already deleted through this engine (the delete is
+        then a counted no-op — `metrics.delete_noops` — not a write).
 
         Rejects ids outside [0, cap) up front: -1 (the search-result pad
         value) would otherwise wrap through the numpy id map and delete
@@ -146,11 +157,33 @@ class ServeEngine:
 
     def _exec_delete(self, reqs: List[Request]) -> None:
         ext = np.asarray([r.payload for r in reqs], np.int64)
-        internal = self._ext2int[ext].astype(np.int32)
-        self.index.delete_batch(internal, pad_to=self.cfg.delete_batch)
-        self.maintenance.note_deletes(len(reqs))
-        for req in reqs:
-            req.ticket._complete(True)
+        # drop repeats (within the batch and against history) host-side:
+        # the ticket still resolves, but nothing reaches the device for
+        # them — a double delete must be a counted no-op, not a write.
+        # Only *allocated* ids are recorded: a delete of a not-yet-
+        # allocated ext id must not poison the id against the day an
+        # insert hands it out (the device counts it as a no-op instead).
+        allocated = self._ext2int[ext] < self.index._count
+        fresh = np.ones(len(ext), bool)
+        batch_seen: set = set()
+        for j, e in enumerate(ext):
+            if int(e) in self._deleted_ext or int(e) in batch_seen:
+                fresh[j] = False
+            elif allocated[j]:
+                batch_seen.add(int(e))
+        n_noop = int((~fresh).sum())
+        if n_noop:
+            self.metrics.delete_noops += n_noop
+        internal = np.where(fresh, self._ext2int[ext], -1).astype(np.int32)
+        if fresh.any():
+            self.index.delete_batch(internal, pad_to=self.cfg.delete_batch)
+        # record only after the device call succeeded: a raised dispatch
+        # must not poison the ids as 'already deleted' (the client will
+        # retry the failed tickets)
+        self._deleted_ext.update(batch_seen)
+        self.maintenance.note_deletes(int(fresh.sum()))
+        for req, f in zip(reqs, fresh):
+            req.ticket._complete(bool(f))
 
     def _apply_perm(self, perm: np.ndarray) -> None:
         """Fold a reorder permutation (perm[old_int] = new_int) into the
@@ -159,6 +192,12 @@ class ServeEngine:
         old_ext = self._int2ext[:n].copy()
         self._int2ext[perm] = old_ext
         self._ext2int[old_ext] = perm
+
+    @property
+    def delete_noops(self) -> int:
+        """Total no-op deletes: engine-level repeats dropped host-side
+        plus device-counted deletes of absent/dead internal ids."""
+        return self.metrics.delete_noops + self.index.delete_noops
 
     def pump(self, *, force: bool = False) -> Optional[Op]:
         """Execute at most one micro-batch; returns its op, or None.

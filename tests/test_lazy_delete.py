@@ -1,0 +1,296 @@
+"""Tests for two-phase lazy deletion (DESIGN.md §9): tombstone
+routability, background consolidation, no-op delete accounting, and
+id-stability through the serving layer's reorder/consolidate cycle."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+from repro.serve import MaintenancePolicy, ServeConfig, ServeEngine
+
+CFG = hnsw.HNSWConfig(cap=2048, dim=32, M=12, M_up=6, num_upper=2,
+                      ef_search=48, ef_construction=48, k=10,
+                      rho=1.0, use_filter=False, lsm_mem_cap=128,
+                      lsm_levels=2, lsm_fanout=8)
+CFG_EAGER = CFG._replace(lazy_delete=False)
+
+
+def make_data(n, seed=0):
+    return make_clustered_vectors(n, dim=32, seed=seed, clusters=16)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# phase 1: tombstones are routable but never returnable
+# ---------------------------------------------------------------------------
+
+def test_lazy_delete_masks_results_without_graph_writes():
+    data = make_data(512, seed=0)
+    idx = LSMVecIndex.build(CFG, data)
+    seq_before = int(idx.state.store.write_seq)
+    victims = [3, 77, 200, 201, 499]
+    idx.delete_batch(np.asarray(victims))
+    # phase 1 is a pure tombstone-bit write: the LSM saw nothing
+    assert int(idx.state.store.write_seq) == seq_before
+    assert idx.size == 512 - len(victims)
+    assert idx.n_tombstones == len(victims)
+    ids, _ = idx.search(data[victims], k=10)
+    assert not (set(ids.flatten().tolist()) & set(victims)), \
+        "tombstoned id returned"
+
+
+def test_bridge_delete_keeps_graph_connected_before_consolidation():
+    """Deleting the upper-layer skeleton (the graph's bridge/hub nodes)
+    must not disconnect the bottom layer: tombstones stay routable, so
+    recall over the remaining nodes is preserved pre-consolidation."""
+    data = make_data(512, seed=1)
+    idx = LSMVecIndex.build(CFG, data)
+    # every node on layer >= 1 is a long-range bridge by construction
+    bridges = np.flatnonzero(np.asarray(idx.state.levels) > 0).tolist()
+    assert len(bridges) >= 20          # the instance has a real skeleton
+    idx.delete_batch(np.asarray(bridges, np.int32))
+    live = np.ones(512, bool)
+    live[bridges] = False
+    queries = make_data(32, seed=2)
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
+                            live=jnp.asarray(live))
+    ids, _ = idx.search(queries, k=10)
+    assert not (set(ids.flatten().tolist()) & set(bridges))
+    r = recall_at_k(ids, truth)
+    assert r >= 0.75, f"bridge deletes disconnected the graph: {r:.3f}"
+
+
+def test_lazy_recall_beats_eager_under_heavy_churn():
+    data = make_data(512, seed=3)
+    rng = np.random.default_rng(0)
+    victims = rng.choice(512, 170, replace=False).astype(np.int32)
+    live = np.ones(512, bool)
+    live[victims] = False
+    queries = make_data(24, seed=4)
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
+                            live=jnp.asarray(live))
+
+    idx_l = LSMVecIndex.build(CFG, data)
+    idx_l.delete_batch(victims)
+    r_lazy = recall_at_k(idx_l.search(queries, k=10)[0], truth)
+
+    idx_e = LSMVecIndex.build(CFG_EAGER, data)
+    idx_e.delete_batch(victims)
+    r_eager = recall_at_k(idx_e.search(queries, k=10)[0], truth)
+    assert r_lazy >= r_eager, (r_lazy, r_eager)
+
+
+# ---------------------------------------------------------------------------
+# phase 2: consolidation reclaims slots and leaves a clean graph
+# ---------------------------------------------------------------------------
+
+def test_consolidate_reclaims_and_search_is_tombstone_free():
+    data = make_data(512, seed=5)
+    idx = LSMVecIndex.build(CFG, data)
+    rng = np.random.default_rng(1)
+    victims = rng.choice(512, 150, replace=False).astype(np.int32)
+    idx.delete_batch(victims)
+    assert idx.consolidate() == 150
+    # clean state: no tombstones, levels retired, store holds live rows only
+    assert idx.n_tombstones == 0
+    assert not bool(jnp.any(idx.state.tombstone))
+    lv = np.asarray(idx.state.levels)
+    assert (lv[victims] == -1).all()
+    assert idx.size == 362 and int((lv >= 0).sum()) == 362
+    # no surviving row routes through a reclaimed id
+    snap = np.asarray(idx.snapshot())
+    assert not (set(snap[snap >= 0].tolist()) & set(victims.tolist()))
+    live = np.ones(512, bool)
+    live[victims] = False
+    queries = make_data(24, seed=6)
+    truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
+                            live=jnp.asarray(live))
+    ids, _ = idx.search(queries, k=10)
+    assert not (set(ids.flatten().tolist()) & set(victims.tolist()))
+    assert recall_at_k(ids, truth) >= 0.7
+
+
+def test_consolidate_entry_repair_and_updates_after():
+    data = make_data(256, seed=7)
+    idx = LSMVecIndex.build(CFG, data)
+    entry = int(idx.state.entry)
+    idx.delete(entry)                   # tombstone the entry node itself
+    ids, _ = idx.search(data[entry][None, :], k=1)
+    assert int(ids[0, 0]) != entry      # routable but not returnable
+    idx.consolidate()
+    assert int(idx.state.entry) != entry
+    assert int(idx.state.levels[int(idx.state.entry)]) >= 0
+    # the index keeps working: insert + exact self-search
+    x = make_data(1, seed=8)[0] + 60.0
+    nid = idx.insert(x)
+    found, _ = idx.search(x[None, :], k=1)
+    assert int(found[0, 0]) == nid
+
+
+def test_consolidate_on_clean_index_is_noop():
+    data = make_data(128, seed=9)
+    idx = LSMVecIndex.build(CFG, data)
+    before = np.asarray(idx.snapshot())
+    assert idx.consolidate() == 0       # no tombstones: nothing to do
+    np.testing.assert_array_equal(np.asarray(idx.snapshot()), before)
+
+
+# ---------------------------------------------------------------------------
+# no-op delete accounting (never a silent graph write)
+# ---------------------------------------------------------------------------
+
+def test_double_delete_and_absent_id_are_counted_noops():
+    data = make_data(256, seed=10)
+    idx = LSMVecIndex.build(CFG, data)
+    idx.delete(7)
+    seq = int(idx.state.store.write_seq)
+    size = idx.size
+    idx.delete(7)          # already tombstoned
+    idx.delete(1900)       # never inserted (inside cap)
+    idx.delete_batch(np.asarray([7, 7, 2000], np.int32))
+    assert idx.delete_noops == 5
+    assert idx.size == size
+    assert idx.n_tombstones == 1
+    assert int(idx.state.store.write_seq) == seq
+
+
+def test_eager_double_delete_is_counted_noop_without_store_write():
+    data = make_data(256, seed=11)
+    idx = LSMVecIndex.build(CFG_EAGER, data)
+    idx.delete(5)
+    size = idx.size
+    lv = np.asarray(idx.state.levels).copy()
+    snap_before = np.asarray(idx.snapshot())
+    idx.delete(5)          # double delete through the eager path
+    idx.delete_batch(np.asarray([5, 1800], np.int32))
+    assert idx.delete_noops == 3
+    assert idx.size == size
+    np.testing.assert_array_equal(np.asarray(idx.state.levels), lv)
+    # graph content untouched (the old path re-tombstoned the key)
+    np.testing.assert_array_equal(np.asarray(idx.snapshot()), snap_before)
+
+
+# ---------------------------------------------------------------------------
+# serving layer: trigger, id-map contract, double-delete under coalescing
+# ---------------------------------------------------------------------------
+
+def test_serve_consolidation_trigger_and_id_stability():
+    """Threshold-triggered consolidation + heat-triggered reorder must
+    keep client-visible external ids stable: probes keep answering to
+    the ids their inserts returned, reclaimed ids never reappear."""
+    data = make_data(400, seed=12)
+    idx = LSMVecIndex.build(CFG, data)
+    pol = MaintenancePolicy(tombstone_ratio=None, consolidate_ratio=0.20,
+                            heat_budget=1, check_every=1)
+    eng = ServeEngine(idx, ServeConfig(query_batch=16, insert_batch=16,
+                                       delete_batch=16, maintenance=pol),
+                      clock=FakeClock())
+    probe = data[37]
+    ins_vec = make_data(1, seed=13)[0] + 50.0
+    t_ins = eng.submit_insert(ins_vec)
+    eng.drain()
+    victims = list(range(100, 200))     # 100 of 401 -> ratio 0.25 >= 0.20
+    for v in victims:
+        eng.submit_delete(v)
+    eng.drain()
+    assert eng.maintenance.consolidations >= 1
+    # the trigger fires mid-stream at the 0.20 ratio; deletes arriving
+    # after the last check stay tombstoned until the next one
+    assert eng.maintenance.slots_reclaimed + idx.n_tombstones \
+        == len(victims)
+    assert eng.maintenance.slots_reclaimed >= 80
+    # reorder also ran (heat_budget=1): both id-map mechanisms composed
+    t1 = eng.submit_query(probe)
+    t2 = eng.submit_query(ins_vec)
+    eng.drain()
+    assert int(t1.result().ids[0]) == 37
+    assert int(t2.result().ids[0]) == int(t_ins.result())
+    returned = set(t1.result().ids.tolist()) | set(t2.result().ids.tolist())
+    assert not (returned & set(victims)), "reclaimed external id returned"
+
+
+def test_lazy_deletes_never_trigger_lsm_compaction():
+    """Lazy deletes stage nothing in the LSM: the tombstone_ratio
+    compact trigger must stay silent (a compact would rewrite every
+    level to drop zero entries); consolidation covers them instead."""
+    data = make_data(400, seed=19)
+    idx = LSMVecIndex.build(CFG, data)
+    pol = MaintenancePolicy(tombstone_ratio=0.10, consolidate_ratio=0.30,
+                            heat_budget=None, check_every=1)
+    eng = ServeEngine(idx, ServeConfig(delete_batch=16, maintenance=pol),
+                      clock=FakeClock())
+    for v in range(80):                 # 20% churn: under consolidate, but
+        eng.submit_delete(v)            # far over the 0.10 compact ratio
+    eng.drain()
+    assert eng.maintenance.compactions == 0
+    assert eng.maintenance.deletes_since_compact == 0
+    assert idx.n_tombstones == 80
+
+
+def test_serve_double_delete_under_coalescing_is_counted_noop():
+    data = make_data(256, seed=14)
+    idx = LSMVecIndex.build(CFG, data)
+    eng = ServeEngine(idx, ServeConfig(
+        delete_batch=8, strict_order=False,
+        maintenance=MaintenancePolicy(tombstone_ratio=None,
+                                      consolidate_ratio=None,
+                                      heat_budget=None)),
+        clock=FakeClock())
+    t1 = eng.submit_delete(9)
+    t2 = eng.submit_delete(9)           # coalesces into the same batch
+    eng.drain()
+    t3 = eng.submit_delete(9)           # and a later batch
+    eng.drain()
+    assert t1.result() is True
+    assert t2.result() is False and t3.result() is False
+    assert eng.metrics.delete_noops == 2
+    assert eng.delete_noops == 2
+    assert idx.size == 255
+
+
+def test_delete_of_unallocated_ext_id_does_not_poison_it():
+    """A delete of an in-range but not-yet-allocated external id is a
+    device-counted no-op and must NOT block the future legitimate
+    delete of that id once an insert allocates it."""
+    data = make_data(256, seed=17)
+    idx = LSMVecIndex.build(CFG, data)
+    eng = ServeEngine(idx, ServeConfig(
+        insert_batch=8, delete_batch=8,
+        maintenance=MaintenancePolicy(tombstone_ratio=None,
+                                      consolidate_ratio=None,
+                                      heat_budget=None)),
+        clock=FakeClock())
+    t0 = eng.submit_delete(256)          # not allocated yet
+    eng.drain()
+    assert t0.result() is True           # dispatched; device counted it
+    assert idx.delete_noops == 1 and idx.size == 256
+    t_ins = eng.submit_insert(make_data(1, seed=18)[0] + 40.0)
+    eng.drain()
+    assert t_ins.result() == 256         # the id is now live
+    t1 = eng.submit_delete(256)          # ... and must be deletable
+    eng.drain()
+    assert t1.result() is True
+    assert idx.size == 256 and idx.n_tombstones == 1
+
+
+def test_search_stays_exactly_k_deep_under_tombstones():
+    """ef >> k: even with many tombstones in the beam the returnable
+    re-pack must still fill all k result slots."""
+    data = make_data(512, seed=15)
+    idx = LSMVecIndex.build(CFG, data)
+    rng = np.random.default_rng(2)
+    idx.delete_batch(rng.choice(512, 200, replace=False).astype(np.int32))
+    ids, dists = idx.search(make_data(16, seed=16), k=10)
+    assert (ids >= 0).all(), "returnable re-pack under-filled the top-k"
+    assert np.isfinite(dists).all()
+    for row in dists:
+        assert np.all(np.diff(row) >= -1e-5)   # still distance-sorted

@@ -256,8 +256,11 @@ def test_serve_recall_matches_sequential_baseline():
 # ---------------------------------------------------------------------------
 
 def test_maintenance_compacts_on_tombstone_ratio():
+    # the compact trigger counts LSM-staged deletes, which only the
+    # eager delete path produces (lazy deletes are tombstone-bit-only
+    # and consolidation is their compaction — see test_lazy_delete)
     base = make_data(400, seed=9)
-    idx = LSMVecIndex.build(CFG, base)
+    idx = LSMVecIndex.build(CFG._replace(lazy_delete=False), base)
     pol = MaintenancePolicy(tombstone_ratio=0.10, heat_budget=None,
                             check_every=1)
     eng = ServeEngine(idx, ServeConfig(delete_batch=16, maintenance=pol),
@@ -273,7 +276,7 @@ def test_maintenance_compacts_on_tombstone_ratio():
 
 def test_maintenance_below_threshold_never_compacts():
     base = make_data(400, seed=10)
-    idx = LSMVecIndex.build(CFG, base)
+    idx = LSMVecIndex.build(CFG._replace(lazy_delete=False), base)
     pol = MaintenancePolicy(tombstone_ratio=0.50, heat_budget=None,
                             check_every=1)
     eng = ServeEngine(idx, ServeConfig(delete_batch=16, maintenance=pol),
