@@ -171,7 +171,7 @@ def run(*, n_base: int, batch: int, dim: int, seed: int,
         # ---- eager baseline (the paper's Algorithm-2 delete) -------------
         idx_e = fork(cfg_eager)
         _apply_churn(idx_e, victims, fresh, batch)
-        ids_e, _ = idx_e.search(eval_q, k=k)
+        ids_e = idx_e.search(eval_q, k=k).ids
         recall_eager = recall_at_k(ids_e, truth)
         del idx_e
 
@@ -180,14 +180,14 @@ def run(*, n_base: int, batch: int, dim: int, seed: int,
         _apply_churn(idx_l, victims, fresh, batch)
         nt = idx_l.n_tombstones
         tomb_ratio = nt / max(idx_l.size + nt, 1)
-        ids_l, _ = idx_l.search(eval_q, k=k)
+        ids_l = idx_l.search(eval_q, k=k).ids
         recall_lazy = recall_at_k(ids_l, truth)
         if set(ids_l.flatten().tolist()) & deleted:
             raise AssertionError("tombstoned id returned pre-consolidation")
         qps_lazy = _fixed_batch_qps(idx_l, qpool, batch, k)
 
         reclaimed = idx_l.consolidate()
-        ids_c, _ = idx_l.search(eval_q, k=k)
+        ids_c = idx_l.search(eval_q, k=k).ids
         recall_cons = recall_at_k(ids_c, truth)
         if (set(ids_c.flatten().tolist()) & deleted) \
                 or idx_l.n_tombstones != 0:

@@ -88,7 +88,7 @@ def run_workloads(*, n_base: int = 4096, dim: int = 64, n_batches: int = 8,
             for name, idx in systems.items():
                 t0 = time.monotonic()
                 idx.reset_stats() if hasattr(idx, "reset_stats") else None
-                stats_before = idx.stats
+                stats_before = idx.io_stats
                 n_ins = int(round(batch_n * p_ins))
                 n_del = batch_n - n_ins
                 # inserts — batched systems (LSM-VEC) take the whole batch
@@ -120,15 +120,17 @@ def run_workloads(*, n_base: int = 4096, dim: int = 64, n_batches: int = 8,
                     live[name][victims] = False
                 upd_wall = time.monotonic() - t0
                 stats_delta = jax.tree.map(
-                    lambda a, b: a - b, idx.stats, stats_before)
+                    lambda a, b: a - b, idx.io_stats, stats_before)
                 upd_cost = _update_cost_ms(stats_delta, batch_n)
 
                 # search phase
                 idx.reset_stats()
                 t1 = time.monotonic()
+                # LSMVecIndex returns a SearchResult, baselines a plain
+                # tuple — both unpack as (ids, dists)
                 ids, _ = idx.search(queries, k=10)
                 search_wall = time.monotonic() - t1
-                search_cost = float(iostats.search_cost(idx.stats, DISK)) \
+                search_cost = float(iostats.search_cost(idx.io_stats, DISK)) \
                     * 1e3 / len(queries)
                 allv = vectors[name][0]
                 truth = brute_force_knn(

@@ -29,8 +29,8 @@ def main(n_base: int = 4096, dim: int = 64, n_queries: int = 64):
     lv = LSMVecIndex.build(default_cfg(dim, n_base + 16), base)
     for ef in (16, 32, 48, 96):
         lv.reset_stats()
-        ids, _ = lv.search(queries, k=10, ef=ef)
-        cost = float(iostats.search_cost(lv.stats, DISK)) * 1e3 / n_queries
+        ids = lv.search(queries, k=10, ef=ef).ids
+        cost = float(iostats.search_cost(lv.io_stats, DISK)) * 1e3 / n_queries
         rec = recall_at_k(ids, truth)
         frontier.setdefault("lsmvec", []).append((rec, cost))
         print(f"fig7,lsmvec,ef={ef},{rec:.3f},{cost:.3f}")
@@ -39,7 +39,7 @@ def main(n_base: int = 4096, dim: int = 64, n_queries: int = 64):
         dk = DiskANNIndex.build(base, M=12, ef=ef)
         dk.reset_stats()
         ids, _ = dk.search(queries, k=10)
-        cost = float(iostats.search_cost(dk.stats, DISK)) * 1e3 / n_queries
+        cost = float(iostats.search_cost(dk.io_stats, DISK)) * 1e3 / n_queries
         rec = recall_at_k(ids, truth)
         frontier.setdefault("diskann", []).append((rec, cost))
         print(f"fig7,diskann,ef={ef},{rec:.3f},{cost:.3f}")
@@ -49,7 +49,7 @@ def main(n_base: int = 4096, dim: int = 64, n_queries: int = 64):
         sp.n_probe = probe
         sp.reset_stats()
         ids, _ = sp.search(queries, k=10)
-        cost = float(iostats.search_cost(sp.stats, DISK)) * 1e3 / n_queries
+        cost = float(iostats.search_cost(sp.io_stats, DISK)) * 1e3 / n_queries
         rec = recall_at_k(ids, truth)
         frontier.setdefault("spfresh", []).append((rec, cost))
         print(f"fig7,spfresh,probe={probe},{rec:.3f},{cost:.3f}")

@@ -30,13 +30,13 @@ def main(n_base: int = 4096, dim: int = 64, n_queries: int = 64):
     for rho in RHOS:
         idx.reset_stats()
         # rho = 1.0 is the paper's "no sampling applied" baseline (Eq. 7)
-        ids, _ = idx.search(queries, k=10, rho=rho,
-                            use_filter=(rho < 1.0))
-        cost = float(iostats.search_cost(idx.stats, DISK)) * 1e3 / n_queries
+        ids = idx.search(queries, k=10, rho=rho,
+                         use_filter=(rho < 1.0)).ids
+        cost = float(iostats.search_cost(idx.io_stats, DISK)) * 1e3 / n_queries
         rec = recall_at_k(ids, truth)
         curve.append((rho, rec, cost))
         print(f"fig8,{rho},{rec:.3f},{cost:.3f},"
-              f"{int(idx.stats.n_vec)},{int(idx.stats.n_filtered)}")
+              f"{int(idx.io_stats.n_vec)},{int(idx.io_stats.n_filtered)}")
 
     r10, c10 = curve[0][1], curve[0][2]
     r07, c07 = curve[-1][1], curve[-1][2]

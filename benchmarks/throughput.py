@@ -133,13 +133,13 @@ def run(*, n_base: int, batch: int, n_queries: int, dim: int, seed: int,
     truth = brute_force_knn(jnp.asarray(allv), jnp.asarray(queries), cfg.k)
     search = {}
     for b in (1, 4):
-        ids, _ = idx.search(queries, k=cfg.k, n_expand=b)   # warm/compile
+        ids = idx.search(queries, k=cfg.k, n_expand=b).ids  # warm/compile
         dt = float("inf")
         for _ in range(TRIALS):
             t0 = time.monotonic()
             for _ in range(search_reps):
-                ids, _ = idx.search(queries, k=cfg.k, n_expand=b,
-                                    record_heat=False)
+                ids = idx.search(queries, k=cfg.k, n_expand=b,
+                                 record_heat=False).ids
             jax.block_until_ready(idx.state.count)
             dt = min(dt, (time.monotonic() - t0) / search_reps)
         search[f"qps_b{b}"] = round(n_queries / dt, 1)

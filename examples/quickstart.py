@@ -26,24 +26,25 @@ def main():
     idx = LSMVecIndex.build(cfg, data)
 
     queries = make_clustered_vectors(32, dim=dim, seed=7)
-    ids, dists = idx.search(queries, k=10)
+    res = idx.search(queries, k=10)           # typed SearchResult
+    ids = res.ids
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10)
     print(f"recall 10@10 = {recall_at_k(ids, truth):.3f}")
-    print(f"I/O stats: {int(idx.stats.n_adj)} adjacency reads, "
-          f"{int(idx.stats.n_vec)} vector fetches, "
-          f"{int(idx.stats.n_filtered)} skipped by sampling")
+    print(f"I/O stats: {int(idx.io_stats.n_adj)} adjacency reads, "
+          f"{int(idx.io_stats.n_vec)} vector fetches, "
+          f"{int(idx.io_stats.n_filtered)} skipped by sampling")
     print(f"modeled search cost (paper disk constants): "
           f"{idx.io_cost(DISK) * 1e3 / len(queries):.2f} ms/query")
 
     # dynamic updates: insert a new cluster, delete some old points
     new_vecs = make_clustered_vectors(16, dim=dim, seed=99) + 30.0
-    new_ids = idx.insert_batch(new_vecs)
-    found, _ = idx.search(new_vecs, k=1)
-    print(f"inserted {len(new_ids)}; self-recall of new vectors: "
-          f"{(found[:, 0] == np.asarray(new_ids)).mean():.2f}")
+    new = idx.insert_batch(new_vecs)          # typed UpdateResult
+    found = idx.search(new_vecs, k=1).ids
+    print(f"inserted {len(new)}; self-recall of new vectors: "
+          f"{(found[:, 0] == np.asarray(new.ids)).mean():.2f}")
 
     idx.delete_batch(ids[0][:3].tolist())
-    ids2, _ = idx.search(queries[:1], k=10)
+    ids2 = idx.search(queries[:1], k=10).ids
     assert not set(ids[0][:3]) & set(ids2[0]), "deleted ids must not return"
     print("deletes verified (tombstoned + relinked).")
 
@@ -51,9 +52,8 @@ def main():
           f"(vectors on 'disk': {idx.state.vectors.nbytes/1e6:.1f} MB)")
 
     # maintenance: connectivity-aware reordering (paper §3.4)
-    before = idx.stats
     idx.reorder(window=8, lam=1.0)
-    ids3, _ = idx.search(queries, k=10)
+    ids3 = idx.search(queries, k=10).ids
     print(f"post-reorder recall = "
           f"{recall_at_k(ids3, brute_force_knn(idx.state.vectors[:idx.state.count], jnp.asarray(queries), 10)):.3f}")
 

@@ -127,8 +127,8 @@ def main(n_docs=512, doc_len=24, n_requests=8, gen_len=12):
           f"p50 {m['query']['p50_ms']:.1f} ms, "
           f"{m['snapshot_resolves']} snapshot resolves")
     print(f"modeled retrieval I/O: {retrieve_cost:.2f} ms/req "
-          f"({int(index.stats.n_vec)} vector fetches, "
-          f"{int(index.stats.n_filtered)} skipped by sampling)")
+          f"({int(index.io_stats.n_vec)} vector fetches, "
+          f"{int(index.io_stats.n_filtered)} skipped by sampling)")
     for i in range(min(3, n_requests)):
         print(f"req {i}: retrieved doc {int(doc_ids[i, 0])}, "
               f"generated {gen[i][:8].tolist()} ...")

@@ -6,11 +6,16 @@
 - traversal  — sampling-guided beam search (§3.3)
 - reorder    — connectivity-aware relayout (§3.4, Eq. 10-12)
 - iostats    — the paper's I/O cost model (Eq. 7-9)
-- index      — LSMVecIndex public API
-- distributed— mesh-sharded index (partition-per-device serving)
+- backend    — the VectorBackend protocol + typed results (§10): the
+  boundary everything above the core programs against
+- index      — LSMVecIndex, the single-device backend
+- distributed— ShardedBackend (hash-partitioned shard-per-device
+  serving) + exact flat sharded search
 - baselines  — DiskANN-like and SPFresh-like comparison systems
 """
 
+from repro.core.backend import (BackendStats, SearchResult, ShardStats,
+                                UpdateResult, VectorBackend)
 from repro.core.hnsw import HNSWConfig, HNSWState
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.core.iostats import DISK, CostModel, IOStats, tpu_hbm_model
@@ -18,4 +23,6 @@ from repro.core.iostats import DISK, CostModel, IOStats, tpu_hbm_model
 __all__ = [
     "HNSWConfig", "HNSWState", "LSMVecIndex", "brute_force_knn",
     "recall_at_k", "IOStats", "CostModel", "DISK", "tpu_hbm_model",
+    "VectorBackend", "BackendStats", "ShardStats", "SearchResult",
+    "UpdateResult",
 ]

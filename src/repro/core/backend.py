@@ -1,0 +1,204 @@
+"""The index↔serve boundary: `VectorBackend` protocol + typed results.
+
+Everything above the functional core (`repro.serve`, benchmarks,
+examples) programs against this protocol instead of a concrete index
+class (DESIGN.md §10).  Two implementations ship:
+
+- `LSMVecIndex` (`core/index.py`) — the single-device index;
+- `ShardedBackend` (`core/distributed.py`) — hash-partitioned shards,
+  each a full `LSMVecIndex`, fan-out search with device-side local
+  top-k and a host merge.
+
+The id contract: a backend exposes one flat *internal* id space
+`[0, cap)` (for shards, block-encoded `shard * shard_cap + local`).
+Internal ids are retired, never reused (consolidation), and only ever
+permuted by `reorder`, which returns the permutation so a serving layer
+can fold it into its own external↔internal map.  External ids — the ids
+clients hold — are owned entirely by the serving layer; the backend
+never sees them.
+
+Typed results replace the ad-hoc tuple/list returns: `search` returns a
+`SearchResult`, `insert_batch`/`delete_batch` return an `UpdateResult`.
+Both stay iterable/sequence-like so call sites written against the old
+`(ids, dists)` / `list[int]` shapes keep working during migration.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SearchResult:
+    """Batched ANN search result in the backend's internal id space.
+
+    `ids` int [B, k] (-1 pads under-full rows), `dists` f32 [B, k]
+    (squared L2, +inf on pads).  Iterates as `(ids, dists)` for
+    compatibility with tuple unpacking.
+    """
+
+    ids: np.ndarray
+    dists: np.ndarray
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        yield self.ids
+        yield self.dists
+
+
+@dataclass(frozen=True, eq=False)
+class UpdateResult:
+    """Result of a batched mutation.
+
+    For inserts, `ids` holds the new internal ids in submission order;
+    for deletes, the internal ids the batch targeted (−1 = masked pad).
+    `n_applied` counts items the backend dispatched (inserts allocated;
+    deletes with a routable non-negative id).  Dispatched deletes that
+    turn out to be device-side no-ops (absent/already-dead ids) are NOT
+    subtracted here — they are reported once, in
+    `stats().delete_noops`, so the two counts never drift.  Sequence
+    protocol + list equality over `ids` keep old `list[int]`-shaped
+    call sites working.
+    """
+
+    ids: np.ndarray
+    n_applied: int
+
+    def __iter__(self):
+        return iter(self.ids)
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    def __getitem__(self, i):
+        return self.ids[i]
+
+    def __eq__(self, other):
+        if isinstance(other, UpdateResult):
+            return (np.array_equal(self.ids, other.ids)
+                    and self.n_applied == other.n_applied)
+        if isinstance(other, (list, tuple, np.ndarray)):
+            return list(self.ids) == list(np.asarray(other))
+        return NotImplemented
+
+
+@dataclass(frozen=True)
+class ShardStats:
+    """Per-shard slice of `BackendStats`."""
+
+    size: int            # live (returnable) nodes
+    n_tombstones: int    # lazily deleted, not yet consolidated
+    delete_noops: int    # device-counted deletes of absent/dead ids
+
+    @property
+    def tombstone_ratio(self) -> float:
+        return self.n_tombstones / max(self.size + self.n_tombstones, 1)
+
+
+@dataclass(frozen=True)
+class BackendStats:
+    """The backend stats surface — the single source for serving
+    metrics (`ServeEngine.delete_noops` reads the device-side no-op
+    count from here, never from a parallel accessor, so the two counts
+    cannot drift).  `max_tombstone_ratio` is the per-shard maximum: the
+    maintenance trigger fires when *any* shard crosses the threshold,
+    not only when the global average does.
+    """
+
+    size: int
+    n_tombstones: int
+    delete_noops: int
+    max_tombstone_ratio: float
+    shards: tuple = ()     # tuple[ShardStats, ...], one entry per shard
+
+
+@runtime_checkable
+class VectorBackend(Protocol):
+    """What the serving layer requires of an index.
+
+    Mutations: `insert_batch` / `delete_batch` take `pad_to` so a fixed
+    micro-batch width dispatches through one traced shape; `search`
+    additionally takes `use_snapshot` (cached dense reads).
+    Maintenance: `consolidate(ratio=...)` applies the per-shard trigger
+    rule (a shard consolidates iff its own tombstone ratio crosses
+    `ratio`; `None` = unconditional), `reorder` returns the internal-id
+    permutation it applied.  `initial_ids` seeds an external-id map:
+    internal ids in allocation order for every node allocated so far.
+    """
+
+    @property
+    def cap(self) -> int: ...                 # total internal id space
+
+    @property
+    def lazy_delete(self) -> bool: ...
+
+    @property
+    def snapshot_stale(self) -> bool: ...     # next snapshot read re-resolves
+
+    def search(self, queries, k: Optional[int] = None, *,
+               rho: Optional[float] = None, ef: Optional[int] = None,
+               use_filter: Optional[bool] = None,
+               n_expand: Optional[int] = None, record_heat: bool = True,
+               use_snapshot: bool = False,
+               pad_to: Optional[int] = None) -> SearchResult: ...
+
+    def insert_batch(self, xs, *,
+                     pad_to: Optional[int] = None) -> UpdateResult: ...
+
+    def delete_batch(self, ids, *,
+                     pad_to: Optional[int] = None) -> UpdateResult: ...
+
+    def consolidate(self, *, ratio: Optional[float] = None) -> int: ...
+
+    def compact(self) -> None: ...
+
+    def reorder(self, *, window: int = 8, lam: float = 1.0) -> np.ndarray: ...
+
+    def stats(self) -> BackendStats: ...
+
+    def heat_total(self) -> int: ...
+
+    def reset_heat(self) -> None: ...
+
+    def initial_ids(self) -> np.ndarray: ...
+
+    def trace_counts(self) -> dict: ...
+
+    def sync(self) -> None: ...               # block until device work done
+
+
+def merge_topk(gids: Sequence[np.ndarray], dists: Sequence[np.ndarray],
+               k: int) -> SearchResult:
+    """Host-side top-k merge of per-shard results.
+
+    Each shard contributes its device-side local top-k (`gids[s]`
+    int [B, k_s] already in the global id space, -1 pads; `dists[s]`
+    f32 with +inf on pads).  Rows are distance-sorted per shard, so the
+    merged stable sort is a deterministic P-way merge: ties resolve to
+    the lower shard index, and with one shard the merge is the
+    identity — the bit-parity anchor for shards=1.
+    """
+    flat_i = np.concatenate(gids, axis=1)
+    flat_d = np.concatenate(dists, axis=1)
+    flat_d = np.where(flat_i >= 0, flat_d, np.inf)
+    order = np.argsort(flat_d, axis=1, kind="stable")[:, :k]
+    return SearchResult(
+        ids=np.take_along_axis(flat_i, order, axis=1),
+        dists=np.take_along_axis(flat_d, order, axis=1))
+
+
+def shard_of_seq(seq, n_shards: int):
+    """Hash-partitioned routing: allocation sequence number -> shard.
+
+    Fibonacci (multiplicative) hashing of the global allocation counter:
+    deterministic across runs, load-balanced for any arrival pattern,
+    and independent of vector content (content-hash routing would
+    correlate shard load with the data distribution).  `seq` may be an
+    int or an int array; one shard always routes to 0.
+    """
+    if n_shards == 1:
+        return np.zeros_like(np.asarray(seq)) if np.ndim(seq) else 0
+    x = np.asarray(seq, np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    return ((x >> np.uint64(33)) % np.uint64(n_shards)).astype(np.int64)

@@ -43,7 +43,7 @@ class DiskANNIndex:
         self.live = np.zeros((0,), bool)
         self.entry = 0
         self.n_base = 0          # size at last full build (on-disk part)
-        self.stats = IOStats.zero()
+        self.io_stats = IOStats.zero()
         self._zero_stats()
 
     def _zero_stats(self):
@@ -55,7 +55,7 @@ class DiskANNIndex:
     def _flush_stats(self):
         # in-place sector updates are read-modify-write: 2 I/Os per write
         # (the update-cost asymmetry the paper's LSM design removes)
-        self.stats = self.stats + IOStats(
+        self.io_stats = self.io_stats + IOStats(
             jnp.asarray(self._n_adj + 2 * self._n_write, jnp.int32),
             jnp.asarray(self._n_vec, jnp.int32),
             jnp.asarray(0, jnp.int32),
@@ -202,4 +202,4 @@ class DiskANNIndex:
         return int(self.live.sum())
 
     def reset_stats(self):
-        self.stats = IOStats.zero()
+        self.io_stats = IOStats.zero()

@@ -38,7 +38,7 @@ class SPFreshIndex:
         self.live = np.zeros((0,), bool)
         self.centroids = np.zeros((0, dim), np.float32)
         self.postings: list[list[int]] = []
-        self.stats = IOStats.zero()
+        self.io_stats = IOStats.zero()
         self._zero()
 
     def _zero(self):
@@ -47,7 +47,7 @@ class SPFreshIndex:
         self._n_hops = 0
 
     def _flush(self):
-        self.stats = self.stats + IOStats(
+        self.io_stats = self.io_stats + IOStats(
             jnp.asarray(self._n_adj, jnp.int32),
             jnp.asarray(self._n_vec, jnp.int32),
             jnp.asarray(0, jnp.int32),
@@ -180,4 +180,4 @@ class SPFreshIndex:
         return int(self.live.sum())
 
     def reset_stats(self):
-        self.stats = IOStats.zero()
+        self.io_stats = IOStats.zero()

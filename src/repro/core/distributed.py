@@ -3,20 +3,21 @@
 The paper's billion-scale deployment note (§5.1) — "billion-scale indices
 are typically partitioned or sharded in real-world systems" — is realized
 here: the corpus is split into P shards, each device owns one shard's
-index state, a query fans out to every shard (`shard_map`), local top-k
-results are all-gathered, and a global top-k merge produces the answer.
-Recall of the merged result equals single-shard recall because every
-shard is searched (SPANN-style partition serving).
+index state, a query fans out to every shard, local top-k results come
+back per shard, and a global top-k merge produces the answer.  Recall of
+the merged result equals single-shard recall because every shard is
+searched (SPANN-style partition serving).
 
 Two shard-local engines:
  - "flat": exact blocked L2 scan (the memory-bandwidth-optimal TPU form);
- - "hnsw": the LSM-VEC graph state, vmapped over the shard axis.
+ - `ShardedBackend`: P full `LSMVecIndex` shards behind the
+   `VectorBackend` protocol (DESIGN.md §10) — hash-partitioned routing,
+   per-shard updates/tombstones/consolidation, fan-out search.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import hnsw
+from repro.core.backend import (BackendStats, SearchResult, UpdateResult,
+                                merge_topk, shard_of_seq)
+from repro.core.index import LSMVecIndex
 from repro.kernels.l2_distance.ref import l2_distance_ref
 
 
@@ -91,70 +95,275 @@ class ShardedFlatIndex:
         return np.asarray(ids)[:, :k], np.asarray(dists)[:, :k]
 
 
-class ShardedLSMVec:
-    """P independent LSM-VEC shards searched in parallel + global merge.
+class ShardedBackend:
+    """P independent LSM-VEC shards behind one `VectorBackend` surface.
 
-    Shard states are built on host (bulk_build per shard) and stacked; the
-    query path runs each shard's sampled beam search under vmap and merges
-    top-k across shards — update paths route to the owning shard exactly
-    like the single-shard index.
+    Promotes the old build+search-only `ShardedLSMVec` into a full
+    backend (DESIGN.md §10): every shard is a complete `LSMVecIndex`
+    (insert/delete/lazy-delete/consolidate/compact/reorder), committed
+    round-robin to the available devices, and the class owns only
+    routing and merging:
+
+    - **id space** — block-encoded global ids: shard s's local id l is
+      global id ``s * cfg.cap + l``.  With one shard the encoding is
+      the identity, which is what makes shards=1 bit-parity with a bare
+      `LSMVecIndex` (the acceptance anchor for the serve layer).
+    - **routing** — a new vector goes to shard
+      ``hash(allocation_seq) % P`` (`shard_of_seq`): deterministic,
+      load-balanced, content-independent.  Deletes/reorders route by
+      the shard block encoded in the id.
+    - **search** — fan out the query batch to every shard; each shard
+      computes its local top-k on device; the host merge
+      (`merge_topk`) is a stable P-way merge of the distance-sorted
+      rows.
+    - **maintenance** — per-shard triggers: `consolidate(ratio=r)`
+      consolidates exactly the shards whose own tombstone ratio
+      reached r; `reorder` composes per-shard permutations into one
+      global permutation for the serving layer's id map.
     """
 
-    def __init__(self, cfg: hnsw.HNSWConfig, n_shards: int):
+    def __init__(self, cfg: hnsw.HNSWConfig, n_shards: int, *,
+                 devices: Optional[Sequence] = None, seed: int = 0):
         self.cfg = cfg
         self.n_shards = n_shards
-        self.states = None
-        self.shard_of = None   # global id -> (shard, local id) bookkeeping
-        self.local_of = None
+        self.seed = seed
+        if devices is None:
+            devices = jax.local_devices()
+        self.devices = [devices[s % len(devices)] for s in range(n_shards)]
+        # shard states are expensive (full cap-sized arrays per shard):
+        # materialize lazily so build()/clone(), which install their own
+        # shards, never pay for throwaway empties
+        self._shards: Optional[list] = None
+        self._n_routed = 0           # global allocation counter (routing)
+        self._alloc: list[int] = []  # global ids in allocation order
+        self.consolidations = [0] * n_shards   # per-shard maintenance log
 
-    def build(self, vectors: np.ndarray, seed: int = 0) -> "ShardedLSMVec":
+    def _empty_shard(self, s: int) -> LSMVecIndex:
+        return LSMVecIndex(
+            self.cfg, seed=self.seed + s,
+            state=jax.device_put(
+                hnsw.init(self.cfg, jax.random.key(self.seed + s)),
+                self.devices[s]))
+
+    @property
+    def shards(self) -> list:
+        if self._shards is None:
+            self._shards = [self._empty_shard(s)
+                            for s in range(self.n_shards)]
+        return self._shards
+
+    # -- construction ---------------------------------------------------------
+
+    def build(self, vectors: np.ndarray, seed: int = 0) -> "ShardedBackend":
+        """Bulk-build the shards from `vectors`, routed like a stream.
+
+        Row j routes to `shard_of_seq(j)` — the same rule later inserts
+        follow — so a build is indistinguishable from inserting the
+        rows one by one.  `initial_ids()` returns the global id of each
+        row in build order for seeding an external-id map.
+        """
         n = len(vectors)
-        rng = np.random.default_rng(seed)
-        asg = rng.integers(0, self.n_shards, n)
-        self.shard_of = asg
-        self.local_of = np.zeros(n, np.int32)
-        states = []
+        vectors = np.asarray(vectors, np.float32)
+        self.seed = seed
+        asg = np.asarray(shard_of_seq(np.arange(n), self.n_shards))
+        shards = []
         for s in range(self.n_shards):
-            ids = np.flatnonzero(asg == s)
-            self.local_of[ids] = np.arange(len(ids))
-            st = hnsw.bulk_build(self.cfg, jnp.asarray(vectors[ids]),
+            rows = np.flatnonzero(asg == s)
+            if len(rows) == 0:
+                shards.append(self._empty_shard(s))
+                continue
+            st = hnsw.bulk_build(self.cfg, jnp.asarray(vectors[rows]),
                                  jax.random.key(seed + s))
-            states.append(st)
-        self.states = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-        self._globals = []
+            shards.append(LSMVecIndex(
+                self.cfg, seed=seed + s,
+                state=jax.device_put(st, self.devices[s])))
+        self._shards = shards
+        local = np.zeros(n, np.int64)
         for s in range(self.n_shards):
-            g = np.full(self.cfg.cap, -1, np.int64)
-            ids = np.flatnonzero(asg == s)
-            g[: len(ids)] = ids
-            self._globals.append(g)
-        self._globals = np.stack(self._globals)
-
-        cfg = self.cfg
-
-        @jax.jit
-        def _search(states, qs):
-            def per_shard(st):
-                res = hnsw.search_batch(cfg, st, qs)
-                return res.ids, res.dists
-            ids, dists = jax.vmap(per_shard)(states)     # [P, Q, ef]
-            return ids, dists
-
-        self._search = _search
+            rows = np.flatnonzero(asg == s)
+            local[rows] = np.arange(len(rows))
+        self._alloc = (asg.astype(np.int64) * self.cfg.cap + local).tolist()
+        self._n_routed = n
         return self
 
-    def search(self, queries, k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
-        qs = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
-        ids, dists = self._search(self.states, qs)
-        ids = np.asarray(ids)          # [P, Q, ef] local ids
-        dists = np.asarray(dists)
-        p, q, ef = ids.shape
-        gids = np.take_along_axis(
-            self._globals[:, None, :].repeat(q, 1).reshape(p, q, -1),
-            np.maximum(ids, 0), axis=2)
-        gids = np.where(ids >= 0, gids, -1)
-        # merge across shards
-        flat_i = gids.transpose(1, 0, 2).reshape(q, -1)
-        flat_d = dists.transpose(1, 0, 2).reshape(q, -1)
-        order = np.argsort(flat_d, axis=1)[:, :k]
-        return (np.take_along_axis(flat_i, order, axis=1),
-                np.take_along_axis(flat_d, order, axis=1))
+    # -- backend protocol -----------------------------------------------------
+
+    @property
+    def cap(self) -> int:
+        return self.n_shards * self.cfg.cap
+
+    @property
+    def lazy_delete(self) -> bool:
+        return self.cfg.lazy_delete
+
+    @property
+    def snapshot_stale(self) -> bool:
+        return any(sh.snapshot_stale for sh in self.shards)
+
+    def _split(self, gid: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Global id [N] -> (shard [N], local id [N]); -1 passes through."""
+        gid = np.asarray(gid, np.int64)
+        shard = np.where(gid >= 0, gid // self.cfg.cap, -1)
+        local = np.where(gid >= 0, gid % self.cfg.cap, -1)
+        return shard, local
+
+    def search(self, queries, k: Optional[int] = None, *,
+               rho: Optional[float] = None, ef: Optional[int] = None,
+               use_filter: Optional[bool] = None,
+               n_expand: Optional[int] = None, record_heat: bool = True,
+               use_snapshot: bool = False,
+               pad_to: Optional[int] = None) -> SearchResult:
+        """Fan-out search: every shard answers with its device-side
+        local top-k; the host merges (`merge_topk`).  All per-query
+        knobs forward to the shards unchanged, so the merged result at
+        shards=1 is bit-identical to the single-device index."""
+        k = k or self.cfg.k
+        gids, dists = [], []
+        for s, sh in enumerate(self.shards):
+            res = sh.search(queries, k=k, rho=rho, ef=ef,
+                            use_filter=use_filter, n_expand=n_expand,
+                            record_heat=record_heat,
+                            use_snapshot=use_snapshot, pad_to=pad_to)
+            base = np.int64(s) * self.cfg.cap
+            gids.append(np.where(res.ids >= 0,
+                                 res.ids.astype(np.int64) + base, -1))
+            dists.append(res.dists)
+        return merge_topk(gids, dists, k)
+
+    def insert_batch(self, xs, *,
+                     pad_to: Optional[int] = None) -> UpdateResult:
+        """Route each vector by its allocation sequence number, insert
+        per shard in one padded device call each, and return the global
+        ids in submission order."""
+        xs = np.atleast_2d(np.asarray(xs, np.float32))
+        if xs.size == 0:
+            return UpdateResult(ids=np.zeros((0,), np.int64), n_applied=0)
+        n = len(xs)
+        asg = np.asarray(shard_of_seq(
+            np.arange(self._n_routed, self._n_routed + n), self.n_shards))
+        self._n_routed += n
+        gids = np.full(n, -1, np.int64)
+        for s in range(self.n_shards):
+            rows = np.flatnonzero(asg == s)
+            if len(rows) == 0:
+                continue
+            res = self.shards[s].insert_batch(xs[rows], pad_to=pad_to)
+            gids[rows] = np.asarray(res.ids, np.int64) \
+                + np.int64(s) * self.cfg.cap
+        # allocation order = submission order (ids are assigned in the
+        # order each shard's sub-batch preserves)
+        self._alloc.extend(int(g) for g in gids)
+        return UpdateResult(ids=gids, n_applied=n)
+
+    def delete_batch(self, ids, *,
+                     pad_to: Optional[int] = None) -> UpdateResult:
+        """Route global ids to their owning shard blocks; negative or
+        out-of-range ids are masked no-ops (the pad-and-mask serving
+        contract) and are excluded from `n_applied`."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if len(ids) == 0:
+            return UpdateResult(ids=ids, n_applied=0)
+        shard, local = self._split(ids)
+        routable = (shard >= 0) & (shard < self.n_shards)
+        for s in range(self.n_shards):
+            sub = local[shard == s]
+            if len(sub):
+                self.shards[s].delete_batch(sub.astype(np.int32),
+                                            pad_to=pad_to)
+        return UpdateResult(ids=ids, n_applied=int(routable.sum()))
+
+    def consolidate(self, *, ratio: Optional[float] = None) -> int:
+        """Per-shard trigger rule: each shard consolidates iff its own
+        tombstone ratio reached `ratio` (None = every shard with any
+        tombstones).  Returns total slots reclaimed."""
+        total = 0
+        for s, sh in enumerate(self.shards):
+            got = sh.consolidate(ratio=ratio)
+            if got:
+                self.consolidations[s] += 1
+            total += got
+        return total
+
+    def compact(self) -> None:
+        for sh in self.shards:
+            sh.compact()
+
+    def reorder(self, *, window: int = 8, lam: float = 1.0) -> np.ndarray:
+        """Per-shard relayout composed into one global permutation
+        (identity outside the permuted per-shard prefixes), so the
+        serving layer folds it into its id map exactly like the
+        single-device case."""
+        perm = np.arange(self.cap, dtype=np.int64)
+        for s, sh in enumerate(self.shards):
+            ps = np.asarray(sh.reorder(window=window, lam=lam), np.int64)
+            base = np.int64(s) * self.cfg.cap
+            perm[base:base + len(ps)] = base + ps
+        return perm
+
+    def stats(self) -> BackendStats:
+        per = tuple(sh.stats().shards[0] for sh in self.shards)
+        return BackendStats(
+            size=sum(p.size for p in per),
+            n_tombstones=sum(p.n_tombstones for p in per),
+            delete_noops=sum(p.delete_noops for p in per),
+            max_tombstone_ratio=max(p.tombstone_ratio for p in per),
+            shards=per)
+
+    def heat_total(self) -> int:
+        return sum(sh.heat_total() for sh in self.shards)
+
+    def reset_heat(self) -> None:
+        for sh in self.shards:
+            sh.reset_heat()
+
+    def initial_ids(self) -> np.ndarray:
+        return np.asarray(self._alloc, np.int64)
+
+    def trace_counts(self) -> dict:
+        """Compiled-variant counts summed across shards (the serve
+        zero-retrace proof compares totals before/after load)."""
+        out: dict = {}
+        for sh in self.shards:
+            for key, v in sh.trace_counts().items():
+                out[key] = out.get(key, 0) + v
+        return out
+
+    def sync(self) -> None:
+        for sh in self.shards:
+            sh.sync()
+
+    def clone(self) -> "ShardedBackend":
+        """Deep-copy shard states into a fresh backend (fresh jit
+        caches; benchmark trials use this to undo donation).  Per-shard
+        RNG seeds, routing state, and the maintenance log carry over."""
+        other = ShardedBackend(self.cfg, self.n_shards,
+                               devices=self.devices, seed=self.seed)
+        other._shards = [sh.clone() for sh in self.shards]
+        for s, sh in enumerate(other._shards):
+            sh.state = jax.device_put(sh.state, self.devices[s])
+        other._n_routed = self._n_routed
+        other._alloc = list(self._alloc)
+        other.consolidations = list(self.consolidations)
+        return other
+
+    # -- aggregate accounting -------------------------------------------------
+
+    def reset_stats(self) -> None:
+        for sh in self.shards:
+            sh.reset_stats()
+
+    def io_cost(self, model=None) -> float:
+        from repro.core import iostats
+        model = model or iostats.DISK
+        return sum(sh.io_cost(model) for sh in self.shards)
+
+    def memory_bytes(self) -> int:
+        return sum(sh.memory_bytes() for sh in self.shards)
+
+    @property
+    def size(self) -> int:
+        return sum(sh.size for sh in self.shards)
+
+    @property
+    def n_tombstones(self) -> int:
+        return sum(sh.n_tombstones for sh in self.shards)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hnsw, iostats, lsm, reorder
+from repro.core.backend import (BackendStats, SearchResult, ShardStats,
+                                UpdateResult)
 from repro.core.iostats import CostModel, IOStats
 from repro.kernels.l2_distance.ops import l2_distance
 
@@ -35,17 +37,35 @@ def brute_force_knn(vectors: jax.Array, queries: jax.Array, k: int,
     return np.concatenate(outs, axis=0)
 
 
-def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
-    """Recall K@K (Eq. 3): |found ∩ truth| / K averaged over queries."""
-    k = true_ids.shape[1]
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray,
+                block: int = 4096) -> float:
+    """Recall K@K (Eq. 3): |found ∩ truth| / K averaged over queries.
+
+    One broadcast membership test per block of queries instead of a
+    per-query Python set loop (O(Q·k) host work that dominated eval at
+    large Q).  Counting from the truth side — a truth id is hit if it
+    appears anywhere in the found row — matches set-intersection
+    semantics exactly: truth ids are distinct, and -1 pads in `found`
+    never match.
+    """
+    f = np.asarray(found_ids)
+    t = np.asarray(true_ids)
+    k = t.shape[1]
+    f = f[:, :k]
     hits = 0
-    for f, t in zip(found_ids, true_ids):
-        hits += len(set(f[:k].tolist()) & set(t.tolist()))
-    return hits / (k * len(true_ids))
+    for s in range(0, len(t), block):
+        fb, tb = f[s:s + block], t[s:s + block]
+        hits += int((fb[:, :, None] == tb[:, None, :]).any(axis=1).sum())
+    return hits / (k * len(t))
 
 
 class LSMVecIndex:
-    """Dynamic disk-based vector index (LSM-VEC)."""
+    """Dynamic disk-based vector index (LSM-VEC).
+
+    The single-device `VectorBackend` implementation (DESIGN.md §10):
+    everything above the functional core programs against the protocol
+    in `core/backend.py`, for which this class is the reference.
+    """
 
     #: below this many live nodes, insert_batch falls back to per-item
     #: inserts: the batched pipeline searches the pre-batch graph snapshot,
@@ -55,10 +75,11 @@ class LSMVecIndex:
     def __init__(self, cfg: hnsw.HNSWConfig, seed: int = 0,
                  state: Optional[hnsw.HNSWState] = None):
         self.cfg = cfg
+        self._seed = seed
         self.state = state if state is not None else hnsw.init(
             cfg, jax.random.key(seed))
         self._rng = jax.random.key(seed + 1)
-        self.stats = IOStats.zero()
+        self.io_stats = IOStats.zero()
         # host mirror of state.count: id allocation and maintenance never
         # pay a device sync on the hot path
         self._count = int(self.state.count)
@@ -151,11 +172,13 @@ class LSMVecIndex:
             self.state, jnp.asarray(x, jnp.float32), sub)
         self._count += 1
         self._version += 1
-        self.stats = self.stats + st
+        self.io_stats = self.io_stats + st
         return new_id
 
-    def insert_batch(self, xs, *, pad_to: Optional[int] = None) -> list[int]:
-        """Insert a batch in one jit'd device call; returns the new ids.
+    def insert_batch(self, xs, *,
+                     pad_to: Optional[int] = None) -> UpdateResult:
+        """Insert a batch in one jit'd device call; returns the new ids
+        as an `UpdateResult` (sequence-compatible with the old list).
 
         The whole batch is dispatched as a single donated-buffer
         `hnsw.insert_batch` (vmapped candidate search + scanned writes)
@@ -171,7 +194,7 @@ class LSMVecIndex:
         """
         xs = np.asarray(xs, np.float32)
         if xs.size == 0:
-            return []
+            return UpdateResult(ids=np.zeros((0,), np.int64), n_applied=0)
         xs = np.atleast_2d(xs)
         # guard on *live* size, not allocated ids: a graph emptied by
         # deletes must re-seed per-item too (one scalar sync per batch
@@ -180,7 +203,8 @@ class LSMVecIndex:
         ids = [self.insert(x) for x in xs[:n_seed]]
         rest = xs[n_seed:]
         if len(rest) == 0:
-            return ids
+            return UpdateResult(ids=np.asarray(ids, np.int64),
+                                n_applied=len(ids))
         width = pad_to if pad_to else len(rest)
         for s in range(0, len(rest), width):
             chunk = rest[s:s + width]
@@ -195,8 +219,9 @@ class LSMVecIndex:
                 self.state, jnp.asarray(padded), keys, jnp.asarray(valid))
             self._count += n
             self._version += 1
-            self.stats = self.stats + st
-        return ids
+            self.io_stats = self.io_stats + st
+        return UpdateResult(ids=np.asarray(ids, np.int64),
+                            n_applied=len(ids))
 
     def delete(self, node_id: int) -> None:
         """Delete one id.  Under `cfg.lazy_delete` (default) this only
@@ -206,9 +231,10 @@ class LSMVecIndex:
         self.state, st = self._delete_fn(self.state, jnp.asarray(node_id))
         if not self.cfg.lazy_delete:
             self._version += 1
-        self.stats = self.stats + st
+        self.io_stats = self.io_stats + st
 
-    def delete_batch(self, ids, *, pad_to: Optional[int] = None) -> None:
+    def delete_batch(self, ids, *,
+                     pad_to: Optional[int] = None) -> UpdateResult:
         """Delete a batch of ids in one jit'd device call.
 
         `pad_to` pads the id vector with -1 (masked no-ops in
@@ -218,7 +244,7 @@ class LSMVecIndex:
         """
         ids = np.atleast_1d(np.asarray(ids, np.int32))
         if len(ids) == 0:
-            return
+            return UpdateResult(ids=np.zeros((0,), np.int64), n_applied=0)
         width = pad_to or len(ids)
         for s in range(0, len(ids), width):
             chunk = ids[s:s + width]
@@ -228,7 +254,9 @@ class LSMVecIndex:
                 self.state, jnp.asarray(padded))
             if not self.cfg.lazy_delete:
                 self._version += 1
-            self.stats = self.stats + st
+            self.io_stats = self.io_stats + st
+        return UpdateResult(ids=ids.astype(np.int64),
+                            n_applied=int((ids >= 0).sum()))
 
     # -- search ---------------------------------------------------------------
 
@@ -238,8 +266,9 @@ class LSMVecIndex:
                n_expand: Optional[int] = None,
                record_heat: bool = True,
                use_snapshot: bool = False,
-               pad_to: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
-        """Batched ANN search.  queries [B, dim] -> (ids [B, k], dists).
+               pad_to: Optional[int] = None) -> SearchResult:
+        """Batched ANN search.  queries [B, dim] -> SearchResult
+        (ids [B, k], dists [B, k]; unpacks like the old tuple).
 
         `n_expand` > 1 expands that many frontier nodes per beam iteration
         (multi-expansion); 1 is the classic exact-parity path.
@@ -277,11 +306,11 @@ class LSMVecIndex:
             self.state = self.state._replace(
                 heat=self.state.heat + heat_delta)
         batch_stats = jax.tree.map(lambda a: jnp.sum(a), res.stats)
-        self.stats = self.stats + IOStats(*batch_stats)
+        self.io_stats = self.io_stats + IOStats(*batch_stats)
         # slice host-side: device slicing re-specializes on every distinct
         # residual batch length (a fresh XLA program per shape)
-        return (np.asarray(res.ids)[:nq, :k],
-                np.asarray(res.dists)[:nq, :k])
+        return SearchResult(ids=np.asarray(res.ids)[:nq, :k],
+                            dists=np.asarray(res.dists)[:nq, :k])
 
     # -- maintenance ----------------------------------------------------------
 
@@ -303,17 +332,22 @@ class LSMVecIndex:
             store=lsm.compact_all(self.cfg.lsm_cfg, self.state.store))
         self._version += 1
 
-    def consolidate(self) -> int:
+    def consolidate(self, *, ratio: Optional[float] = None) -> int:
         """Splice tombstoned nodes out of the graph and reclaim slots
         (lazy-deletion phase 2, DESIGN.md §9).  Returns the number of
-        slots reclaimed.  Internal ids are never reused, so external id
-        maps stay valid with no rewrite.  One scalar sync up front — this
-        is the rare maintenance path, not the serving hot path."""
+        slots reclaimed.  `ratio` applies the per-shard trigger rule of
+        the backend protocol: skip unless tombstones / (live +
+        tombstones) has reached it (None = unconditional).  Internal ids
+        are never reused, so external id maps stay valid with no
+        rewrite.  One scalar sync up front — this is the rare
+        maintenance path, not the serving hot path."""
         n = int(self.state.n_tombstones)
         if n == 0:
             return 0
+        if ratio is not None and n / max(self.size + n, 1) < ratio:
+            return 0
         self.state, st = self._consolidate_fn(self.state)
-        self.stats = self.stats + st
+        self.io_stats = self.io_stats + st
         self._version += 1
         return n
 
@@ -331,10 +365,63 @@ class LSMVecIndex:
             self._snap_version = self._version
         return self._snap
 
+    # -- backend protocol surface (DESIGN.md §10) -----------------------------
+
+    @property
+    def cap(self) -> int:
+        """Total internal id space (the `VectorBackend` contract)."""
+        return self.cfg.cap
+
+    @property
+    def lazy_delete(self) -> bool:
+        return self.cfg.lazy_delete
+
+    @property
+    def snapshot_stale(self) -> bool:
+        """True when the next snapshot read will re-resolve the tree."""
+        return self._snap is None or self._snap_version != self._version
+
+    def stats(self) -> BackendStats:
+        """The backend stats surface — one fused device fetch.
+
+        This is the single accessor for the device-side delete no-op
+        count (the old `LSMVecIndex.delete_noops` / engine-property pair
+        could drift); serving metrics must read it from here.
+        """
+        live, nt, noops = (int(v) for v in jax.device_get(
+            (self.state.n_live, self.state.n_tombstones,
+             self.state.n_delete_noops)))
+        shard = ShardStats(size=live, n_tombstones=nt, delete_noops=noops)
+        return BackendStats(size=live, n_tombstones=nt, delete_noops=noops,
+                            max_tombstone_ratio=shard.tombstone_ratio,
+                            shards=(shard,))
+
+    def heat_total(self) -> int:
+        """Accumulated edge-heat counts (one scalar sync)."""
+        return int(jnp.sum(self.state.heat))
+
+    def initial_ids(self) -> np.ndarray:
+        """Internal ids in allocation order, for seeding an external-id
+        map: the j-th vector ever allocated holds internal id j."""
+        return np.arange(self._count, dtype=np.int64)
+
+    def sync(self) -> None:
+        jax.block_until_ready(self.state.count)
+
+    def clone(self) -> "LSMVecIndex":
+        """Deep-copy the device state into a fresh index (fresh jit
+        caches too — benchmark trials use this to undo donation).  The
+        RNG stream carries over, so a clone inserts with the same
+        randomness the original would have."""
+        other = LSMVecIndex(self.cfg, seed=self._seed,
+                            state=jax.tree.map(jnp.copy, self.state))
+        other._rng = self._rng
+        return other
+
     # -- accounting -----------------------------------------------------------
 
     def reset_stats(self) -> None:
-        self.stats = IOStats.zero()
+        self.io_stats = IOStats.zero()
 
     def reset_heat(self) -> None:
         """Zero the edge-heat accumulator (after a heat-driven relayout)."""
@@ -357,7 +444,7 @@ class LSMVecIndex:
         }
 
     def io_cost(self, model: CostModel = iostats.DISK) -> float:
-        return float(iostats.search_cost(self.stats, model))
+        return float(iostats.search_cost(self.io_stats, model))
 
     def memory_bytes(self) -> int:
         return int(hnsw.memory_resident_bytes(self.cfg, self.state))
@@ -370,8 +457,3 @@ class LSMVecIndex:
     def n_tombstones(self) -> int:
         """Nodes lazily deleted but not yet consolidated (one sync)."""
         return int(self.state.n_tombstones)
-
-    @property
-    def delete_noops(self) -> int:
-        """Deletes of absent/already-deleted ids, counted not executed."""
-        return int(self.state.n_delete_noops)

@@ -4,14 +4,17 @@ The first layer of the repo that owns *time* (DESIGN.md §8): everything
 under `repro.core` is pure functions over index state; this package
 schedules an interleaved query/insert/delete stream onto them as
 fixed-shape micro-batches with snapshot-cached reads and
-threshold-driven maintenance.
+threshold-driven maintenance.  The whole package programs against the
+`VectorBackend` protocol (DESIGN.md §10) — single-device and sharded
+backends serve through the identical code path.
 
 - request    — Op/Request/Ticket plumbing
 - queue      — arrival-ordered coalescing queue (strict/relaxed modes)
-- scheduler  — ServeEngine: pad-and-mask dispatch, snapshot lifecycle
-- metrics    — p50/p99 latency, occupancy, QPS
+- scheduler  — ServeEngine: pad-and-mask dispatch, snapshot lifecycle,
+  external-id ownership, adaptive batch shaping
+- metrics    — p50/p99 latency, occupancy, QPS, chosen windows
 - maintenance— tombstone/heat thresholds -> consolidate()/compact()/
-  reorder() (lazy-delete consolidation: DESIGN.md §9)
+  reorder(), applied per shard (lazy-delete consolidation: DESIGN.md §9)
 """
 
 from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy

@@ -1,25 +1,30 @@
 """Background maintenance policy: threshold-triggered consolidation,
-compaction, and connectivity-aware relayout (DESIGN.md §8-9).
+compaction, and connectivity-aware relayout (DESIGN.md §8-10).
 
 The paper runs graph reordering piggybacked on LSM compaction (§3.4);
-the seed repo left both as manual calls.  Here they become policy: the
-engine tracks tombstone pressure host-side (no device syncs) and samples
-the accumulated edge heat at a fixed batch cadence, triggering
+the seed repo left both as manual calls.  Here they become policy,
+applied to any `VectorBackend`: the engine tracks tombstone pressure
+host-side (no device syncs) and samples the accumulated edge heat at a
+fixed batch cadence, triggering
 
 - `consolidate()` when lazily-deleted (routable-but-not-returnable)
   nodes exceed `consolidate_ratio` of the index — the Quake-style
   live-workload trigger for the FreshDiskANN-style graph repair that
-  splices tombstones out and reclaims their slots (DESIGN.md §9),
+  splices tombstones out and reclaims their slots (DESIGN.md §9).  The
+  check is **per shard**: the trigger fires when any shard's own ratio
+  crosses the threshold (`BackendStats.max_tombstone_ratio`), and the
+  backend consolidates exactly the shards over it,
 - `compact()` when staged deletes since the last compaction exceed
   `tombstone_ratio` of the live set — bounding LSM read amplification
   and the dead-entry tax on resolve, and
 - `reorder()` when total sampled edge heat exceeds `heat_budget` —
   enough fresh traversal signal that a relayout pays for itself.
 
-Reordering permutes node ids, so the engine owns an external↔internal id
-mapping and folds each permutation into it; clients keep their ids.
-Consolidation retires internal ids without reusing them, so the same map
-needs no rewrite — reclaimed entries simply become inert.
+Reordering permutes internal ids, so the engine owns an
+external↔internal id mapping and folds each permutation (returned by
+`backend.reorder`, global across shards) into it; clients keep their
+ids.  Consolidation retires internal ids without reusing them, so the
+same map needs no rewrite — reclaimed entries simply become inert.
 """
 
 from __future__ import annotations
@@ -27,7 +32,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -38,8 +42,8 @@ class MaintenancePolicy:
     #: LSM-staged deletes / live size (eager mode; lazy deletes stage
     #: nothing — consolidation doubles as their major compaction)
     tombstone_ratio: Optional[float] = 0.25
-    #: graph tombstones / (live + tombstones) before consolidation runs
-    #: (only meaningful under cfg.lazy_delete)
+    #: graph tombstones / (live + tombstones) before consolidation runs,
+    #: evaluated per shard (only meaningful under lazy deletion)
     consolidate_ratio: Optional[float] = 0.25
     heat_budget: Optional[int] = None         # total edge-heat counts
     check_every: int = 16                     # write batches between checks
@@ -48,10 +52,10 @@ class MaintenancePolicy:
 
 
 class MaintenanceManager:
-    """Applies a MaintenancePolicy to one LSMVecIndex."""
+    """Applies a MaintenancePolicy to one `VectorBackend`."""
 
-    def __init__(self, index, policy: MaintenancePolicy):
-        self.index = index
+    def __init__(self, backend, policy: MaintenancePolicy):
+        self.backend = backend
         self.policy = policy
         self.deletes_since_compact = 0
         self.write_batches_since_check = 0
@@ -69,7 +73,7 @@ class MaintenanceManager:
         invalidate the read snapshot for nothing); consolidation is
         their compaction and resets the counter itself.
         """
-        if not self.index.cfg.lazy_delete:
+        if not self.backend.lazy_delete:
             self.deletes_since_compact += n
 
     def note_write_batch(self) -> None:
@@ -81,11 +85,11 @@ class MaintenanceManager:
     def run_if_due(self, *, force: bool = False) -> List[str]:
         """Check thresholds and run triggered maintenance.
 
-        Returns the actions taken (possibly empty).  The heat check costs
-        one device->host scalar sync, which is why it rides the
-        `check_every` cadence instead of every batch.  Returns permutation
-        side effects through `index` (the engine re-maps ids via the perm
-        recorded in `last_perm`).
+        Returns the actions taken (possibly empty).  The stats and heat
+        probes cost device->host scalar syncs, which is why they ride
+        the `check_every` cadence instead of every batch.  Returns
+        permutation side effects through the backend (the engine re-maps
+        ids via the perm recorded in `last_perm`).
         """
         if not (force or self.due()):
             return []
@@ -94,34 +98,36 @@ class MaintenanceManager:
         self.last_perm: Optional[np.ndarray] = None
 
         pol = self.policy
-        if pol.consolidate_ratio is not None \
-                and self.index.cfg.lazy_delete:
-            # one scalar sync per check (like the heat probe below): the
-            # live tombstone count is the Quake-style workload signal
-            nt = int(self.index.state.n_tombstones)
-            denom = max(self.index.size + nt, 1)
-            if nt > 0 and nt / denom >= pol.consolidate_ratio:
-                self.slots_reclaimed += self.index.consolidate()
+        st = None
+        if pol.consolidate_ratio is not None and self.backend.lazy_delete:
+            # one stats fetch per check: per-shard tombstone pressure is
+            # the Quake-style live-workload signal
+            st = self.backend.stats()
+            if st.n_tombstones > 0 \
+                    and st.max_tombstone_ratio >= pol.consolidate_ratio:
+                self.slots_reclaimed += self.backend.consolidate(
+                    ratio=pol.consolidate_ratio)
                 self.consolidations += 1
                 # the rebuilt store is fully compacted and tombstone-free
                 self.deletes_since_compact = 0
                 actions.append("consolidate")
+                st = None   # stale after consolidation
 
-        if pol.tombstone_ratio is not None:
-            live = max(self.index.size, 1)
-            if self.deletes_since_compact / live >= pol.tombstone_ratio \
-                    and self.deletes_since_compact > 0:
-                self.index.compact()
+        if pol.tombstone_ratio is not None and self.deletes_since_compact:
+            if st is None:
+                st = self.backend.stats()
+            live = max(st.size, 1)
+            if self.deletes_since_compact / live >= pol.tombstone_ratio:
+                self.backend.compact()
                 self.deletes_since_compact = 0
                 self.compactions += 1
                 actions.append("compact")
 
         if pol.heat_budget is not None:
-            heat = int(jnp.sum(self.index.state.heat))
-            if heat >= pol.heat_budget:
-                self.last_perm = self.index.reorder(
+            if self.backend.heat_total() >= pol.heat_budget:
+                self.last_perm = self.backend.reorder(
                     window=pol.reorder_window, lam=pol.reorder_lam)
-                self.index.reset_heat()
+                self.backend.reset_heat()
                 self.reorders += 1
                 actions.append("reorder")
         return actions

@@ -25,13 +25,18 @@ class ServeMetrics:
         self._occupancy: Dict[Op, int] = {op: 0 for op in Op}
         self._t_start: float | None = None
         self._t_last: float | None = None
+        #: the coalescing window each op is currently running under —
+        #: with adaptive batch shaping this tracks the arrival-rate EMA
+        #: (DESIGN.md §10); static configs just echo their constants
+        self.windows: Dict[Op, float] = {op: 0.0 for op in Op}
         self.snapshot_resolves = 0
         self.maintenance_runs: Dict[str, int] = {
             "compact": 0, "reorder": 0, "consolidate": 0}
         #: deletes the engine dropped host-side as duplicates of an
-        #: already-deleted external id (relaxed coalescing can double-
-        #: submit); the device-side count of absent-id no-ops lives on
-        #: the index (`LSMVecIndex.delete_noops`)
+        #: already-deleted external id or as never-allocated ids
+        #: (relaxed coalescing can double-submit); the device-side
+        #: count of absent-id no-ops lives on the backend stats surface
+        #: (`VectorBackend.stats().delete_noops`)
         self.delete_noops = 0
 
     def record_batch(self, op: Op, n: int, latencies, now: float) -> None:
@@ -65,6 +70,7 @@ class ServeMetrics:
                 "batches": nb,
                 "mean_batch": round(self._occupancy[op] / nb, 2) if nb else 0.0,
                 "ops_per_s": round(self._count[op] / wall, 1) if wall else 0.0,
+                "window_ms": round(self.windows[op] * 1e3, 4),
                 **{k: round(v, 3) for k, v in self._quantiles(op).items()},
             }
         return out

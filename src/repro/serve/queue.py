@@ -50,6 +50,15 @@ class CoalescingQueue:
     def push(self, req: Request) -> None:
         self._fifo.append(req)
 
+    def set_window(self, op: Op, window: float) -> None:
+        """Retarget one op's coalescing window (the engine's adaptive
+        batch shaping re-derives windows from the live arrival mix)."""
+        self._windows[op] = window
+
+    def windows(self) -> Dict[Op, float]:
+        """Current per-op coalescing windows (a copy)."""
+        return dict(self._windows)
+
     def _gather(self) -> Tuple[List[Request], bool]:
         """Candidate run for the next micro-batch (not yet removed).
 

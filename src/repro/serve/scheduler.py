@@ -1,22 +1,37 @@
-"""The continuous micro-batching engine over LSMVecIndex (DESIGN.md §8).
+"""The continuous micro-batching engine over a `VectorBackend`
+(DESIGN.md §8, §10).
 
 `ServeEngine` accepts an interleaved stream of query/insert/delete
 requests and executes it as fixed-shape micro-batches:
 
-  queue → coalesce (per-op caps + windows) → pad-and-mask dispatch
-        → snapshot-cached reads → threshold-driven maintenance
+  queue → coalesce (per-op caps + adaptive windows) → pad-and-mask
+        dispatch → snapshot-cached reads → threshold-driven maintenance
 
-Every op dispatches through one traced shape (`pad_to` on the index's
-batch entry points), so steady-state serving performs **zero jit
-retraces** regardless of how ragged the arrival pattern is.  Query
-batches read bottom-layer adjacency from the cached dense LSM snapshot,
-re-resolved lazily after each write batch (lazy deletes are
-tombstone-bit-only and leave the snapshot valid).  Maintenance
-(tombstone consolidation, LSM compaction, heat-driven reordering) runs
-from thresholds between batches; reordering permutes internal ids,
-which the engine hides behind a stable external id map — consolidation
-retires ids without reuse, so the same map needs no rewrite
-(DESIGN.md §9).
+The engine programs against the `VectorBackend` protocol only — the
+single-device index and the hash-partitioned `ShardedBackend` serve
+through the identical code path.  Every op dispatches through one traced
+shape (`pad_to` on the backend's batch entry points), so steady-state
+serving performs **zero jit retraces** regardless of how ragged the
+arrival pattern is.  Query batches read bottom-layer adjacency from the
+backend's cached dense snapshot, re-resolved lazily after each write
+batch (lazy deletes are tombstone-bit-only and leave the snapshot
+valid).  Maintenance (tombstone consolidation, LSM compaction,
+heat-driven reordering) runs from thresholds between batches — sharded
+backends apply them per shard.
+
+**External ids** are owned here, uniformly for every backend: the engine
+allocates them sequentially in insert order (build rows first), keeps an
+external↔internal map over the backend's global id space, and folds
+every reorder permutation into it.  Consolidation retires internal ids
+without reuse, so the same map needs no rewrite (DESIGN.md §9).
+
+**Adaptive coalescing windows** (Quake-style, DESIGN.md §10): instead of
+static per-op windows, the engine keeps an EMA of each op's inter-
+arrival gap and sizes the window to a fraction of the expected
+batch-fill time — heavy arrival mixes shrink the wait toward zero
+(batches fill anyway), sparse mixes stop burning latency waiting for
+stragglers that aren't coming.  The chosen windows are visible in
+`ServeMetrics`.
 
 The engine is single-threaded at heart — `pump()` executes at most one
 micro-batch and is the unit the tests drive deterministically (with an
@@ -29,7 +44,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -46,13 +61,24 @@ class ServeConfig:
     query_batch: int = 32
     insert_batch: int = 32
     delete_batch: int = 32
-    query_window: float = 0.002       # seconds an under-full run may wait
+    #: per-op coalescing windows (seconds).  With `adaptive_windows`
+    #: these are only the starting values used until the arrival-rate
+    #: EMA has a sample; without it they are the static windows.
+    query_window: float = 0.002
     insert_window: float = 0.005
     delete_window: float = 0.005
+    #: Quake-style arrival-shaped windows: EMA the per-op inter-arrival
+    #: gap and wait `window_fill` of the expected time to fill the
+    #: batch cap, clamped to [window_min, window_max]
+    adaptive_windows: bool = True
+    window_min: float = 0.0
+    window_max: float = 0.02
+    window_fill: float = 0.5
+    window_alpha: float = 0.2         # EMA smoothing of arrival gaps
     #: strict = serializable in arrival order (parity mode); relaxed =
     #: same-op coalescing across op boundaries (throughput mode)
     strict_order: bool = False
-    k: Optional[int] = None           # search params; None = index config
+    k: Optional[int] = None           # search params; None = backend config
     ef: Optional[int] = None
     rho: Optional[float] = None
     n_expand: Optional[int] = None
@@ -64,13 +90,13 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, index, cfg: Optional[ServeConfig] = None,
+    def __init__(self, backend, cfg: Optional[ServeConfig] = None,
                  clock=time.monotonic):
-        self.index = index
+        self.backend = backend
         self.cfg = cfg or ServeConfig()
         self.clock = clock
         self.metrics = ServeMetrics()
-        self.maintenance = MaintenanceManager(index, self.cfg.maintenance)
+        self.maintenance = MaintenanceManager(backend, self.cfg.maintenance)
         self.queue = CoalescingQueue(
             batch_caps={Op.QUERY: self.cfg.query_batch,
                         Op.INSERT: self.cfg.insert_batch,
@@ -84,28 +110,53 @@ class ServeEngine:
         self._pump_lock = threading.RLock()  # serializes batch execution
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        # stable external ids across reorder permutations: a fresh insert's
-        # external id equals its internal id at birth; every relayout perm
-        # is folded into this pair of maps
-        cap = index.cfg.cap
-        self._int2ext = np.arange(cap, dtype=np.int64)
-        self._ext2int = np.arange(cap, dtype=np.int64)
+        # stable external ids across reorder permutations and shards:
+        # the engine allocates external ids sequentially in insert order
+        # (build rows seed the map via backend.initial_ids()), every
+        # relayout perm is folded into this pair of maps, and -1 marks
+        # the unallocated region of either space
+        cap = backend.cap
+        self._int2ext = np.full(cap, -1, dtype=np.int64)
+        self._ext2int = np.full(cap, -1, dtype=np.int64)
+        born = np.asarray(backend.initial_ids(), np.int64)
+        self._int2ext[born] = np.arange(len(born))
+        self._ext2int[:len(born)] = born
+        self._next_ext = len(born)
         # external ids already deleted through this engine: a repeat
         # delete (relaxed coalescing can double-submit one client retry)
         # is dropped host-side as a counted no-op instead of reaching the
         # device.  Internal ids are never reused (consolidation retires
         # them, DESIGN.md §9), so entries are never removed.
         self._deleted_ext: set = set()
+        # adaptive-window state: per-op EMA of inter-arrival gaps
+        self._gap_ema: Dict[Op, Optional[float]] = {op: None for op in Op}
+        self._last_arrival: Dict[Op, Optional[float]] = {
+            op: None for op in Op}
+        self._caps = {Op.QUERY: self.cfg.query_batch,
+                      Op.INSERT: self.cfg.insert_batch,
+                      Op.DELETE: self.cfg.delete_batch}
+        for op, w in self.queue.windows().items():
+            self.metrics.windows[op] = w
         self.batch_log: List[tuple] = []   # (op, size) per executed batch
 
     # -- submission -----------------------------------------------------------
 
     def _submit(self, op: Op, payload) -> Ticket:
         with self._lock:
+            now = self.clock()
             req = Request(op=op, payload=payload, seq=self._seq,
-                          t_enqueue=self.clock())
+                          t_enqueue=now)
             self._seq += 1
             self.queue.push(req)
+            if self.cfg.adaptive_windows:
+                last = self._last_arrival[op]
+                if last is not None:
+                    gap = now - last
+                    ema = self._gap_ema[op]
+                    a = self.cfg.window_alpha
+                    self._gap_ema[op] = gap if ema is None \
+                        else a * gap + (1 - a) * ema
+                self._last_arrival[op] = now
             return req.ticket
 
     def submit_query(self, q) -> Ticket:
@@ -118,65 +169,86 @@ class ServeEngine:
 
     def submit_delete(self, ext_id: int) -> Ticket:
         """Delete by external id; ticket resolves to True, or False when
-        the id was already deleted through this engine (the delete is
-        then a counted no-op — `metrics.delete_noops` — not a write).
+        the delete is a counted no-op (`metrics.delete_noops`) — the id
+        was already deleted through this engine, or was never allocated.
 
         Rejects ids outside [0, cap) up front: -1 (the search-result pad
         value) would otherwise wrap through the numpy id map and delete
         an unrelated node.
         """
         ext_id = int(ext_id)
-        if not 0 <= ext_id < self.index.cfg.cap:
+        if not 0 <= ext_id < self.backend.cap:
             raise ValueError(f"external id {ext_id} outside [0, "
-                             f"{self.index.cfg.cap})")
+                             f"{self.backend.cap})")
         return self._submit(Op.DELETE, ext_id)
+
+    # -- adaptive batch shaping (Quake-style) ---------------------------------
+
+    def _shape_windows(self) -> None:
+        """Re-derive each op's coalescing window from the arrival EMA:
+        wait `window_fill` of the expected time for the batch cap to
+        fill, clamped to [window_min, window_max].  Ops with no gap
+        sample yet keep their configured starting window."""
+        for op in Op:
+            ema = self._gap_ema[op]
+            if ema is None:
+                continue
+            w = self.cfg.window_fill * self._caps[op] * ema
+            w = min(max(w, self.cfg.window_min), self.cfg.window_max)
+            self.queue.set_window(op, w)
+            self.metrics.windows[op] = w
 
     # -- execution ------------------------------------------------------------
 
     def _exec_query(self, reqs: List[Request]) -> None:
         qs = np.stack([r.payload for r in reqs])
-        idx = self.index
-        if idx._snap_version != idx._version:
+        if self.backend.snapshot_stale:
             self.metrics.snapshot_resolves += 1
         record_heat = self.cfg.record_heat
         if record_heat is None:
             record_heat = self.cfg.maintenance.heat_budget is not None
-        ids, dists = idx.search(
+        res = self.backend.search(
             qs, k=self.cfg.k, ef=self.cfg.ef, rho=self.cfg.rho,
             n_expand=self.cfg.n_expand, record_heat=record_heat,
             use_snapshot=True, pad_to=self.cfg.query_batch)
-        ext = np.where(ids >= 0, self._int2ext[np.maximum(ids, 0)], -1)
-        for row_ids, row_d, req in zip(ext, dists, reqs):
+        ext = np.where(res.ids >= 0,
+                       self._int2ext[np.maximum(res.ids, 0)], -1)
+        for row_ids, row_d, req in zip(ext, res.dists, reqs):
             req.ticket._complete(QueryResult(ids=row_ids, dists=row_d))
 
     def _exec_insert(self, reqs: List[Request]) -> None:
         xs = np.stack([r.payload for r in reqs])
-        new_ids = self.index.insert_batch(xs, pad_to=self.cfg.insert_batch)
-        for i, req in zip(new_ids, reqs):
-            req.ticket._complete(int(self._int2ext[i]))
+        res = self.backend.insert_batch(xs, pad_to=self.cfg.insert_batch)
+        for gid, req in zip(np.asarray(res.ids, np.int64), reqs):
+            ext = self._next_ext
+            self._next_ext += 1
+            self._ext2int[ext] = gid
+            self._int2ext[gid] = ext
+            req.ticket._complete(int(ext))
 
     def _exec_delete(self, reqs: List[Request]) -> None:
         ext = np.asarray([r.payload for r in reqs], np.int64)
-        # drop repeats (within the batch and against history) host-side:
-        # the ticket still resolves, but nothing reaches the device for
-        # them — a double delete must be a counted no-op, not a write.
-        # Only *allocated* ids are recorded: a delete of a not-yet-
-        # allocated ext id must not poison the id against the day an
-        # insert hands it out (the device counts it as a no-op instead).
-        allocated = self._ext2int[ext] < self.index._count
+        # drop repeats and never-allocated ids host-side: the ticket
+        # still resolves (False), but nothing reaches the device for
+        # them — a double delete must be a counted no-op, not a write,
+        # and an unallocated ext id must not be poisoned against the
+        # day an insert hands it out.
+        internal = self._ext2int[ext]
         fresh = np.ones(len(ext), bool)
         batch_seen: set = set()
         for j, e in enumerate(ext):
-            if int(e) in self._deleted_ext or int(e) in batch_seen:
+            e = int(e)
+            if e in self._deleted_ext or e in batch_seen \
+                    or internal[j] < 0:
                 fresh[j] = False
-            elif allocated[j]:
-                batch_seen.add(int(e))
+            else:
+                batch_seen.add(e)
         n_noop = int((~fresh).sum())
         if n_noop:
             self.metrics.delete_noops += n_noop
-        internal = np.where(fresh, self._ext2int[ext], -1).astype(np.int32)
+        gids = np.where(fresh, internal, -1)
         if fresh.any():
-            self.index.delete_batch(internal, pad_to=self.cfg.delete_batch)
+            self.backend.delete_batch(gids, pad_to=self.cfg.delete_batch)
         # record only after the device call succeeded: a raised dispatch
         # must not poison the ids as 'already deleted' (the client will
         # retry the failed tickets)
@@ -186,18 +258,23 @@ class ServeEngine:
             req.ticket._complete(bool(f))
 
     def _apply_perm(self, perm: np.ndarray) -> None:
-        """Fold a reorder permutation (perm[old_int] = new_int) into the
-        external id maps; ids allocated after the perm are untouched."""
+        """Fold a reorder permutation (perm[old_int] = new_int, identity
+        outside the permuted region) into the external id maps; internal
+        ids allocated after the perm are untouched, unallocated entries
+        stay -1."""
+        perm = np.asarray(perm, np.int64)
         n = len(perm)
         old_ext = self._int2ext[:n].copy()
         self._int2ext[perm] = old_ext
-        self._ext2int[old_ext] = perm
+        alloc = old_ext >= 0
+        self._ext2int[old_ext[alloc]] = perm[alloc]
 
     @property
     def delete_noops(self) -> int:
-        """Total no-op deletes: engine-level repeats dropped host-side
-        plus device-counted deletes of absent/dead internal ids."""
-        return self.metrics.delete_noops + self.index.delete_noops
+        """Total no-op deletes: engine-level repeats/unallocated dropped
+        host-side, plus the backend stats surface's device-side count of
+        deletes that hit absent/dead internal ids."""
+        return self.metrics.delete_noops + self.backend.stats().delete_noops
 
     def pump(self, *, force: bool = False) -> Optional[Op]:
         """Execute at most one micro-batch; returns its op, or None.
@@ -209,6 +286,8 @@ class ServeEngine:
         """
         with self._pump_lock:
             with self._lock:
+                if self.cfg.adaptive_windows:
+                    self._shape_windows()
                 got = self.queue.next_batch(self.clock(), force=force)
             if got is None:
                 return None

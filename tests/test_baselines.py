@@ -38,8 +38,8 @@ def test_diskann_exhaustive_io(data, queries):
     idx = DiskANNIndex.build(data, M=16, ef=64)
     idx.reset_stats()
     idx.search(queries[:8], k=10)
-    hops = int(idx.stats.n_hops)
-    fetches = int(idx.stats.n_vec)
+    hops = int(idx.io_stats.n_hops)
+    fetches = int(idx.io_stats.n_vec)
     # no sampling: every not-yet-visited neighbor is fetched each hop
     assert fetches > 2 * hops
 

@@ -104,8 +104,8 @@ def test_delete_batch_matches_sequential_deletes():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=name)
     np.testing.assert_array_equal(
-        np.asarray(jax.tree.map(np.asarray, idx_a.stats)),
-        np.asarray(jax.tree.map(np.asarray, idx_b.stats)))
+        np.asarray(jax.tree.map(np.asarray, idx_a.io_stats)),
+        np.asarray(jax.tree.map(np.asarray, idx_b.io_stats)))
 
 
 def test_delete_batch_removes_from_results(built_index):
@@ -150,8 +150,8 @@ def test_multi_expansion_parity_on_damaged_graph():
     queries = make_data(24, seed=21)
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
                             live=jnp.asarray(live))
-    r1 = recall_at_k(idx.search(queries, k=10, n_expand=1)[0], truth)
-    r4 = recall_at_k(idx.search(queries, k=10, n_expand=4)[0], truth)
+    r1 = recall_at_k(idx.search(queries, k=10, n_expand=1).ids, truth)
+    r4 = recall_at_k(idx.search(queries, k=10, n_expand=4).ids, truth)
     assert r4 >= r1 - 0.01, (r1, r4)
 
 
@@ -162,10 +162,10 @@ def test_multi_expansion_visits_no_fewer_nodes(built_index):
     queries = make_data(16, seed=12)
     idx.reset_stats()
     idx.search(queries, k=10, n_expand=1, record_heat=False)
-    hops1 = int(idx.stats.n_hops)
+    hops1 = int(idx.io_stats.n_hops)
     idx.reset_stats()
     idx.search(queries, k=10, n_expand=4, record_heat=False)
-    hops4 = int(idx.stats.n_hops)
+    hops4 = int(idx.io_stats.n_hops)
     idx.reset_stats()
     assert hops4 >= hops1
 
@@ -250,11 +250,11 @@ def test_search_snapshot_bit_parity(built_index):
     # stats parity between the two paths on identical queries
     idx.reset_stats()
     idx.search(queries, k=10, record_heat=False)
-    direct = jax.tree.map(int, idx.stats)
+    direct = jax.tree.map(int, idx.io_stats)
     idx.reset_stats()
     idx.search(queries, k=10, record_heat=False, use_snapshot=True,
                pad_to=32)
-    snap = jax.tree.map(int, idx.stats)
+    snap = jax.tree.map(int, idx.io_stats)
     idx.reset_stats()
     assert direct == snap
 

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import hnsw
-from repro.core.distributed import ShardedFlatIndex, ShardedLSMVec
+from repro.core.distributed import ShardedBackend, ShardedFlatIndex
 from repro.core.index import brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
 from repro.launch.mesh import make_test_mesh
@@ -37,15 +37,20 @@ def test_sharded_flat_2d_mesh():
     assert recall_at_k(ids, truth) == 1.0
 
 
-def test_sharded_lsmvec_recall():
+def test_sharded_backend_recall():
     cfg = hnsw.HNSWConfig(cap=512, dim=32, M=12, M_up=6, num_upper=2,
                           ef_search=48, ef_construction=48, k=10,
                           rho=1.0, use_filter=False, lsm_mem_cap=128,
                           lsm_levels=2, lsm_fanout=8)
     data = make_clustered_vectors(1024, dim=32, seed=2)
     queries = make_clustered_vectors(16, dim=32, seed=9)
-    idx = ShardedLSMVec(cfg, n_shards=4).build(data)
-    ids, _ = idx.search(queries, k=10)
+    idx = ShardedBackend(cfg, n_shards=4).build(data)
+    res = idx.search(queries, k=10)
+    # global ids -> build-order positions (what the truth is keyed by)
+    inv = np.full(idx.cap, -1, np.int64)
+    born = idx.initial_ids()
+    inv[born] = np.arange(len(born))
+    ids = np.where(res.ids >= 0, inv[np.maximum(res.ids, 0)], -1)
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10)
     r = recall_at_k(ids, truth)
     assert r >= 0.85, f"sharded recall {r:.3f}"

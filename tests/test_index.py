@@ -113,11 +113,11 @@ def test_sampling_reduces_vector_fetches():
 
     idx.reset_stats()
     ids_full, _ = idx.search(queries, k=10, rho=1.0)
-    full_fetches = int(idx.stats.n_vec)
+    full_fetches = int(idx.io_stats.n_vec)
 
     idx.reset_stats()
     ids_samp, _ = idx.search(queries, k=10, rho=0.7)
-    samp_fetches = int(idx.stats.n_vec)
+    samp_fetches = int(idx.io_stats.n_vec)
 
     assert samp_fetches < full_fetches
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10)
@@ -133,8 +133,8 @@ def test_hash_filter_counts_skips():
     queries = make_data(16, seed=13)
     idx.reset_stats()
     idx.search(queries, k=10, use_filter=True)
-    assert int(idx.stats.n_filtered) >= 0
-    assert int(idx.stats.n_vec) > 0
+    assert int(idx.io_stats.n_filtered) >= 0
+    assert int(idx.io_stats.n_vec) > 0
 
 
 def test_memory_accounting_grows_with_inserts():

@@ -81,11 +81,11 @@ def test_lazy_recall_beats_eager_under_heavy_churn():
 
     idx_l = LSMVecIndex.build(CFG, data)
     idx_l.delete_batch(victims)
-    r_lazy = recall_at_k(idx_l.search(queries, k=10)[0], truth)
+    r_lazy = recall_at_k(idx_l.search(queries, k=10).ids, truth)
 
     idx_e = LSMVecIndex.build(CFG_EAGER, data)
     idx_e.delete_batch(victims)
-    r_eager = recall_at_k(idx_e.search(queries, k=10)[0], truth)
+    r_eager = recall_at_k(idx_e.search(queries, k=10).ids, truth)
     assert r_lazy >= r_eager, (r_lazy, r_eager)
 
 
@@ -157,7 +157,7 @@ def test_double_delete_and_absent_id_are_counted_noops():
     idx.delete(7)          # already tombstoned
     idx.delete(1900)       # never inserted (inside cap)
     idx.delete_batch(np.asarray([7, 7, 2000], np.int32))
-    assert idx.delete_noops == 5
+    assert idx.stats().delete_noops == 5
     assert idx.size == size
     assert idx.n_tombstones == 1
     assert int(idx.state.store.write_seq) == seq
@@ -172,7 +172,7 @@ def test_eager_double_delete_is_counted_noop_without_store_write():
     snap_before = np.asarray(idx.snapshot())
     idx.delete(5)          # double delete through the eager path
     idx.delete_batch(np.asarray([5, 1800], np.int32))
-    assert idx.delete_noops == 3
+    assert idx.stats().delete_noops == 3
     assert idx.size == size
     np.testing.assert_array_equal(np.asarray(idx.state.levels), lv)
     # graph content untouched (the old path re-tombstoned the key)
@@ -259,8 +259,9 @@ def test_serve_double_delete_under_coalescing_is_counted_noop():
 
 def test_delete_of_unallocated_ext_id_does_not_poison_it():
     """A delete of an in-range but not-yet-allocated external id is a
-    device-counted no-op and must NOT block the future legitimate
-    delete of that id once an insert allocates it."""
+    counted no-op (the engine owns the ext↔int map and drops it host-
+    side, never dispatching an unmapped id) and must NOT block the
+    future legitimate delete of that id once an insert allocates it."""
     data = make_data(256, seed=17)
     idx = LSMVecIndex.build(CFG, data)
     eng = ServeEngine(idx, ServeConfig(
@@ -271,8 +272,9 @@ def test_delete_of_unallocated_ext_id_does_not_poison_it():
         clock=FakeClock())
     t0 = eng.submit_delete(256)          # not allocated yet
     eng.drain()
-    assert t0.result() is True           # dispatched; device counted it
-    assert idx.delete_noops == 1 and idx.size == 256
+    assert t0.result() is False          # dropped as a counted no-op
+    assert eng.delete_noops == 1 and idx.size == 256
+    assert idx.stats().delete_noops == 0   # nothing reached the device
     t_ins = eng.submit_insert(make_data(1, seed=18)[0] + 40.0)
     eng.drain()
     assert t_ins.result() == 256         # the id is now live
