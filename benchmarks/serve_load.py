@@ -30,14 +30,29 @@ the single-device smoke; run under
 shard its own device.  The recall criterion relaxes from the strict
 ±0.01 band to a 0.95× floor of the sequential single-device baseline
 (cross-shard merge is a different, recall-guarded execution).
+
+**Durability** (DESIGN.md §11): every run also reports a ``durability``
+section.  An A/B probe drives an identical closed-loop insert stream
+with and without a group-committed WAL and reports acked-insert p50/p99
+for both arms — the criterion ``wal_overhead_within_15pct`` gates the
+fsync tax at ≤15% on p50.  ``--wal`` additionally runs the *main* serve
+drain with the WAL on (acks then imply durability and the headline
+qps absorbs the commit cost); ``--ckpt-every N`` layers covering
+checkpoints every N write batches on top.  ``--crash-recovery`` runs
+the failure-injection matrix instead of the load benchmark: kill at
+each injection point, restart via `ServeEngine.recover`, and gate on
+zero acknowledged-write loss plus a recall floor against an
+uninterrupted run of the same op stream (the CI job's mode).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -54,8 +69,10 @@ from repro.core.distributed import ShardedBackend              # noqa: E402
 from repro.core.index import (LSMVecIndex, brute_force_knn,    # noqa: E402
                               recall_at_k)
 from repro.data.synth import make_clustered_vectors            # noqa: E402
+from repro.ft import (FailureInjector, RestartPolicy,          # noqa: E402
+                      run_with_recovery, verify_acked_writes)
 from repro.serve import (MaintenancePolicy, Op, ServeConfig,   # noqa: E402
-                         ServeEngine)
+                         ServeEngine, WalConfig)
 
 SCHEMA = {
     "meta": ("mode", "backend", "shards", "n_base", "n_ops", "mix", "dim",
@@ -67,8 +84,12 @@ SCHEMA = {
     "baseline": ("fixed_batch_qps", "qps_ratio"),
     "recall": ("serve", "sequential", "delta"),
     "retraces": ("after_warmup", "after_load", "new_during_load"),
+    "durability": ("wal_enabled", "ckpt_every", "wal_records", "wal_commits",
+                   "checkpoints", "probe_n", "acked_insert_p50_ms",
+                   "acked_insert_p99_ms", "nowal_insert_p50_ms",
+                   "nowal_insert_p99_ms", "overhead_p50_pct"),
     "criteria": ("zero_retraces_after_warmup", "qps_within_10pct_of_fixed",
-                 "recall_within_0p01"),
+                 "recall_within_0p01", "wal_overhead_within_15pct"),
 }
 
 
@@ -87,6 +108,19 @@ def validate_schema(doc: dict) -> None:
     for f, v in doc["retraces"].items():
         if not isinstance(v, dict) and not isinstance(v, int):
             raise ValueError(f"retraces.{f} must be dict|int, got {v!r}")
+    dur = doc["durability"]
+    if not isinstance(dur["wal_enabled"], bool):
+        raise ValueError(f"durability.wal_enabled must be bool, "
+                         f"got {dur['wal_enabled']!r}")
+    if dur["ckpt_every"] is not None \
+            and not isinstance(dur["ckpt_every"], int):
+        raise ValueError(f"durability.ckpt_every must be int|None, "
+                         f"got {dur['ckpt_every']!r}")
+    for f, v in dur.items():
+        if f in ("wal_enabled", "ckpt_every"):
+            continue
+        if not isinstance(v, (int, float)) or not np.isfinite(v):
+            raise ValueError(f"non-finite durability.{f}: {v!r}")
     for f, v in doc["criteria"].items():
         if not isinstance(v, bool):
             raise ValueError(f"criteria.{f} must be bool, got {v!r}")
@@ -125,8 +159,61 @@ SERVE_TRIALS = 2  # best-of-N full load drains (fresh index copy each):
                   # must get the same chance against container jitter
 
 
+def durability_probe(*, n: int, batch: int, dim: int, seed: int,
+                     work_dir: str) -> dict:
+    """A/B-measure the group-commit tax on acked-insert latency.
+
+    Both arms drive the identical closed-loop insert stream (submit one
+    batch, drain, repeat — so each latency sample is one micro-batch's
+    execution, not queue depth) through identically configured engines;
+    the only difference is ``ServeConfig.wal``.  With the WAL on, every
+    batch's record is fsync'd before its tickets resolve (the default
+    ``group_commit_n=1``), so the p50 delta *is* the durability cost an
+    acked insert pays.  Best-of-``SERVE_TRIALS`` per arm: trial 0
+    absorbs compilation.
+    """
+    cfg = _cfg(dim, n + 4 * batch + 64)
+    base = make_clustered_vectors(batch, dim=dim, seed=seed + 21)
+    vecs = make_clustered_vectors(n, dim=dim, seed=seed + 22)
+    idx0 = LSMVecIndex.build(cfg, base)
+    arms = {}
+    for arm in ("nowal", "wal"):
+        best = None
+        for trial in range(SERVE_TRIALS):
+            wal_cfg = None
+            if arm == "wal":
+                wal_cfg = WalConfig(dir=os.path.join(
+                    work_dir, f"probe_{arm}_t{trial}"))
+            eng = ServeEngine(idx0.clone(), ServeConfig(
+                query_batch=batch, insert_batch=batch, delete_batch=batch,
+                adaptive_windows=False, query_window=0.0, insert_window=0.0,
+                delete_window=0.0, strict_order=False, wal=wal_cfg))
+            for b in range(0, n, batch):
+                for v in vecs[b:b + batch]:
+                    eng.submit_insert(v)
+                eng.drain()
+            m = eng.metrics.snapshot()
+            eng.close()
+            cur = {"p50": m["insert"]["p50_ms"], "p99": m["insert"]["p99_ms"]}
+            if best is None or cur["p50"] < best["p50"]:
+                best = cur
+        arms[arm] = best
+    p50_wal, p50_raw = arms["wal"]["p50"], arms["nowal"]["p50"]
+    return {
+        "probe_n": n,
+        "acked_insert_p50_ms": round(p50_wal, 3),
+        "acked_insert_p99_ms": round(arms["wal"]["p99"], 3),
+        "nowal_insert_p50_ms": round(p50_raw, 3),
+        "nowal_insert_p99_ms": round(arms["nowal"]["p99"], 3),
+        "overhead_p50_pct": round(
+            (p50_wal - p50_raw) / max(p50_raw, 1e-9) * 100.0, 1),
+    }
+
+
 def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
-        n_expand: int, mode: str, shards: int = 1) -> dict:
+        n_expand: int, mode: str, shards: int = 1, wal: bool = False,
+        ckpt_every: int | None = None,
+        work_dir: str | None = None) -> dict:
     rng = np.random.default_rng(seed)
     n_fresh = max(n_ops // 8, 8)
     cap = n_base + n_fresh + 4 * batch + 64
@@ -153,6 +240,8 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         strict_order=False, n_expand=2 * n_expand,
         maintenance=MaintenancePolicy(tombstone_ratio=0.25, heat_budget=None,
                                       check_every=8))
+    if work_dir is None:
+        work_dir = tempfile.mkdtemp(prefix="serve_durability_")
     if shards > 1:
         backend0 = ShardedBackend(cfg_shard, shards).build(base, seed=seed)
     else:
@@ -169,10 +258,23 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
 
     wall = float("inf")
     idx = eng = warm_traces = load_traces = None
-    for _ in range(SERVE_TRIALS):
+    for trial in range(SERVE_TRIALS):
         # fresh copy: the previous trial's donated jits consumed its state
         idx_t = backend0.clone()
-        eng_t = ServeEngine(idx_t, serve_cfg)
+        serve_cfg_t = serve_cfg
+        if wal:
+            # --wal: the headline drain runs durable — per-trial WAL (and
+            # checkpoint, under --ckpt-every) directories, so trials never
+            # replay each other's records
+            serve_cfg_t = dataclasses.replace(
+                serve_cfg,
+                wal=WalConfig(dir=os.path.join(work_dir,
+                                               f"serve_wal_t{trial}")),
+                ckpt_dir=(os.path.join(work_dir, f"serve_ckpt_t{trial}")
+                          if ckpt_every else None),
+                maintenance=dataclasses.replace(
+                    serve_cfg.maintenance, checkpoint_every=ckpt_every))
+        eng_t = ServeEngine(idx_t, serve_cfg_t)
 
         # warmup: compile every serving shape outside the timed region.
         # The warmup inserts are deleted again right away, so the index
@@ -267,6 +369,10 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
                                   live=live_serve)
     recall_serve = recall_at_k(ids_serve, truth_serve)
 
+    # ---- durability: group-commit overhead A/B probe (DESIGN.md §11) -----
+    probe = durability_probe(n=64 if mode == "smoke" else 512, batch=batch,
+                             dim=dim, seed=seed, work_dir=work_dir)
+
     doc = {
         "meta": {
             "mode": mode, "backend": jax.default_backend(),
@@ -307,6 +413,16 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
             "after_load": load_traces,
             "new_during_load": new_traces,
         },
+        "durability": {
+            # main-drain accounting (zeros unless --wal): records appended
+            # vs group commits fsync'd, and covering checkpoints written
+            "wal_enabled": bool(wal),
+            "ckpt_every": ckpt_every,
+            "wal_records": m["wal"]["records"],
+            "wal_commits": m["wal"]["commits"],
+            "checkpoints": m["maintenance"]["checkpoint"],
+            **probe,
+        },
         "criteria": {
             "zero_retraces_after_warmup": not new_traces,
             "qps_within_10pct_of_fixed": bool(
@@ -322,9 +438,140 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
             "recall_within_0p01": bool(
                 recall_serve >= recall_seq - 0.01 if shards == 1
                 else recall_serve >= 0.95 * recall_seq),
+            "wal_overhead_within_15pct": bool(
+                probe["overhead_p50_pct"] <= 15.0),
         },
     }
     return doc
+
+
+# ---------------------------------------------------------------------------
+# crash-recovery mode (the CI `crash-recovery-smoke` job, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+CRASH_MATRIX = (("pre_commit", 3), ("post_commit_pre_apply", 3),
+                ("mid_checkpoint", 2), ("mid_consolidation", 1))
+
+
+def _crash_ops(rng, n_ops: int, dim: int):
+    """70/15/15 insert/delete/query client stream for the harness."""
+    ops, n_ins = [], 0
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.7 or n_ins < 5:
+            ops.append(("insert",
+                        rng.standard_normal(dim).astype(np.float32)))
+            n_ins += 1
+        elif r < 0.85:
+            ops.append(("delete", int(rng.integers(0, n_ins))))
+        else:
+            ops.append(("query",
+                        rng.standard_normal(dim).astype(np.float32)))
+    return ops
+
+
+def _expected_live(ops, acked):
+    """Replay the acked subset into {ext_id: vector} (the survivor set)."""
+    live = {}
+    for i, (kind, payload) in enumerate(ops):
+        if i not in acked:
+            continue
+        if kind == "insert":
+            live[int(acked[i])] = np.asarray(payload, np.float32)
+        elif kind == "delete":
+            live.pop(int(payload), None)
+    return live
+
+
+def _recovered_recall(engine, live: dict, k: int, eval_q) -> float:
+    """Recall of the recovered engine against brute force over its own
+    acked live set.  Duplicate-tolerant: a client retry whose original
+    record was durable-but-unacked leaves two copies of one vector under
+    two external ids (at-least-once delivery), so a truth slot counts as
+    hit when *any* external id carrying the same vector is returned."""
+    exts = list(live.keys())
+    allv = np.stack([live[e] for e in exts])
+    gkey = [v.tobytes() for v in allv]
+    ext2g = {e: gkey[i] for i, e in enumerate(exts)}
+    truth = brute_force_knn(allv, eval_q, k)
+    tickets = [engine.submit_query(q) for q in eval_q]
+    engine.drain()
+    hits = 0
+    for row, t in zip(truth, tickets):
+        got = {ext2g.get(int(e)) for e in np.asarray(t.result().ids)}
+        got.discard(None)
+        hits += sum(1 for j in row if gkey[int(j)] in got)
+    return hits / (k * len(eval_q))
+
+
+def run_crash_recovery(*, n_ops: int, dim: int, seed: int,
+                       work_dir: str) -> dict:
+    """Kill at every injection point, restart, prove nothing acked was
+    lost and recall holds a floor against an uninterrupted run."""
+    cfg = _cfg(dim, n_ops + 128)
+    ops = _crash_ops(np.random.default_rng(seed), n_ops, dim)
+    eval_q = np.random.default_rng(seed + 5).standard_normal(
+        (32, dim)).astype(np.float32)
+    maint_default = MaintenancePolicy(checkpoint_every=4)
+
+    def recover(root, maint, injector=None):
+        scfg = ServeConfig(
+            query_batch=8, insert_batch=8, delete_batch=8,
+            adaptive_windows=False, query_window=0.0, insert_window=0.0,
+            delete_window=0.0,
+            wal=WalConfig(dir=os.path.join(root, "wal")),
+            ckpt_dir=os.path.join(root, "ckpt"), maintenance=maint)
+        return ServeEngine.recover(
+            scfg, fresh_backend=lambda: LSMVecIndex(cfg, seed=1),
+            restore_backend=lambda d: LSMVecIndex.restore(cfg, d),
+            injector=injector)
+
+    # uninterrupted reference: same stream, no injector — its recall is
+    # the floor every crashed-and-recovered run must hold
+    ref_root = os.path.join(work_dir, "reference")
+    ref = run_with_recovery(
+        policy=RestartPolicy(ckpt_dir=os.path.join(ref_root, "ckpt")),
+        make_engine=lambda inj: recover(ref_root, maint_default),
+        ops=ops, chunk=10)
+    ref_recall = _recovered_recall(
+        ref["engine"], _expected_live(ops, ref["acked"]), cfg.k, eval_q)
+
+    points, ok = {}, True
+    for point, hit in CRASH_MATRIX:
+        maint = maint_default
+        if point == "mid_consolidation":
+            # consolidation must actually trigger for the hook to fire
+            maint = MaintenancePolicy(checkpoint_every=4, check_every=2,
+                                      consolidate_ratio=0.05)
+        root = os.path.join(work_dir, point)
+        injector = FailureInjector(fail_points={point: hit})
+        out = run_with_recovery(
+            policy=RestartPolicy(ckpt_dir=os.path.join(root, "ckpt"),
+                                 wal_dir=os.path.join(root, "wal")),
+            make_engine=lambda inj, r=root, m=maint: recover(r, m, inj),
+            ops=ops, injector=injector, chunk=10)
+        try:
+            summary = verify_acked_writes(out["engine"], ops, out["acked"])
+            zero_loss = True
+        except AssertionError as e:
+            summary = {"live": 0, "deleted": 0, "searched": 0,
+                       "lost": str(e)}
+            zero_loss = False
+        recall = _recovered_recall(
+            out["engine"], _expected_live(ops, out["acked"]), cfg.k, eval_q)
+        fired = out["restarts"] >= 1
+        recall_ok = recall >= ref_recall - 0.05
+        p_ok = fired and zero_loss and recall_ok
+        ok = ok and p_ok
+        points[point] = {
+            "fired": fired, "restarts": out["restarts"],
+            "retried": out["retried"], "zero_acked_loss": zero_loss,
+            "recall": round(recall, 4), "recall_ok": recall_ok,
+            "ok": p_ok, **summary,
+        }
+    return {"mode": "crash-recovery", "n_ops": n_ops, "dim": dim,
+            "seed": seed, "reference_recall": round(ref_recall, 4),
+            "points": points, "ok": ok}
 
 
 def main(argv=None) -> int:
@@ -337,20 +584,54 @@ def main(argv=None) -> int:
     ap.add_argument("--shards", type=int, default=1,
                     help="serve through a ShardedBackend of P shards "
                          "(1 = single-device LSMVecIndex)")
+    ap.add_argument("--wal", action="store_true",
+                    help="run the main serve drain with the group-"
+                         "committed WAL on (acks imply durability)")
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="with --wal: write a covering checkpoint every "
+                         "N write batches during the main drain")
+    ap.add_argument("--crash-recovery", action="store_true",
+                    help="run the failure-injection matrix instead of "
+                         "the load benchmark; exit nonzero on any "
+                         "acked-write loss or recall-floor breach")
+    ap.add_argument("--workdir", default=None,
+                    help="directory for WAL/checkpoint artifacts "
+                         "(default: a fresh temp dir); CI uploads it on "
+                         "failure")
     args = ap.parse_args(argv)
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     out = args.out or os.path.join(root, "BENCH_serve.json")
+    work_dir = args.workdir or tempfile.mkdtemp(prefix="serve_durability_")
+    os.makedirs(work_dir, exist_ok=True)
+
+    if args.crash_recovery:
+        if args.smoke:
+            doc = run_crash_recovery(n_ops=96, dim=16, seed=args.seed,
+                                     work_dir=work_dir)
+        else:
+            doc = run_crash_recovery(n_ops=192, dim=32, seed=args.seed,
+                                     work_dir=work_dir)
+        print(json.dumps(doc, indent=1))
+        for point, res in doc["points"].items():
+            print(f"  {'PASS' if res['ok'] else 'FAIL'} {point} "
+                  f"(restarts={res['restarts']} live={res['live']} "
+                  f"searched={res['searched']} recall={res['recall']})")
+        if args.out:
+            write_bench_json(args.out, doc)
+        return 0 if doc["ok"] else 1
 
     if args.smoke:
         # scale the corpus with the shard count so per-shard scale (and
         # per-shard graph navigability) matches the single-device smoke
         doc = run(n_base=256 * args.shards, n_ops=96, batch=16, dim=16,
                   seed=args.seed, n_expand=4, mode="smoke",
-                  shards=args.shards)
+                  shards=args.shards, wal=args.wal,
+                  ckpt_every=args.ckpt_every, work_dir=work_dir)
     else:
         doc = run(n_base=4096, n_ops=4096, batch=64, dim=64, seed=args.seed,
-                  n_expand=4, mode="full", shards=args.shards)
+                  n_expand=4, mode="full", shards=args.shards, wal=args.wal,
+                  ckpt_every=args.ckpt_every, work_dir=work_dir)
 
     validate_schema(doc)
     print(json.dumps(doc, indent=1))

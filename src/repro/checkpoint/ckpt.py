@@ -22,7 +22,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -38,14 +38,48 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def sweep_stale_tmp(ckpt_dir: str) -> int:
+    """Remove leftover ``step_*.tmp`` staging dirs from crashed saves.
+
+    A save that died mid-stage leaves its tmp dir behind; it can never
+    shadow a published checkpoint (``_list_steps`` skips ``.tmp``), but
+    it wastes space and a same-step retry should not trip over it.
+    Called on every save and safe to call before any restore.  Returns
+    the number of stale dirs removed.
+    """
+    n = 0
+    if not os.path.isdir(ckpt_dir):
+        return n
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+            n += 1
+    return n
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     metadata: Optional[Dict] = None, *,
-                    keep: int = 3) -> str:
+                    keep: int = 3,
+                    _pre_publish: Optional[Callable[[], None]] = None) -> str:
+    """Stage under ``step_<N>.tmp``, fsync every file, rename into place.
+
+    ``_pre_publish`` is a failure-injection hook invoked after the stage
+    is complete (arrays + manifest fsync'd) but *before* the atomic
+    rename — the crash-recovery harness uses it to prove a mid-checkpoint
+    crash leaves the previous checkpoint untouched.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
+    sweep_stale_tmp(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
     os.makedirs(tmp)
 
     leaves, _ = _flatten_with_paths(tree)
@@ -62,16 +96,24 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
             arr = arr.view(store_as)
         names[key] = entry
         arrays[arr_name] = arr
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {"step": step, "entries": names,
                 "metadata": metadata or {}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    if _pre_publish is not None:
+        _pre_publish()
     os.rename(tmp, final)   # atomic publish
+    _fsync_dir(ckpt_dir)    # the rename itself must survive a crash
 
-    # retention
+    # retention: keep the newest `keep` published checkpoints.  Stale
+    # .tmp dirs were swept above; unknown names are skipped by
+    # _list_steps and rmtree tolerates concurrent disappearance.
     steps = sorted(_list_steps(ckpt_dir))
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
@@ -95,6 +137,38 @@ def _list_steps(ckpt_dir: str):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = _list_steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def load_arrays(ckpt_dir: str, step: Optional[int] = None
+                ) -> Tuple[Dict[str, np.ndarray], Dict, int]:
+    """Target-free restore: read every leaf of a checkpoint as a flat
+    ``{path: np.ndarray}`` dict straight from the manifest (dtype/shape
+    come from the manifest entries, including the ml_dtypes stored-as
+    path).  Returns (arrays, metadata, step).
+
+    Backend `restore()` implementations use this because their target
+    structure (HNSWState shapes) is derived from config, not from a
+    live template tree.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    out: Dict[str, np.ndarray] = {}
+    for key, ent in manifest["entries"].items():
+        arr = data[ent["file"]]
+        if "stored_as" in ent:
+            import ml_dtypes
+            arr = arr.view(getattr(ml_dtypes, ent["dtype"]))
+        if list(arr.shape) != ent["shape"]:
+            raise ValueError(f"{key}: array shape {list(arr.shape)} != "
+                             f"manifest {ent['shape']}")
+        out[key] = arr
+    return out, manifest["metadata"], step
 
 
 def restore_checkpoint(ckpt_dir: str, target: Any,

@@ -168,6 +168,21 @@ class VectorBackend(Protocol):
 
     def sync(self) -> None: ...               # block until device work done
 
+    # -- durability (DESIGN.md §11) -------------------------------------------
+    # `save` writes an atomic full-state checkpoint (staged dir + rename)
+    # whose manifest records `lsn`, the WAL position it covers: recovery
+    # restores the checkpoint and replays only records with LSN > lsn.
+    # `extra` carries caller-owned arrays (the serve engine's ext↔int id
+    # map and deleted mask) and `meta` caller scalars; both come back
+    # verbatim from the implementation's matching classmethod
+    #   restore(cfg, ckpt_dir, ...) -> (backend, metadata, extras)
+    # (a constructor, so not part of the instance protocol).  A restore
+    # must refuse layout mismatches — cap/dim/shard count — rather than
+    # load silently into a backend that would route differently.
+    def save(self, ckpt_dir: str, *, lsn: int = 0,
+             extra: Optional[dict] = None, meta: Optional[dict] = None,
+             keep: int = 3, _pre_publish=None) -> str: ...
+
 
 def merge_topk(gids: Sequence[np.ndarray], dists: Sequence[np.ndarray],
                k: int) -> SearchResult:

@@ -17,6 +17,9 @@ Two shard-local engines:
 
 from __future__ import annotations
 
+import json
+import os
+import shutil
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -24,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.checkpoint import ckpt
 from repro.core import hnsw
 from repro.core.backend import (BackendStats, SearchResult, UpdateResult,
                                 merge_topk, shard_of_seq)
@@ -345,6 +349,111 @@ class ShardedBackend:
         other._alloc = list(self._alloc)
         other.consolidations = list(self.consolidations)
         return other
+
+    # -- durability (DESIGN.md §11) -------------------------------------------
+
+    def save(self, ckpt_dir: str, *, lsn: int = 0,
+             extra: Optional[dict] = None, meta: Optional[dict] = None,
+             keep: int = 3, _pre_publish=None) -> str:
+        """Atomic whole-backend checkpoint: per-shard subdirs + a
+        shard-layout manifest, staged and renamed as one unit.
+
+        Layout under ``step_<lsn>/``: ``shard_XX/`` (each shard's own
+        `LSMVecIndex.save`), ``engine/`` (caller `extra` arrays),
+        ``alloc.npz`` (global ids in allocation order) and
+        ``layout.json`` recording shard count, routing counter and the
+        covering LSN.  A restore validates the layout against the
+        target config/shard count, so a checkpoint can never be loaded
+        into a mis-sharded backend (routing would silently diverge).
+        """
+        self.sync()
+        os.makedirs(ckpt_dir, exist_ok=True)
+        ckpt.sweep_stale_tmp(ckpt_dir)
+        final = os.path.join(ckpt_dir, f"step_{int(lsn):08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp)
+        for s, sh in enumerate(self.shards):
+            sh.save(os.path.join(tmp, f"shard_{s:02d}"), lsn=lsn, keep=1)
+        if extra:
+            ckpt.save_checkpoint(
+                os.path.join(tmp, "engine"), step=int(lsn),
+                tree={k: np.asarray(v) for k, v in extra.items()},
+                metadata={}, keep=1)
+        layout = {"n_shards": self.n_shards, "cap": self.cfg.cap,
+                  "dim": self.cfg.dim, "lsn": int(lsn), "seed": self.seed,
+                  "n_routed": self._n_routed,
+                  "consolidations": list(self.consolidations),
+                  "metadata": meta or {}}
+        with open(os.path.join(tmp, "alloc.npz"), "wb") as f:
+            np.savez(f, alloc=np.asarray(self._alloc, np.int64))
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, "layout.json"), "w") as f:
+            json.dump(layout, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if _pre_publish is not None:
+            _pre_publish()
+        os.rename(tmp, final)   # atomic publish
+        fd = os.open(ckpt_dir, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        steps = sorted(ckpt._list_steps(ckpt_dir))
+        for st in steps[:-keep]:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{st:08d}"),
+                          ignore_errors=True)
+        return final
+
+    @classmethod
+    def restore(cls, cfg: hnsw.HNSWConfig, ckpt_dir: str, *,
+                n_shards: Optional[int] = None,
+                devices: Optional[Sequence] = None,
+                step: Optional[int] = None
+                ) -> Tuple["ShardedBackend", dict, dict]:
+        """Rebuild the backend from its latest (or `step`-th) checkpoint.
+
+        Refuses a layout mismatch: shard count (if the caller states an
+        expectation), cap/dim vs `cfg`, and each shard's covering LSN vs
+        the layout's — a torn multi-shard state must never restore.
+        Returns (backend, metadata, extras) like `LSMVecIndex.restore`.
+        """
+        if step is None:
+            step = ckpt.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+        path = os.path.join(ckpt_dir, f"step_{step:08d}")
+        with open(os.path.join(path, "layout.json")) as f:
+            layout = json.load(f)
+        if n_shards is not None and n_shards != layout["n_shards"]:
+            raise ValueError(f"checkpoint has {layout['n_shards']} shards, "
+                             f"caller expects {n_shards}")
+        if layout["cap"] != cfg.cap or layout["dim"] != cfg.dim:
+            raise ValueError(
+                f"checkpoint cap/dim ({layout['cap']}/{layout['dim']}) "
+                f"!= config ({cfg.cap}/{cfg.dim})")
+        be = cls(cfg, layout["n_shards"], devices=devices,
+                 seed=int(layout["seed"]))
+        shards = []
+        for s in range(be.n_shards):
+            sh, smd, _ = LSMVecIndex.restore(
+                cfg, os.path.join(path, f"shard_{s:02d}"))
+            if int(smd["lsn"]) != int(layout["lsn"]):
+                raise ValueError(f"shard {s} covering lsn {smd['lsn']} != "
+                                 f"layout {layout['lsn']} (torn checkpoint)")
+            sh.state = jax.device_put(sh.state, be.devices[s])
+            shards.append(sh)
+        be._shards = shards
+        be._n_routed = int(layout["n_routed"])
+        be._alloc = np.load(os.path.join(path, "alloc.npz"))["alloc"].tolist()
+        be.consolidations = [int(c) for c in layout["consolidations"]]
+        extras = {}
+        eng_dir = os.path.join(path, "engine")
+        if os.path.isdir(eng_dir):
+            extras, _, _ = ckpt.load_arrays(eng_dir)
+        metadata = {**layout["metadata"], "lsn": int(layout["lsn"])}
+        return be, metadata, extras
 
     # -- aggregate accounting -------------------------------------------------
 

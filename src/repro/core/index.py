@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.core import hnsw, iostats, lsm, reorder
 from repro.core.backend import (BackendStats, SearchResult, ShardStats,
                                 UpdateResult)
@@ -417,6 +418,75 @@ class LSMVecIndex:
                             state=jax.tree.map(jnp.copy, self.state))
         other._rng = self._rng
         return other
+
+    # -- durability (DESIGN.md §11) -------------------------------------------
+
+    def save(self, ckpt_dir: str, *, lsn: int = 0,
+             extra: Optional[dict] = None, meta: Optional[dict] = None,
+             keep: int = 3, _pre_publish=None) -> str:
+        """Atomic full-state checkpoint (`VectorBackend` protocol).
+
+        Everything needed for bit-exact resume goes in: the complete
+        `HNSWState` (vectors, codes, upper layers, LSM store, tombstone
+        lane, heat), the insert RNG stream (so replayed inserts draw the
+        same level/edge randomness), and caller `extra` arrays (the
+        serve engine's ext↔int map and deleted mask).  `lsn` is the
+        covering WAL position — recovery replays only records after it —
+        and doubles as the checkpoint step, so steps are monotone as
+        long as the caller only checkpoints after new writes.
+        """
+        self.sync()
+        tree = lsm.dehydrate(self.state, "state")
+        tree["rng"] = jax.random.key_data(self._rng)
+        for k, v in (extra or {}).items():
+            tree[f"extra/{k}"] = np.asarray(v)
+        metadata = {"lsn": int(lsn), "count": self._count,
+                    "version": self._version, "seed": self._seed,
+                    "cap": self.cfg.cap, "dim": self.cfg.dim,
+                    **(meta or {})}
+        return ckpt.save_checkpoint(ckpt_dir, step=int(lsn), tree=tree,
+                                    metadata=metadata, keep=keep,
+                                    _pre_publish=_pre_publish)
+
+    @classmethod
+    def restore(cls, cfg: hnsw.HNSWConfig, ckpt_dir: str, *,
+                step: Optional[int] = None
+                ) -> Tuple["LSMVecIndex", dict, dict]:
+        """Rebuild an index from its latest (or `step`-th) checkpoint.
+
+        Structure comes from `cfg` (shapes are config-derived), values
+        from the manifest; every config-required leaf must be present
+        with the exact shape or the restore refuses — a checkpoint from
+        a different cap/dim/M must never load silently.  Returns
+        (index, metadata, extras) where extras are the caller arrays
+        passed to `save(extra=...)`, keys unprefixed.
+        """
+        arrays, metadata, _ = ckpt.load_arrays(ckpt_dir, step)
+        if (int(metadata["cap"]) != cfg.cap
+                or int(metadata["dim"]) != cfg.dim):
+            raise ValueError(
+                f"checkpoint cap/dim ({metadata['cap']}/{metadata['dim']}) "
+                f"!= config ({cfg.cap}/{cfg.dim})")
+        seed = int(metadata.get("seed", 0))
+        template = hnsw.init(cfg, jax.random.key(seed))
+        leaves = {}
+        for k, tmpl in lsm.dehydrate(template, "state").items():
+            if k not in arrays:
+                raise KeyError(f"checkpoint missing state leaf {k!r}")
+            arr = arrays[k]
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"{k}: checkpoint shape {tuple(arr.shape)} != "
+                    f"config-derived {tuple(tmpl.shape)}")
+            leaves[k] = jnp.asarray(arr, tmpl.dtype)
+        state = lsm.hydrate(template, leaves, "state")
+        idx = cls(cfg, seed=seed, state=state)
+        idx._rng = jax.random.wrap_key_data(jnp.asarray(arrays["rng"]))
+        idx._count = int(metadata["count"])
+        idx._version = int(metadata["version"])
+        extras = {k[len("extra/"):]: v for k, v in arrays.items()
+                  if k.startswith("extra/")}
+        return idx, metadata, extras
 
     # -- accounting -----------------------------------------------------------
 

@@ -2,7 +2,9 @@
 elasticity policy."""
 
 from repro.ft.elastic import (FailureInjector, RestartPolicy,
-                              SimulatedFailure, run_with_restarts)
+                              SimulatedFailure, run_with_recovery,
+                              run_with_restarts, verify_acked_writes)
 
 __all__ = ["FailureInjector", "RestartPolicy", "SimulatedFailure",
-           "run_with_restarts"]
+           "run_with_restarts", "run_with_recovery",
+           "verify_acked_writes"]

@@ -15,6 +15,9 @@ backends serve through the identical code path.
 - metrics    — p50/p99 latency, occupancy, QPS, chosen windows
 - maintenance— tombstone/heat thresholds -> consolidate()/compact()/
   reorder(), applied per shard (lazy-delete consolidation: DESIGN.md §9)
+- wal        — group-committed write-ahead log; with `ServeConfig.wal`
+  set, acks imply durability and `ServeEngine.recover` restores the
+  latest covering checkpoint + replays the tail (DESIGN.md §11)
 """
 
 from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy
@@ -22,9 +25,11 @@ from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import CoalescingQueue
 from repro.serve.request import Op, QueryResult, Request, Ticket
 from repro.serve.scheduler import ServeConfig, ServeEngine
+from repro.serve.wal import WalConfig, WalRecord, WriteAheadLog
 
 __all__ = [
     "Op", "QueryResult", "Request", "Ticket", "CoalescingQueue",
     "ServeMetrics", "MaintenancePolicy", "MaintenanceManager",
-    "ServeConfig", "ServeEngine",
+    "ServeConfig", "ServeEngine", "WalConfig", "WalRecord",
+    "WriteAheadLog",
 ]

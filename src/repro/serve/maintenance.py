@@ -30,7 +30,7 @@ same map needs no rewrite — reclaimed entries simply become inert.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -49,6 +49,12 @@ class MaintenancePolicy:
     check_every: int = 16                     # write batches between checks
     reorder_window: int = 8
     reorder_lam: float = 1.0
+    #: write batches between covering checkpoints (DESIGN.md §11); None
+    #: disables the trigger.  Unlike the threshold triggers this is a
+    #: plain host counter — no device sync to evaluate — and it is not
+    #: gated on `check_every`: durability cadence must not stretch just
+    #: because maintenance probes are sparse.
+    checkpoint_every: Optional[int] = None
 
 
 class MaintenanceManager:
@@ -59,10 +65,18 @@ class MaintenanceManager:
         self.policy = policy
         self.deletes_since_compact = 0
         self.write_batches_since_check = 0
+        self.write_batches_since_ckpt = 0
         self.compactions = 0
         self.reorders = 0
         self.consolidations = 0
         self.slots_reclaimed = 0
+        self.checkpoints = 0
+        #: the engine wires its `checkpoint()` here; the manager owns
+        #: only the cadence (checkpoint_every write batches)
+        self.checkpoint_fn: Optional[Callable[[], Optional[str]]] = None
+        #: failure-injection gate (ServeEngine._crash); called at the
+        #: mid-consolidation point of the crash-recovery matrix
+        self.crash_hook: Optional[Callable[[str], None]] = None
 
     def note_deletes(self, n: int) -> None:
         """Count LSM-staged deletes toward the compact trigger.
@@ -78,9 +92,27 @@ class MaintenanceManager:
 
     def note_write_batch(self) -> None:
         self.write_batches_since_check += 1
+        self.write_batches_since_ckpt += 1
 
     def due(self) -> bool:
         return self.write_batches_since_check >= self.policy.check_every
+
+    def maybe_checkpoint(self) -> bool:
+        """Fire the covering-checkpoint callback when enough write
+        batches have accumulated.  Returns True if a checkpoint ran.
+        The counter resets before the callback: a crash mid-checkpoint
+        must not re-arm the trigger on the very next batch of the dead
+        process (the recovered engine starts its own cadence)."""
+        pol = self.policy
+        if pol.checkpoint_every is None or self.checkpoint_fn is None:
+            return False
+        if self.write_batches_since_ckpt < pol.checkpoint_every:
+            return False
+        self.write_batches_since_ckpt = 0
+        if self.checkpoint_fn() is None:
+            return False
+        self.checkpoints += 1
+        return True
 
     def run_if_due(self, *, force: bool = False) -> List[str]:
         """Check thresholds and run triggered maintenance.
@@ -105,8 +137,14 @@ class MaintenanceManager:
             st = self.backend.stats()
             if st.n_tombstones > 0 \
                     and st.max_tombstone_ratio >= pol.consolidate_ratio:
-                self.slots_reclaimed += self.backend.consolidate(
+                reclaimed = self.backend.consolidate(
                     ratio=pol.consolidate_ratio)
+                if self.crash_hook is not None:
+                    # the consolidation mutated backend state that no
+                    # WAL record describes — the injection point proves
+                    # recovery does not depend on consolidation timing
+                    self.crash_hook("mid_consolidation")
+                self.slots_reclaimed += reclaimed
                 self.consolidations += 1
                 # the rebuilt store is fully compacted and tombstone-free
                 self.deletes_since_compact = 0

@@ -31,7 +31,12 @@ class ServeMetrics:
         self.windows: Dict[Op, float] = {op: 0.0 for op in Op}
         self.snapshot_resolves = 0
         self.maintenance_runs: Dict[str, int] = {
-            "compact": 0, "reorder": 0, "consolidate": 0}
+            "compact": 0, "reorder": 0, "consolidate": 0, "checkpoint": 0}
+        #: WAL accounting (zero when the engine runs without a WAL):
+        #: records appended vs group commits actually fsync'd — the
+        #: ratio is the group-commit amortization the config bought
+        self.wal_records = 0
+        self.wal_commits = 0
         #: deletes the engine dropped host-side as duplicates of an
         #: already-deleted external id or as never-allocated ids
         #: (relaxed coalescing can double-submit); the device-side
@@ -62,7 +67,9 @@ class ServeMetrics:
         out: dict = {"wall_s": round(wall, 4),
                      "snapshot_resolves": self.snapshot_resolves,
                      "delete_noops": self.delete_noops,
-                     "maintenance": dict(self.maintenance_runs)}
+                     "maintenance": dict(self.maintenance_runs),
+                     "wal": {"records": self.wal_records,
+                             "commits": self.wal_commits}}
         for op in Op:
             nb = self._batches[op]
             out[op.value] = {

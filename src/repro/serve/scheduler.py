@@ -44,14 +44,17 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.checkpoint import latest_step
 from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import CoalescingQueue
 from repro.serve.request import Op, QueryResult, Request, Ticket
+from repro.serve.wal import (KIND_INSERT, NO_LSN, WalConfig, WalRecord,
+                             WriteAheadLog)
 
 
 @dataclass
@@ -87,6 +90,14 @@ class ServeConfig:
     #: otherwise
     record_heat: Optional[bool] = None
     maintenance: MaintenancePolicy = field(default_factory=MaintenancePolicy)
+    #: durability spine (DESIGN.md §11).  `wal` turns on write-ahead
+    #: logging of every insert/delete micro-batch: tickets defer until
+    #: the covering group commit, so an acknowledged write survives any
+    #: crash.  `ckpt_dir` enables covering checkpoints (manual via
+    #: `checkpoint()`, automatic via `maintenance.checkpoint_every`).
+    wal: Optional[WalConfig] = None
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
 
 
 class ServeEngine:
@@ -138,6 +149,22 @@ class ServeEngine:
         for op, w in self.queue.windows().items():
             self.metrics.windows[op] = w
         self.batch_log: List[tuple] = []   # (op, size) per executed batch
+        # durability spine (DESIGN.md §11): opening the WAL scans its
+        # segments and truncates any torn tail; write-op tickets are
+        # staged in _pending_acks and resolve only once a group commit
+        # covers their record (ack => record fsync'd)
+        self.wal: Optional[WriteAheadLog] = \
+            WriteAheadLog(self.cfg.wal) if self.cfg.wal is not None else None
+        self._pending_acks: List[Tuple[Ticket, Any]] = []
+        self._oldest_pending_t: Optional[float] = None
+        self._covering_lsn = NO_LSN       # lsn of the last checkpoint
+        self._has_ckpt = False
+        self._ckpt_seq = 0                # checkpoint step when no WAL
+        #: crash-recovery harness gate (ft/elastic.FailureInjector);
+        #: None in production — every injection point is then free
+        self.injector = None
+        self.maintenance.checkpoint_fn = self.checkpoint
+        self.maintenance.crash_hook = self._crash
 
     # -- submission -----------------------------------------------------------
 
@@ -218,21 +245,35 @@ class ServeEngine:
 
     def _exec_insert(self, reqs: List[Request]) -> None:
         xs = np.stack([r.payload for r in reqs])
+        n = len(reqs)
+        # external ids are pre-assigned (allocation is sequential and
+        # deterministic) so the WAL record carries them *before* the
+        # backend dispatch: replaying the record reproduces the same
+        # ext->int binding the original acks promised
+        ext_ids = np.arange(self._next_ext, self._next_ext + n,
+                            dtype=np.int64)
+        lsn = self._log_batch(
+            lambda: self.wal.append_insert(ext_ids, xs))
         res = self.backend.insert_batch(xs, pad_to=self.cfg.insert_batch)
-        for gid, req in zip(np.asarray(res.ids, np.int64), reqs):
-            ext = self._next_ext
-            self._next_ext += 1
-            self._ext2int[ext] = gid
-            self._int2ext[gid] = ext
-            req.ticket._complete(int(ext))
+        gids = np.asarray(res.ids, np.int64)
+        self._next_ext += n
+        self._ext2int[ext_ids] = gids
+        self._int2ext[gids] = ext_ids
+        for ext, req in zip(ext_ids, reqs):
+            self._stage_ack(req.ticket, int(ext))
 
-    def _exec_delete(self, reqs: List[Request]) -> None:
-        ext = np.asarray([r.payload for r in reqs], np.int64)
-        # drop repeats and never-allocated ids host-side: the ticket
-        # still resolves (False), but nothing reaches the device for
-        # them — a double delete must be a counted no-op, not a write,
-        # and an unallocated ext id must not be poisoned against the
-        # day an insert hands it out.
+    def _apply_delete(self, ext: np.ndarray) -> np.ndarray:
+        """Dedup + dispatch one delete batch; returns the fresh mask.
+
+        Drops repeats and never-allocated ids host-side: the ticket
+        still resolves (False), but nothing reaches the device for
+        them — a double delete must be a counted no-op, not a write,
+        and an unallocated ext id must not be poisoned against the
+        day an insert hands it out.  WAL replay re-enters here with the
+        *as-submitted* batch: the same dedup against the restored
+        deleted-set absorbs duplicates, which is what makes replay
+        idempotent.
+        """
         internal = self._ext2int[ext]
         fresh = np.ones(len(ext), bool)
         batch_seen: set = set()
@@ -254,8 +295,81 @@ class ServeEngine:
         # retry the failed tickets)
         self._deleted_ext.update(batch_seen)
         self.maintenance.note_deletes(int(fresh.sum()))
+        return fresh
+
+    def _exec_delete(self, reqs: List[Request]) -> None:
+        ext = np.asarray([r.payload for r in reqs], np.int64)
+        self._log_batch(lambda: self.wal.append_delete(ext))
+        fresh = self._apply_delete(ext)
         for req, f in zip(reqs, fresh):
-            req.ticket._complete(bool(f))
+            self._stage_ack(req.ticket, bool(f))
+
+    # -- WAL group commit + failure injection (DESIGN.md §11) -----------------
+
+    def _log_batch(self, append: Callable[[], int]) -> int:
+        """Append one write batch's WAL record, then pass the two ingest
+        injection points.  Returns the record's LSN (NO_LSN without a
+        WAL).  `pre_commit` crashes lose the (unsynced) record along
+        with its unacked tickets; `post_commit_pre_apply` first forces
+        the record durable, modelling a crash after the group commit but
+        before the in-memory apply — recovery must replay it."""
+        if self.wal is None:
+            return NO_LSN
+        lsn = append()
+        self.metrics.wal_records += 1
+        if self._oldest_pending_t is None:
+            self._oldest_pending_t = self.clock()
+        self._crash("pre_commit")
+        self._crash("post_commit_pre_apply")
+        return lsn
+
+    def _stage_ack(self, ticket: Ticket, value) -> None:
+        """Resolve now (no WAL) or defer until the covering commit."""
+        if self.wal is None:
+            ticket._complete(value)
+        else:
+            self._pending_acks.append((ticket, value))
+
+    def _commit_wal(self, *, force: bool = False) -> None:
+        """Group commit: fsync once `group_commit_n` records are pending
+        or the oldest has waited `group_commit_ms`, then resolve every
+        staged ticket — the invariant is ack => record durable."""
+        if self.wal is None or self.wal.n_unsynced == 0:
+            if self.wal is not None and self._pending_acks:
+                # records already durable (e.g. a forced sync at an
+                # injection point); release the acks they cover
+                self._release_acks()
+            return
+        wcfg = self.wal.cfg
+        age_ms = 0.0
+        if self._oldest_pending_t is not None:
+            age_ms = (self.clock() - self._oldest_pending_t) * 1e3
+        if not (force or self.wal.n_unsynced >= wcfg.group_commit_n
+                or (wcfg.group_commit_ms > 0
+                    and age_ms >= wcfg.group_commit_ms)):
+            return
+        self.wal.sync()
+        self.metrics.wal_commits += 1
+        self._release_acks()
+
+    def _release_acks(self) -> None:
+        acks, self._pending_acks = self._pending_acks, []
+        self._oldest_pending_t = None
+        for ticket, value in acks:
+            ticket._complete(value)
+
+    def _crash(self, point: str) -> None:
+        """Failure-injection gate.  `point` is one of the matrix in
+        DESIGN.md §11: pre_commit, post_commit_pre_apply,
+        mid_checkpoint, mid_consolidation.  No-op without an injector.
+        """
+        inj = self.injector
+        if inj is None:
+            return
+        if (point == "post_commit_pre_apply" and self.wal is not None
+                and inj.armed(point)):
+            self.wal.sync()   # the record must survive this crash
+        inj.at(point)
 
     def _apply_perm(self, perm: np.ndarray) -> None:
         """Fold a reorder permutation (perm[old_int] = new_int, identity
@@ -290,6 +404,9 @@ class ServeEngine:
                     self._shape_windows()
                 got = self.queue.next_batch(self.clock(), force=force)
             if got is None:
+                # no batch released: still honor the group-commit clock
+                # so deferred acks can't wait behind an idle queue
+                self._commit_wal()
                 return None
             op, reqs = got
             try:
@@ -306,7 +423,15 @@ class ServeEngine:
                         self._apply_perm(self.maintenance.last_perm)
                     for a in actions:
                         self.metrics.maintenance_runs[a] += 1
+                    self._commit_wal()
+                    self.maintenance.maybe_checkpoint()
             except BaseException as e:
+                # un-stage this batch's deferred acks before failing its
+                # tickets: a later group commit must not resolve a
+                # ticket the client was already told failed
+                dead = {r.ticket for r in reqs}
+                self._pending_acks = [(t, v) for t, v in self._pending_acks
+                                      if t not in dead]
                 for r in reqs:
                     if not r.ticket.done:
                         r.ticket._fail(e)
@@ -318,14 +443,151 @@ class ServeEngine:
             return op
 
     def drain(self) -> int:
-        """Pump until the queue is empty; returns batches executed."""
+        """Pump until the queue is empty (then force the group commit so
+        every staged ack resolves); returns batches executed."""
         n = 0
         while True:
             with self._lock:
-                if len(self.queue) == 0:
-                    return n
+                empty = len(self.queue) == 0
+            if empty:
+                with self._pump_lock:
+                    self._commit_wal(force=True)
+                return n
             if self.pump(force=True) is not None:
                 n += 1
+
+    # -- durability: checkpoint / recover (DESIGN.md §11) ---------------------
+
+    def resolve_ext(self, ext_id: int) -> int:
+        """Internal id currently backing an external id (-1 = none) —
+        the id-level survival probe the recovery harness verifies with."""
+        return int(self._ext2int[int(ext_id)])
+
+    def is_deleted(self, ext_id: int) -> bool:
+        """True if this engine has applied a delete of `ext_id`."""
+        return int(ext_id) in self._deleted_ext
+
+    def checkpoint(self) -> Optional[str]:
+        """Write a covering checkpoint: force the group commit, save the
+        backend with the engine's id maps as extras, then drop WAL
+        segments the checkpoint covers.  Returns the published path, or
+        None when disabled / nothing new to cover.  The covering LSN in
+        the manifest is the replay cut: recovery applies exactly the
+        records after it."""
+        if self.cfg.ckpt_dir is None:
+            return None
+        with self._pump_lock:
+            if self.wal is not None:
+                self._commit_wal(force=True)
+                lsn = self.wal.last_lsn
+                if self._has_ckpt and lsn == self._covering_lsn:
+                    return None          # nothing new since last cover
+            else:
+                self._ckpt_seq += 1
+                lsn = self._ckpt_seq
+            deleted = np.zeros(self.backend.cap, bool)
+            if self._deleted_ext:
+                deleted[np.fromiter(self._deleted_ext, np.int64)] = True
+            path = self.backend.save(
+                self.cfg.ckpt_dir, lsn=lsn,
+                extra={"int2ext": self._int2ext, "ext2int": self._ext2int,
+                       "deleted": deleted},
+                meta={"next_ext": self._next_ext, "seq": self._seq,
+                      # maintenance trigger phase: replay must re-enter
+                      # run_if_due with the same counters or its
+                      # consolidate/compact timing drifts from the
+                      # original timeline (breaking bit-exact replay)
+                      "maint_since_check":
+                          self.maintenance.write_batches_since_check,
+                      "maint_deletes":
+                          self.maintenance.deletes_since_compact},
+                keep=self.cfg.ckpt_keep,
+                _pre_publish=lambda: self._crash("mid_checkpoint"))
+            self._covering_lsn = lsn
+            self._has_ckpt = True
+            self.metrics.maintenance_runs["checkpoint"] += 1
+            if self.wal is not None:
+                self.wal.truncate_through(lsn)
+            return path
+
+    @classmethod
+    def recover(cls, cfg: ServeConfig, *,
+                fresh_backend: Callable[[], Any],
+                restore_backend: Optional[
+                    Callable[[str], Tuple[Any, dict, dict]]] = None,
+                clock=time.monotonic, injector=None) -> "ServeEngine":
+        """Rebuild an engine after a crash (or cold-start it — with no
+        checkpoint and an empty WAL this is a plain constructor).
+
+        `restore_backend(ckpt_dir) -> (backend, metadata, extras)` is
+        the implementation's restore classmethod (e.g.
+        ``lambda d: LSMVecIndex.restore(hnsw_cfg, d)``); `fresh_backend`
+        builds the empty backend when no checkpoint exists.  Opening the
+        WAL truncates any torn tail; the tail records past the covering
+        LSN then replay through the normal dispatch path.
+        """
+        backend, md, extras = None, {}, {}
+        if (cfg.ckpt_dir is not None and restore_backend is not None
+                and latest_step(cfg.ckpt_dir) is not None):
+            backend, md, extras = restore_backend(cfg.ckpt_dir)
+        restored = backend is not None
+        if backend is None:
+            backend = fresh_backend()
+        eng = cls(backend, cfg, clock=clock)
+        eng.injector = injector
+        if restored:
+            eng._int2ext = np.asarray(extras["int2ext"], np.int64).copy()
+            eng._ext2int = np.asarray(extras["ext2int"], np.int64).copy()
+            eng._deleted_ext = set(
+                np.flatnonzero(np.asarray(extras["deleted"], bool)).tolist())
+            eng._next_ext = int(md["next_ext"])
+            eng._seq = int(md["seq"])
+            eng._covering_lsn = int(md.get("lsn", NO_LSN))
+            eng._has_ckpt = True
+            eng.maintenance.write_batches_since_check = \
+                int(md.get("maint_since_check", 0))
+            eng.maintenance.deletes_since_compact = \
+                int(md.get("maint_deletes", 0))
+        if eng.wal is not None:
+            eng._replay(eng.wal.records(after=eng._covering_lsn))
+        return eng
+
+    def _replay(self, records: List[WalRecord]) -> int:
+        """Re-dispatch recovered WAL records through the identical batch
+        path — same pad widths, same maintenance cadence — so for
+        deterministic policies the recovered backend is bit-exact with
+        an uninterrupted run of the same record sequence.  Exactly-once
+        relative to the restored state: backend memory is volatile, so
+        everything after the covering LSN is by definition unapplied.
+        Returns the number of records applied."""
+        n = 0
+        for rec in records:
+            if rec.kind == KIND_INSERT:
+                res = self.backend.insert_batch(
+                    rec.vectors, pad_to=self.cfg.insert_batch)
+                gids = np.asarray(res.ids, np.int64)
+                self._ext2int[rec.ext_ids] = gids
+                self._int2ext[gids] = rec.ext_ids
+                self._next_ext = max(self._next_ext,
+                                     int(rec.ext_ids.max()) + 1)
+            else:
+                self._apply_delete(rec.ext_ids)
+            self.maintenance.note_write_batch()
+            actions = self.maintenance.run_if_due()
+            if "reorder" in actions:
+                self._apply_perm(self.maintenance.last_perm)
+            for a in actions:
+                self.metrics.maintenance_runs[a] += 1
+            n += 1
+        return n
+
+    def close(self) -> None:
+        """Graceful shutdown: stop serving, drain, close the WAL.  A
+        crash-recovery test never calls this — simulated death abandons
+        the files exactly as a killed process would."""
+        self.stop()
+        if self.wal is not None:
+            self.wal.close()
 
     # -- background serving ---------------------------------------------------
 

@@ -1,0 +1,316 @@
+"""Durability-spine tests (DESIGN.md §11): checkpoint atomicity and
+dtype round-trips, backend save/restore bit-exactness at shards=1 and
+shards=4, engine WAL recovery, group-commit ack deferral, and the
+crash-recovery matrix over every injection point."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_arrays, restore_checkpoint,
+                              save_checkpoint, sweep_stale_tmp)
+from repro.core import hnsw
+from repro.core.distributed import ShardedBackend
+from repro.core.index import LSMVecIndex
+from repro.ft import (FailureInjector, RestartPolicy, SimulatedFailure,
+                      run_with_recovery, run_with_restarts,
+                      verify_acked_writes)
+from repro.serve import MaintenancePolicy, ServeConfig, ServeEngine, WalConfig
+
+CFG = hnsw.HNSWConfig(cap=2048, dim=16, M=8, M_up=4, num_upper=2,
+                      ef_search=32, ef_construction=32, k=10,
+                      rho=1.0, use_filter=False, lsm_mem_cap=64,
+                      lsm_levels=2, lsm_fanout=8)
+
+
+def _vecs(n, seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        (n, CFG.dim)).astype(np.float32)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# ckpt.py: non-native dtypes, stale-tmp sweep, mid-save atomicity
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrips_bf16_via_stored_as(tmp_path):
+    import ml_dtypes
+    import jax.numpy as jnp
+    tree = {"w": jnp.arange(8, dtype=jnp.bfloat16) / 3,
+            "b": jnp.ones((3,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    got, _, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+    assert got["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(got["w"]).view(np.uint16),
+        np.asarray(tree["w"]).view(np.uint16))    # bit-exact, not approx
+    # and the target-free loader sees the same bits
+    arrays, _, _ = load_arrays(str(tmp_path))
+    assert arrays["w"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(arrays["w"].view(np.uint16),
+                                  np.asarray(tree["w"]).view(np.uint16))
+
+
+def test_stale_tmp_dirs_are_swept_and_never_shadow(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_00000007.tmp"))  # crashed save
+    assert latest_step(d) is None                      # never shadows
+    assert sweep_stale_tmp(d) == 1
+    assert not os.path.exists(os.path.join(d, "step_00000007.tmp"))
+    # a save at the same step as a leftover tmp does not trip over it
+    os.makedirs(os.path.join(d, "step_00000003.tmp"))
+    save_checkpoint(d, 3, {"x": np.arange(4)})
+    assert latest_step(d) == 3
+
+
+def test_crash_before_publish_leaves_previous_checkpoint(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"x": np.arange(4)})
+
+    def boom():
+        raise SimulatedFailure("mid_checkpoint")
+
+    with pytest.raises(SimulatedFailure):
+        save_checkpoint(d, 2, {"x": np.arange(4) + 1}, _pre_publish=boom)
+    # the torn save is invisible: latest is still step 1, with its data
+    assert latest_step(d) == 1
+    arrays, _, _ = load_arrays(d)
+    np.testing.assert_array_equal(arrays["x"], np.arange(4))
+    # and the next save sweeps the leftover stage and publishes fine
+    save_checkpoint(d, 2, {"x": np.arange(4) + 1})
+    assert latest_step(d) == 2
+
+
+def test_retention_keeps_newest_k(tmp_path):
+    d = str(tmp_path)
+    for s in range(5):
+        save_checkpoint(d, s, {"x": np.array([s])}, keep=2)
+    steps = sorted(int(n[5:]) for n in os.listdir(d)
+                   if n.startswith("step_") and not n.endswith(".tmp"))
+    assert steps == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# backend save/restore: bit-exact at shards=1 and shards=4
+# ---------------------------------------------------------------------------
+
+def test_index_save_restore_bit_exact_and_search_parity(tmp_path):
+    idx = LSMVecIndex(CFG, seed=3)
+    idx.insert_batch(_vecs(300))
+    idx.delete_batch(np.arange(20))
+    idx.save(str(tmp_path), lsn=5,
+             extra={"m": np.arange(4, dtype=np.int64)}, meta={"next_ext": 300})
+
+    idx2, md, extras = LSMVecIndex.restore(CFG, str(tmp_path))
+    assert md["lsn"] == 5 and md["next_ext"] == 300
+    np.testing.assert_array_equal(extras["m"], np.arange(4))
+    assert _trees_equal(idx.state, idx2.state)
+
+    # restored RNG stream: the next insert batch lands bit-identically
+    xs = _vecs(40, seed=9)
+    idx.insert_batch(xs)
+    idx2.insert_batch(xs)
+    assert _trees_equal(idx.state, idx2.state)
+
+    q = _vecs(16, seed=11)
+    np.testing.assert_array_equal(np.asarray(idx.search(q).ids),
+                                  np.asarray(idx2.search(q).ids))
+
+
+def test_index_restore_refuses_config_mismatch(tmp_path):
+    idx = LSMVecIndex(CFG, seed=0)
+    idx.insert_batch(_vecs(80))
+    idx.save(str(tmp_path), lsn=1)
+    with pytest.raises(ValueError, match="cap/dim"):
+        LSMVecIndex.restore(CFG._replace(dim=32), str(tmp_path))
+    with pytest.raises(ValueError):
+        LSMVecIndex.restore(CFG._replace(M=CFG.M * 2), str(tmp_path))
+
+
+def test_sharded_save_restore_bit_exact_and_layout_guard(tmp_path):
+    cfg = CFG._replace(cap=512)
+    be = ShardedBackend(cfg, 4, seed=7).build(_vecs(300), seed=7)
+    be.insert_batch(_vecs(40, seed=5))
+    be.delete_batch(np.asarray(be.initial_ids()[:25]))
+    be.save(str(tmp_path), lsn=3, meta={"next_ext": 340})
+
+    be2, md, _ = ShardedBackend.restore(cfg, str(tmp_path), n_shards=4)
+    assert md["lsn"] == 3 and md["next_ext"] == 340
+    assert be2._n_routed == be._n_routed and be2._alloc == be._alloc
+    for a, b in zip(be.shards, be2.shards):
+        assert _trees_equal(a.state, b.state)
+    q = _vecs(16, seed=13)
+    np.testing.assert_array_equal(np.asarray(be.search(q).ids),
+                                  np.asarray(be2.search(q).ids))
+    # routing state restored: the next insert routes identically
+    xs = _vecs(16, seed=17)
+    np.testing.assert_array_equal(np.asarray(be.insert_batch(xs).ids),
+                                  np.asarray(be2.insert_batch(xs).ids))
+
+    with pytest.raises(ValueError, match="shards"):
+        ShardedBackend.restore(cfg, str(tmp_path), n_shards=2)
+    with pytest.raises(ValueError, match="cap/dim"):
+        ShardedBackend.restore(cfg._replace(dim=32), str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# engine-level durability
+# ---------------------------------------------------------------------------
+
+def _serve_cfg(tmp_path, **kw):
+    maint = kw.pop("maintenance", MaintenancePolicy(checkpoint_every=4))
+    return ServeConfig(
+        query_batch=8, insert_batch=8, delete_batch=8,
+        adaptive_windows=False, query_window=0.0, insert_window=0.0,
+        delete_window=0.0,
+        wal=WalConfig(dir=str(tmp_path / "wal"), **kw),
+        ckpt_dir=str(tmp_path / "ckpt"), maintenance=maint)
+
+
+def _recover(tmp_path, injector=None, **kw):
+    return ServeEngine.recover(
+        _serve_cfg(tmp_path, **kw),
+        fresh_backend=lambda: LSMVecIndex(CFG, seed=1),
+        restore_backend=lambda d: LSMVecIndex.restore(CFG, d),
+        injector=injector)
+
+
+def _mixed_ops(n, seed=0):
+    rng = np.random.default_rng(seed)
+    ops, n_ins = [], 0
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.7 or n_ins < 5:
+            ops.append(("insert", rng.standard_normal(CFG.dim)
+                        .astype(np.float32)))
+            n_ins += 1
+        elif r < 0.85:
+            ops.append(("delete", int(rng.integers(0, n_ins))))
+        else:
+            ops.append(("query", rng.standard_normal(CFG.dim)
+                        .astype(np.float32)))
+    return ops
+
+
+def test_engine_recovery_is_bit_exact_without_crash(tmp_path):
+    """Kill-free baseline: an engine rebuilt from its checkpoint + WAL
+    tail must hold bit-identical backend state to the one it replaced —
+    the checkpoint-covered prefix restores exactly and the replayed
+    tail re-executes through the same padded batch path."""
+    eng = _recover(tmp_path)
+    ids = []
+    for x in _vecs(60, seed=2):
+        ids.append(eng.submit_insert(x))
+    for e in range(0, 10):
+        eng.submit_delete(e)
+    eng.drain()
+    assert all(t.done for t in ids)
+    assert eng.metrics.maintenance_runs["checkpoint"] >= 1
+
+    eng2 = _recover(tmp_path)       # simulated process restart
+    assert _trees_equal(eng.backend.state, eng2.backend.state)
+    np.testing.assert_array_equal(eng._int2ext, eng2._int2ext)
+    np.testing.assert_array_equal(eng._ext2int, eng2._ext2int)
+    assert eng._deleted_ext == eng2._deleted_ext
+    assert eng._next_ext == eng2._next_ext
+
+
+def test_ack_implies_durable_replay(tmp_path):
+    """Every resolved write ticket must survive a crash with no
+    checkpoint at all (pure WAL replay from LSN 0)."""
+    cfg = _serve_cfg(tmp_path,
+                     maintenance=MaintenancePolicy(checkpoint_every=None))
+    eng = ServeEngine.recover(
+        cfg, fresh_backend=lambda: LSMVecIndex(CFG, seed=1),
+        restore_backend=lambda d: LSMVecIndex.restore(CFG, d))
+    tickets = [eng.submit_insert(x) for x in _vecs(30, seed=4)]
+    del_t = eng.submit_delete(3)
+    eng.drain()
+    exts = [t.result() for t in tickets]
+    assert del_t.result() is True
+
+    eng2 = ServeEngine.recover(
+        cfg, fresh_backend=lambda: LSMVecIndex(CFG, seed=1),
+        restore_backend=lambda d: LSMVecIndex.restore(CFG, d))
+    for e in exts:
+        if e == 3:
+            continue
+        assert eng2.resolve_ext(e) >= 0
+    assert eng2.is_deleted(3)
+    assert _trees_equal(eng.backend.state, eng2.backend.state)
+
+
+def test_group_commit_defers_acks_until_sync(tmp_path):
+    cfg = _serve_cfg(tmp_path, group_commit_n=100,
+                     maintenance=MaintenancePolicy(checkpoint_every=None))
+    eng = ServeEngine(LSMVecIndex(CFG, seed=1), cfg)
+    tickets = [eng.submit_insert(x) for x in _vecs(8, seed=6)]
+    eng.pump(force=True)
+    # batch executed but the commit threshold (100 records) not reached:
+    # tickets stay pending — an ack may never precede its fsync
+    assert not any(t.done for t in tickets)
+    assert eng.wal.n_unsynced == 1
+    eng.drain()                      # drain forces the group commit
+    assert all(t.done for t in tickets)
+    assert eng.wal.n_unsynced == 0
+    assert eng.metrics.wal_commits == 1
+    assert eng.metrics.wal_records == 1
+    eng.close()
+
+
+def test_checkpoint_truncates_covered_wal(tmp_path):
+    eng = _recover(tmp_path)
+    for x in _vecs(40, seed=8):
+        eng.submit_insert(x)
+    eng.drain()
+    path = eng.checkpoint()
+    if path is not None:             # cadence ckpt may already cover all
+        assert os.path.isdir(path)
+    assert eng._covering_lsn == eng.wal.last_lsn
+    # every surviving WAL record is past the covering checkpoint
+    assert eng.wal.records(after=eng._covering_lsn) == eng.wal.records()
+    eng.close()
+
+
+@pytest.mark.parametrize("point,hit", [
+    ("pre_commit", 3),
+    ("post_commit_pre_apply", 3),
+    ("mid_checkpoint", 2),
+    ("mid_consolidation", 1),
+])
+def test_crash_recovery_matrix_zero_acked_loss(tmp_path, point, hit):
+    """The acceptance gate: kill at each injection point, restart,
+    prove every acknowledged ticket survives — by id map and by search
+    reachability — via the shared ft harness."""
+    maint = MaintenancePolicy(checkpoint_every=4)
+    if point == "mid_consolidation":
+        # consolidation must actually trigger for the hook to fire
+        maint = MaintenancePolicy(checkpoint_every=4, check_every=2,
+                                  consolidate_ratio=0.05)
+    policy = RestartPolicy(ckpt_dir=str(tmp_path / "ckpt"),
+                           wal_dir=str(tmp_path / "wal"), max_restarts=5)
+    injector = FailureInjector(fail_points={point: hit})
+    ops = _mixed_ops(90, seed=3)
+    out = run_with_recovery(
+        policy=policy,
+        make_engine=lambda inj: _recover(tmp_path, injector=inj,
+                                         maintenance=maint),
+        ops=ops, injector=injector, chunk=10)
+    assert out["restarts"] >= 1, f"{point} never fired"
+    summary = verify_acked_writes(out["engine"], ops, out["acked"])
+    assert summary["live"] == summary["searched"] > 0
+
+
+def test_restart_policy_requires_ckpt_dir():
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        run_with_restarts(policy=RestartPolicy(), init_state=lambda: 0,
+                          step_fn=lambda s, i: s, num_steps=1)

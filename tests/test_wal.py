@@ -1,0 +1,213 @@
+"""Tests for the serve-path write-ahead log (repro.serve.wal,
+DESIGN.md §11): record round-trips, torn-tail and corruption recovery,
+segment rotation/retention, and group-commit accounting."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve.wal import (KIND_DELETE, KIND_INSERT, NO_LSN, WalConfig,
+                             WriteAheadLog)
+
+
+def _wal(tmp_path, **kw):
+    return WriteAheadLog(WalConfig(dir=str(tmp_path / "wal"), **kw))
+
+
+def _segments(w):
+    return sorted(n for n in os.listdir(w.cfg.dir) if n.endswith(".log"))
+
+
+# ---------------------------------------------------------------------------
+# append / reopen round-trip
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_insert_and_delete_records(tmp_path):
+    w = _wal(tmp_path)
+    ids = np.arange(4, dtype=np.int64)
+    vecs = np.arange(4 * 8, dtype=np.float32).reshape(4, 8)
+    assert w.append_insert(ids, vecs) == 1
+    assert w.append_delete(np.array([7, 3], np.int64)) == 2
+    w.sync()
+    w.close()
+
+    w2 = _wal(tmp_path)
+    recs = w2.records()
+    assert [r.lsn for r in recs] == [1, 2]
+    assert recs[0].kind == KIND_INSERT
+    np.testing.assert_array_equal(recs[0].ext_ids, ids)
+    np.testing.assert_array_equal(recs[0].vectors, vecs)
+    assert recs[1].kind == KIND_DELETE
+    np.testing.assert_array_equal(recs[1].ext_ids, [7, 3])
+    assert recs[1].vectors is None
+    assert w2.last_lsn == 2
+    # the `after` cut is exclusive
+    assert [r.lsn for r in w2.records(after=1)] == [2]
+    assert w2.records(after=2) == []
+    w2.close()
+
+
+def test_lsns_are_monotonic_across_reopen(tmp_path):
+    w = _wal(tmp_path)
+    for _ in range(3):
+        w.append_delete(np.array([0], np.int64))
+    w.sync()
+    w.close()
+    w2 = _wal(tmp_path)
+    assert w2.append_delete(np.array([1], np.int64)) == 4
+    w2.close()
+
+
+def test_unsynced_records_are_visible_after_reopen_if_flushed(tmp_path):
+    # close() syncs; this asserts the append->close->reopen path only
+    w = _wal(tmp_path)
+    w.append_delete(np.array([5], np.int64))
+    assert w.synced_lsn == NO_LSN and w.n_unsynced == 1
+    w.close()
+    w2 = _wal(tmp_path)
+    assert w2.last_lsn == 1
+    w2.close()
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: torn tails, corruption, chain breaks
+# ---------------------------------------------------------------------------
+
+def test_torn_tail_is_truncated_to_last_valid_record(tmp_path):
+    w = _wal(tmp_path)
+    for i in range(4):
+        w.append_insert(np.array([i], np.int64),
+                        np.full((1, 8), i, np.float32))
+    w.sync()
+    w.close()
+    seg = os.path.join(str(tmp_path / "wal"), _segments_path(tmp_path)[-1])
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:
+        f.truncate(size - 5)           # partial final record
+
+    w2 = _wal(tmp_path)
+    assert w2.last_lsn == 3
+    assert [r.lsn for r in w2.records()] == [1, 2, 3]
+    # the chain continues cleanly after truncation
+    assert w2.append_delete(np.array([0], np.int64)) == 4
+    w2.sync()
+    w2.close()
+    w3 = _wal(tmp_path)
+    assert [r.lsn for r in w3.records()] == [1, 2, 3, 4]
+    w3.close()
+
+
+def test_corrupt_record_drops_it_and_everything_after(tmp_path):
+    w = _wal(tmp_path, segment_bytes=100)   # force several segments
+    for i in range(10):
+        w.append_delete(np.array([i], np.int64))
+    w.sync()
+    w.close()
+    segs = _segments_path(tmp_path)
+    assert len(segs) > 2
+    # flip one payload byte mid-way through the second segment
+    seg = os.path.join(str(tmp_path / "wal"), segs[1])
+    with open(seg, "r+b") as f:
+        f.seek(12)
+        b = f.read(1)
+        f.seek(12)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+    w2 = _wal(tmp_path)
+    recs = w2.records()
+    # prefix before the corruption survives; suffix segments are gone
+    assert recs and recs[-1].lsn < 10
+    assert [r.lsn for r in recs] == list(range(1, recs[-1].lsn + 1))
+    w2.close()
+
+
+def _segments_path(tmp_path):
+    d = str(tmp_path / "wal")
+    return sorted(n for n in os.listdir(d) if n.endswith(".log"))
+
+
+# ---------------------------------------------------------------------------
+# rotation + checkpoint truncation
+# ---------------------------------------------------------------------------
+
+def test_segment_rotation_at_size_threshold(tmp_path):
+    w = _wal(tmp_path, segment_bytes=256)
+    for i in range(12):
+        w.append_delete(np.array([i], np.int64))
+    w.sync()
+    assert len(_segments(w)) > 1
+    # reopen sees one contiguous chain across segments
+    w.close()
+    w2 = _wal(tmp_path, segment_bytes=256)
+    assert [r.lsn for r in w2.records()] == list(range(1, 13))
+    w2.close()
+
+
+def test_truncate_through_drops_covered_segments(tmp_path):
+    w = _wal(tmp_path, segment_bytes=256)
+    for i in range(20):
+        w.append_delete(np.array([i], np.int64))
+    w.sync()
+    before = len(_segments(w))
+    removed = w.truncate_through(10)
+    assert removed > 0
+    # covered closed segments gone; the active one may have rotated
+    assert len(_segments(w)) in (before - removed, before - removed + 1)
+    # appends continue, and a reopen rebuilds the chain from mid-stream
+    assert w.append_delete(np.array([99], np.int64)) == 21
+    w.sync()
+    w.close()
+    w2 = _wal(tmp_path, segment_bytes=256)
+    lsns = [r.lsn for r in w2.records()]
+    assert lsns[-1] == 21 and lsns == list(range(lsns[0], 22))
+    assert w2.records(after=20)[0].lsn == 21
+    w2.close()
+
+
+def test_truncate_through_below_first_segment_is_noop(tmp_path):
+    w = _wal(tmp_path)
+    for i in range(3):
+        w.append_delete(np.array([i], np.int64))
+    w.sync()
+    assert w.truncate_through(0) == 0
+    w.close()
+    # nothing was dropped: a reopen recovers the full chain
+    w2 = _wal(tmp_path)
+    assert [r.lsn for r in w2.records()] == [1, 2, 3]
+    w2.close()
+
+
+# ---------------------------------------------------------------------------
+# group-commit accounting
+# ---------------------------------------------------------------------------
+
+def test_sync_covers_everything_appended(tmp_path):
+    w = _wal(tmp_path)
+    for i in range(5):
+        w.append_delete(np.array([i], np.int64))
+    assert w.n_unsynced == 5 and w.synced_lsn == NO_LSN
+    covered = w.sync()
+    assert covered == 5 == w.synced_lsn
+    assert w.n_unsynced == 0
+    assert w.n_syncs == 1
+    # idle sync is free (no extra fsync)
+    w.sync()
+    assert w.n_syncs == 1
+    w.close()
+
+
+def test_flush_only_mode_skips_fsync(tmp_path):
+    w = _wal(tmp_path, sync=False)
+    w.append_delete(np.array([1], np.int64))
+    assert w.sync() == 1          # still advances the covered LSN
+    w.close()
+
+
+def test_record_and_byte_counters(tmp_path):
+    w = _wal(tmp_path)
+    w.append_insert(np.array([0], np.int64), np.zeros((1, 4), np.float32))
+    w.append_delete(np.array([0], np.int64))
+    assert w.n_records == 2
+    assert w.bytes_appended > 0
+    w.close()
