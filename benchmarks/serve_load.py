@@ -7,9 +7,12 @@ relaxed coalescing) and records:
   - **serve_qps** — queries completed / total drain wall, i.e. query
     throughput *while also absorbing the write stream* and any
     threshold-triggered LSM compactions;
-  - **fixed_batch_qps** — the PR-1 reference path measured in-run: direct
-    fixed-shape `LSMVecIndex.search` batches (no scheduler, no writes) on
-    the same machine and index;
+  - **fixed_batch_qps** — the PR-1 reference path measured in-run: the
+    SAME op stream dispatched directly as fixed-shape batches (no
+    scheduler; arrival-order runs of `batch` per op) on the same machine
+    from the same starting index, so both sides pay the identical write
+    stream and the ratio isolates the serving layer rather than the
+    box's read/write cost balance;
   - **zero-retrace proof** — jit trace counts per entry point are
     snapshotted after warmup and must not grow during the load phase
     (fixed pad shapes mean ragged micro-batches reuse one traced shape);
@@ -227,15 +230,17 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
     mix = {op: round(sum(1 for o, _ in stream if o == op) / n_ops, 3)
            for op in ("q", "i", "d")}
 
-    # Serving configuration: query micro-batches coalesce 4x wider than
+    # Serving configuration: query micro-batches coalesce 2x wider than
     # the write pad width (at saturation the scheduler's advantage is
-    # filling large fixed shapes from the backlog), and beams expand 2x
+    # filling large fixed shapes from the backlog — but going wider still
+    # loses more to pad-lane waste on partial batches than it gains in
+    # dispatch amortization), and beams expand 2x
     # wider than the reference path — on a churn-damaged graph the
     # vmapped batch runs as long as its slowest lane, and wider expansion
     # halves the straggler trip count.  Recall is guarded by the
     # sequential-baseline criterion below.
     serve_cfg = ServeConfig(
-        query_batch=4 * batch, insert_batch=batch, delete_batch=batch,
+        query_batch=2 * batch, insert_batch=batch, delete_batch=batch,
         query_window=0.0, insert_window=0.0, delete_window=0.0,
         strict_order=False, n_expand=2 * n_expand,
         maintenance=MaintenancePolicy(tombstone_ratio=0.25, heat_budget=None,
@@ -312,27 +317,57 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
                   for k in load_traces if load_traces[k]
                   != warm_traces.get(k, 0)}
 
-    # ---- fixed-batch reference QPS (the PR-1 path): measured on the SAME
-    # post-churn index, same query distribution and same statistical
-    # footing as the serve drain — one pass over as many distinct queries
-    # as the stream carried, best of SERVE_TRIALS passes.  The ratio then
-    # isolates the serving layer (scheduling + padding + snapshot reads +
-    # absorbed writes) from workload-inherent graph damage and container
-    # jitter alike.
+    # ---- fixed-batch reference QPS (the PR-1 path): the SAME op stream
+    # dispatched directly as fixed-shape batches — arrival-order runs of
+    # `batch` per op, no scheduler, reference beam shape — from the same
+    # starting index, best of SERVE_TRIALS passes.  Both sides pay the
+    # identical write stream, so the ratio isolates the serving layer
+    # (coalescing + padding + snapshot reads + scheduling) from the
+    # box's read/write cost balance: a read-only reference flips the
+    # criterion with the hardware — on a box with cheap batched reads
+    # it penalizes the serve drain for write time no scheduler can
+    # avoid, on one with dear reads it flatters it.
     n_stream_q = sum(1 for o, _ in stream if o == "q")
-    n_fixed_batches = max(n_stream_q // batch, 1)
-    fixed_pool = base[rng.integers(0, n_base,
-                                   size=n_fixed_batches * batch)]
-    idx.search(fixed_pool[:batch], k=cfg.k, n_expand=n_expand)  # compile
+    gids0 = np.asarray(backend0.initial_ids(), np.int64)
     dt_fixed = float("inf")
     for _ in range(SERVE_TRIALS):
+        idx_f = backend0.clone()
+        # compile this clone's shapes outside the timed region (clone()
+        # gives fresh jit caches), mirroring the serve trials' warmup:
+        # the same warm inserts (shard-covering under --shards) are
+        # deleted again, so only the id space advances before timing
+        wid = np.asarray(idx_f.insert_batch(warm_vecs, pad_to=batch).ids,
+                         np.int64)
+        idx_f.delete_batch(wid, pad_to=batch)
+        idx_f.search(base[:batch], k=cfg.k, n_expand=n_expand,
+                     record_heat=False, pad_to=batch)
+        idx_f.sync()
+        bufs = {"q": [], "i": [], "d": []}
+
+        def _flush(op, idx_f=idx_f, bufs=bufs):
+            items = bufs[op]
+            if not items:
+                return
+            if op == "q":
+                idx_f.search(np.stack(items), k=cfg.k, n_expand=n_expand,
+                             record_heat=False, pad_to=batch)
+            elif op == "i":
+                idx_f.insert_batch(np.stack(items), pad_to=batch)
+            else:
+                idx_f.delete_batch(gids0[np.asarray(items, np.int64)],
+                                   pad_to=batch)
+            items.clear()
+
         t0 = time.monotonic()
-        for b in range(n_fixed_batches):
-            idx.search(fixed_pool[b * batch:(b + 1) * batch], k=cfg.k,
-                       n_expand=n_expand, record_heat=False)
-        idx.sync()
+        for op, payload in stream:
+            bufs[op].append(payload)
+            if len(bufs[op]) == batch:
+                _flush(op)
+        for op in ("q", "i", "d"):
+            _flush(op)
+        idx_f.sync()
         dt_fixed = min(dt_fixed, time.monotonic() - t0)
-    fixed_qps = n_fixed_batches * batch / dt_fixed
+    fixed_qps = n_stream_q / dt_fixed
 
     m = eng.metrics.snapshot()
     serve_qps = n_stream_q / wall

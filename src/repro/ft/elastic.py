@@ -243,6 +243,13 @@ def run_with_recovery(
             redo = [(idx, op) for idx, op in batch if idx not in done]
             retried += len(redo)
             remaining = redo + remaining
+            # simulated process death: drop the dead engine's WAL fd
+            # without flushing — a real kill never flushes, and a late
+            # buffered flush would write a stale partial record into
+            # the segment the restarted engine appends to
+            wal = getattr(engine, "wal", None)
+            if wal is not None:
+                wal.abandon()
             engine = make_engine(injector)   # simulated process restart
     engine.drain()
     return {"engine": engine, "acked": acked, "restarts": restarts,

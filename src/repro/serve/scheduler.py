@@ -252,9 +252,21 @@ class ServeEngine:
         # ext->int binding the original acks promised
         ext_ids = np.arange(self._next_ext, self._next_ext + n,
                             dtype=np.int64)
-        lsn = self._log_batch(
-            lambda: self.wal.append_insert(ext_ids, xs))
-        res = self.backend.insert_batch(xs, pad_to=self.cfg.insert_batch)
+        pre_lsn = self.wal.last_lsn if self.wal is not None else NO_LSN
+        try:
+            self._log_batch(
+                lambda: self.wal.append_insert(ext_ids, xs))
+            res = self.backend.insert_batch(xs, pad_to=self.cfg.insert_batch)
+        except BaseException:
+            if self.wal is not None and self.wal.last_lsn > pre_lsn:
+                # the record is in the log but the batch failed: burn
+                # its ext ids so the next batch can't log them again —
+                # a replay of the orphaned record then lands on ids no
+                # acked batch owns (an at-least-once ghost the client
+                # retries), instead of rebinding ids a later acked
+                # batch was granted
+                self._next_ext += n
+            raise
         gids = np.asarray(res.ids, np.int64)
         self._next_ext += n
         self._ext2int[ext_ids] = gids
@@ -543,6 +555,11 @@ class ServeEngine:
             eng._next_ext = int(md["next_ext"])
             eng._seq = int(md["seq"])
             eng._covering_lsn = int(md.get("lsn", NO_LSN))
+            # without a WAL the checkpoint "lsn" is the engine's own
+            # step counter: resume it, or the first post-recovery
+            # checkpoint publishes step_1 below the restored step_N and
+            # latest_step keeps resolving the stale checkpoint forever
+            eng._ckpt_seq = eng._covering_lsn
             eng._has_ckpt = True
             eng.maintenance.write_batches_since_check = \
                 int(md.get("maint_since_check", 0))

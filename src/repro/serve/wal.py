@@ -192,8 +192,20 @@ class WriteAheadLog:
                 continue
             recs, clean = self._scan_segment(path, self.last_lsn + 1)
             if not recs and clean:
-                # empty clean segment (crash between create and append)
-                os.unlink(path)
+                if name == names[-1]:
+                    # empty clean TAIL segment: keep it as the active
+                    # segment.  Its filename is the only durable copy of
+                    # the LSN high-water mark once a checkpoint has
+                    # truncated every earlier segment — unlinking it
+                    # would reset LSN allocation to 1 on the restart
+                    # after next, making new records invisible to a
+                    # recovery that replays past the covering LSN
+                    self._segments.append(
+                        [path, self.last_lsn + 1, self.last_lsn])
+                else:
+                    # empty non-tail segment (can only arise from an
+                    # interrupted create): nothing durable to preserve
+                    os.unlink(path)
                 continue
             self._recovered.extend(recs)
             first = recs[0].lsn if recs else self.last_lsn + 1
@@ -282,7 +294,12 @@ class WriteAheadLog:
         unlinked.  Returns the number of segments removed."""
         if not self._segments or lsn < self._segments[0][2]:
             return 0
-        if self._segments[-1][2] <= lsn and self.n_unsynced == 0:
+        last = self._segments[-1]
+        if last[2] <= lsn and last[1] <= last[2] and self.n_unsynced == 0:
+            # rotate only a non-empty active segment: an empty one
+            # (first > last) is already the post-truncation state, and
+            # re-rotating would re-open the same filename as a
+            # duplicate segment entry
             self._rotate()
         removed = 0
         keep = []
@@ -303,3 +320,21 @@ class WriteAheadLog:
             self.sync()
             self._file.close()
             self._file = None
+
+    def abandon(self) -> None:
+        """Simulate process death: release the active segment's fd
+        WITHOUT flushing the userspace buffer.  A killed process never
+        flushes; if the abandoned BufferedWriter were left to flush on
+        close/GC it could interleave a stale (possibly duplicate-LSN,
+        possibly partial) record into the very segment a recovered
+        engine is now appending to, corrupting the chain so a later
+        scan truncates at the stale record.  Closing the raw FileIO
+        marks the buffered wrapper closed, so its pending bytes are
+        dropped and never reach a (potentially recycled) fd."""
+        f, self._file = self._file, None
+        if f is None:
+            return
+        try:
+            f.raw.close()
+        except (OSError, ValueError):
+            pass

@@ -281,6 +281,115 @@ def test_checkpoint_truncates_covered_wal(tmp_path):
     eng.close()
 
 
+def test_acked_writes_survive_double_restart_after_covering_ckpt(tmp_path):
+    """REVIEW.md high-severity regression: once a checkpoint covers LSN
+    N and truncation leaves only the empty tail segment, two successive
+    restarts must not reset LSN allocation — writes acked after the
+    second restart would then carry LSNs <= N and be invisible to
+    replay's records(after=N) cut."""
+    eng = _recover(tmp_path)
+    for x in _vecs(16, seed=20):
+        eng.submit_insert(x)
+    eng.drain()
+    assert eng.checkpoint() is not None or eng._has_ckpt
+    covering = eng._covering_lsn
+    eng.close()
+
+    eng2 = _recover(tmp_path)            # restart 1: nothing to replay
+    assert eng2.wal.last_lsn == covering
+    eng2.close()
+
+    eng3 = _recover(tmp_path)            # restart 2: mark must persist
+    assert eng3.wal.last_lsn == covering
+    tickets = [eng3.submit_insert(x) for x in _vecs(8, seed=21)]
+    eng3.drain()
+    exts = [t.result() for t in tickets]
+    eng3.close()
+
+    eng4 = _recover(tmp_path)
+    for e in exts:
+        assert eng4.resolve_ext(e) >= 0, \
+            f"acked insert ext={e} lost after double restart"
+    eng4.close()
+
+
+class _FlakyBackend:
+    """Delegating wrapper whose first `fail_n` insert dispatches raise
+    AFTER the engine has already logged the batch's WAL record."""
+
+    def __init__(self, inner, fail_n=1):
+        self._inner = inner
+        self._fail_n = fail_n
+
+    def insert_batch(self, *a, **kw):
+        if self._fail_n > 0:
+            self._fail_n -= 1
+            raise RuntimeError("injected dispatch failure")
+        return self._inner.insert_batch(*a, **kw)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_failed_insert_dispatch_burns_logged_ext_ids(tmp_path):
+    """A batch whose WAL record was appended but whose dispatch failed
+    must burn its ext ids: the next batch may not re-log them (replay
+    would otherwise apply both records and rebind the acked batch's
+    ids to different gids)."""
+    cfg = _serve_cfg(tmp_path,
+                     maintenance=MaintenancePolicy(checkpoint_every=None))
+    eng = ServeEngine(_FlakyBackend(LSMVecIndex(CFG, seed=1)), cfg)
+    bad = [eng.submit_insert(x) for x in _vecs(8, seed=30)]
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.drain()
+    assert all(t.done for t in bad)
+    for t in bad:
+        with pytest.raises(RuntimeError):
+            t.result()
+
+    good = [eng.submit_insert(x) for x in _vecs(8, seed=31)]
+    eng.drain()
+    exts = [t.result() for t in good]
+    assert min(exts) >= 8            # ids 0..7 burned with the orphan
+    eng.close()
+
+    # recovery replays both records; the orphan lands on its own ids
+    # and every acked id still resolves
+    eng2 = _recover(tmp_path,
+                    maintenance=MaintenancePolicy(checkpoint_every=None))
+    for e in exts:
+        assert eng2.resolve_ext(e) >= 0, \
+            f"acked insert ext={e} rebound by orphaned-record replay"
+    eng2.close()
+
+
+def test_no_wal_checkpoint_seq_resumes_after_recovery(tmp_path):
+    """REVIEW.md: without a WAL, `_ckpt_seq` must resume from the
+    restored checkpoint's step — a post-recovery checkpoint publishing
+    step_1 under an existing step_N is silently shadowed forever."""
+    cfg = ServeConfig(
+        query_batch=8, insert_batch=8, delete_batch=8,
+        adaptive_windows=False, query_window=0.0, insert_window=0.0,
+        delete_window=0.0, wal=None, ckpt_dir=str(tmp_path / "ckpt"),
+        maintenance=MaintenancePolicy(checkpoint_every=None))
+    eng = ServeEngine(LSMVecIndex(CFG, seed=1), cfg)
+    for x in _vecs(8, seed=40):
+        eng.submit_insert(x)
+    eng.drain()
+    eng.checkpoint()
+    eng.checkpoint()
+    assert latest_step(cfg.ckpt_dir) == 2
+
+    eng2 = ServeEngine.recover(
+        cfg, fresh_backend=lambda: LSMVecIndex(CFG, seed=1),
+        restore_backend=lambda d: LSMVecIndex.restore(CFG, d))
+    for x in _vecs(8, seed=41):
+        eng2.submit_insert(x)
+    eng2.drain()
+    eng2.checkpoint()
+    assert latest_step(cfg.ckpt_dir) == 3   # was step_1, shadowed by 2
+
+
 @pytest.mark.parametrize("point,hit", [
     ("pre_commit", 3),
     ("post_commit_pre_apply", 3),

@@ -165,6 +165,82 @@ def test_truncate_through_drops_covered_segments(tmp_path):
     w2.close()
 
 
+def test_lsn_high_water_mark_survives_repeated_reopen(tmp_path):
+    """After a covering checkpoint truncates every record-bearing
+    segment, the rotated-out empty tail segment's filename is the only
+    durable copy of the LSN high-water mark.  A scan must keep it:
+    unlinking it meant the restart-after-next reseeded LSNs from 1,
+    and recovery's records(after=covering) filtered out every new
+    acked write (the REVIEW.md high-severity loss)."""
+    w = _wal(tmp_path)
+    for i in range(5):
+        w.append_delete(np.array([i], np.int64))
+    w.sync()
+    assert w.truncate_through(5) > 0       # rotates to an empty tail
+    w.close()
+
+    w2 = _wal(tmp_path)                    # restart 1: dir has only the
+    assert w2.last_lsn == 5                # empty tail
+    assert w2.records() == []
+    w2.close()
+
+    w3 = _wal(tmp_path)                    # restart 2: mark must survive
+    assert w3.last_lsn == 5
+    assert w3.append_delete(np.array([9], np.int64)) == 6
+    w3.sync()
+    w3.close()
+
+    w4 = _wal(tmp_path)
+    assert [r.lsn for r in w4.records(after=5)] == [6]
+    w4.close()
+
+
+def test_truncate_through_empty_active_segment_is_stable(tmp_path):
+    # repeated truncation at the same covered LSN must not rotate the
+    # (already empty) active segment into duplicate entries
+    w = _wal(tmp_path)
+    for i in range(4):
+        w.append_delete(np.array([i], np.int64))
+    w.sync()
+    w.truncate_through(4)
+    n_segs = len(_segments(w))
+    w.truncate_through(4)
+    assert len(_segments(w)) == n_segs
+    assert len(w._segments) == 1
+    assert w.append_delete(np.array([8], np.int64)) == 5
+    w.sync()
+    w.close()
+    w2 = _wal(tmp_path)
+    assert [r.lsn for r in w2.records()] == [5]
+    w2.close()
+
+
+def test_abandon_drops_buffered_records_without_flush(tmp_path):
+    """Simulated process death: abandon() must release the fd without
+    flushing, so a dead engine's buffered (unsynced, possibly
+    duplicate-LSN) bytes can never land in the segment a recovered
+    log is appending to."""
+    import gc
+
+    w = _wal(tmp_path)
+    w.append_delete(np.array([0], np.int64))
+    w.sync()
+    w.append_delete(np.array([1], np.int64))   # buffered only
+    w.abandon()
+
+    w2 = _wal(tmp_path)                        # recovered log, same dir
+    assert [r.lsn for r in w2.records()] == [1]
+    assert w2.append_delete(np.array([2], np.int64)) == 2
+    w2.sync()
+    del w                                      # GC of the dead writer
+    gc.collect()                               # must not flush LSN-2 dup
+    w2.close()
+
+    w3 = _wal(tmp_path)
+    assert [r.lsn for r in w3.records()] == [1, 2]
+    w3.close()
+
+
 def test_truncate_through_below_first_segment_is_noop(tmp_path):
     w = _wal(tmp_path)
     for i in range(3):
