@@ -54,7 +54,10 @@ def main() -> None:
     # n_base/n_batches for the paper-scale sweep on real hardware
     wl = dict(n_base=2048, n_batches=5)
     _, ok5 = fig5_workloads.main(**wl)
-    _, ok6 = fig6_memory.main(**wl)
+    # fig6 is now the tier sweep (BENCH_memory.json); smoke instance here,
+    # `python benchmarks/fig6_memory.py` for the committed full run
+    doc6 = fig6_memory.run(**fig6_memory.smoke_args(0))
+    ok6 = all(doc6["criteria"].values())
     _, ok7 = fig7_tradeoff.main()
     _, ok8 = fig8_sampling.main()
 

@@ -76,14 +76,16 @@ from repro.ft import (FailureInjector, RestartPolicy,          # noqa: E402
                       run_with_recovery, verify_acked_writes)
 from repro.serve import (MaintenancePolicy, Op, ServeConfig,   # noqa: E402
                          ServeEngine, WalConfig)
+from repro.tier import TierPolicy                              # noqa: E402
 
 SCHEMA = {
-    "meta": ("mode", "backend", "shards", "n_base", "n_ops", "mix", "dim",
-             "batch", "n_expand", "serve_query_batch", "serve_n_expand",
-             "config"),
+    "meta": ("mode", "backend", "shards", "tier", "n_base", "n_ops", "mix",
+             "dim", "batch", "n_expand", "serve_query_batch",
+             "serve_n_expand", "config"),
     "serve": ("qps", "insert_ops_s", "delete_ops_s", "query_p50_ms",
               "query_p99_ms", "mean_query_batch", "snapshot_resolves",
-              "compactions", "wall_s"),
+              "compactions", "tier_passes", "tier_demoted", "tier_promoted",
+              "wall_s"),
     "baseline": ("fixed_batch_qps", "qps_ratio"),
     "recall": ("serve", "sequential", "delta"),
     "retraces": ("after_warmup", "after_load", "new_during_load"),
@@ -215,7 +217,7 @@ def durability_probe(*, n: int, batch: int, dim: int, seed: int,
 
 def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         n_expand: int, mode: str, shards: int = 1, wal: bool = False,
-        ckpt_every: int | None = None,
+        ckpt_every: int | None = None, tier: bool = False,
         work_dir: str | None = None) -> dict:
     rng = np.random.default_rng(seed)
     n_fresh = max(n_ops // 8, 8)
@@ -224,6 +226,12 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
     # per-shard id space: the shard's slice of the corpus plus slack for
     # routed inserts and hash imbalance
     cfg_shard = _cfg(dim, -(-(n_base + n_fresh) // shards) + 4 * batch + 64)
+    if tier:
+        # --tier: two-lane store under live churn (DESIGN.md §12); the
+        # sequential recall baseline below shares the config but never
+        # runs maintenance, so it stays all-hot (≡ dense)
+        cfg = cfg._replace(tier=True, level_scale=0.25)
+        cfg_shard = cfg_shard._replace(tier=True, level_scale=0.25)
     base = make_clustered_vectors(n_base, dim=dim, seed=seed)
     fresh = make_clustered_vectors(n_fresh, dim=dim, seed=seed + 1)
     stream = make_stream(rng, n_ops, n_base, fresh, base)
@@ -243,8 +251,13 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         query_batch=2 * batch, insert_batch=batch, delete_batch=batch,
         query_window=0.0, insert_window=0.0, delete_window=0.0,
         strict_order=False, n_expand=2 * n_expand,
-        maintenance=MaintenancePolicy(tombstone_ratio=0.25, heat_budget=None,
-                                      check_every=8))
+        maintenance=MaintenancePolicy(
+            tombstone_ratio=0.25, heat_budget=None,
+            # tier mode checks more often so demotion actually engages
+            # within the smoke's short write stream
+            check_every=2 if tier else 8,
+            tier_policy=TierPolicy(hot_frac=0.25, max_demote=cap,
+                                   max_promote=64) if tier else None))
     if work_dir is None:
         work_dir = tempfile.mkdtemp(prefix="serve_durability_")
     if shards > 1:
@@ -411,7 +424,7 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
     doc = {
         "meta": {
             "mode": mode, "backend": jax.default_backend(),
-            "shards": shards,
+            "shards": shards, "tier": bool(tier),
             "n_base": n_base, "n_ops": n_ops, "mix": mix, "dim": dim,
             "batch": batch, "n_expand": n_expand,
             # the serving layer's own knobs (the reference path runs the
@@ -432,6 +445,9 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
             "mean_query_batch": m["query"]["mean_batch"],
             "snapshot_resolves": m["snapshot_resolves"],
             "compactions": eng.maintenance.compactions,
+            "tier_passes": eng.maintenance.tier_passes,
+            "tier_demoted": eng.maintenance.tier_demoted,
+            "tier_promoted": eng.maintenance.tier_promoted,
             "wall_s": round(wall, 3),
         },
         "baseline": {
@@ -469,9 +485,12 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
             # sharding the execution differs structurally (cross-shard
             # merge over hash partitions), so the gate is the 0.95x
             # floor of the single-device sequential baseline instead of
-            # the ±0.01 band (DESIGN.md §10)
+            # the ±0.01 band (DESIGN.md §10); same under --tier, where
+            # cold candidates route through the quantized lane + exact
+            # rerank while the sequential baseline stays all-hot
             "recall_within_0p01": bool(
-                recall_serve >= recall_seq - 0.01 if shards == 1
+                recall_serve >= recall_seq - 0.01
+                if shards == 1 and not tier
                 else recall_serve >= 0.95 * recall_seq),
             "wal_overhead_within_15pct": bool(
                 probe["overhead_p50_pct"] <= 15.0),
@@ -622,6 +641,10 @@ def main(argv=None) -> int:
     ap.add_argument("--wal", action="store_true",
                     help="run the main serve drain with the group-"
                          "committed WAL on (acks imply durability)")
+    ap.add_argument("--tier", action="store_true",
+                    help="serve a two-lane tiered store: background "
+                         "maintenance demotes cold nodes to the int8 "
+                         "lane while the drain runs (DESIGN.md §12)")
     ap.add_argument("--ckpt-every", type=int, default=None,
                     help="with --wal: write a covering checkpoint every "
                          "N write batches during the main drain")
@@ -661,12 +684,13 @@ def main(argv=None) -> int:
         # per-shard graph navigability) matches the single-device smoke
         doc = run(n_base=256 * args.shards, n_ops=96, batch=16, dim=16,
                   seed=args.seed, n_expand=4, mode="smoke",
-                  shards=args.shards, wal=args.wal,
+                  shards=args.shards, wal=args.wal, tier=args.tier,
                   ckpt_every=args.ckpt_every, work_dir=work_dir)
     else:
         doc = run(n_base=4096, n_ops=4096, batch=64, dim=64, seed=args.seed,
                   n_expand=4, mode="full", shards=args.shards, wal=args.wal,
-                  ckpt_every=args.ckpt_every, work_dir=work_dir)
+                  tier=args.tier, ckpt_every=args.ckpt_every,
+                  work_dir=work_dir)
 
     validate_schema(doc)
     print(json.dumps(doc, indent=1))

@@ -85,12 +85,62 @@ class UpdateResult:
 
 
 @dataclass(frozen=True)
+class MemoryBreakdown:
+    """Per-component resident-byte accounting (DESIGN.md §12).
+
+    Every field is bytes except the trailing lane counts.  `hot_vectors`
+    is the dense f32 lane (with tiering off, every routable node is in
+    it — the dense baseline fig6 compares against); `cold_codes` is the
+    int8 + per-row-scale lane.  The serving-state components the old
+    accounting omitted — tombstone lane, insert-overlay staging buffers,
+    and the ext↔int id maps a serving layer must hold 1:1 with backend
+    capacity — are included so fig6 numbers are honest about the full
+    stack, not just the index arrays.  Adding two breakdowns adds
+    componentwise (shard aggregation).
+    """
+
+    hot_vectors: int = 0     # dense-lane f32 rows
+    cold_codes: int = 0      # int8 rows + f32 per-row scales
+    upper_graph: int = 0     # upper-layer adjacency arrays
+    upper_vec_cache: int = 0  # upper-node f32 rows cached for descent
+    simhash_codes: int = 0   # per-node simhash codes (both lanes)
+    memtable: int = 0        # LSM memtable (keys + rows + valid lane)
+    tombstones: int = 0      # lazy-delete bitmap (capacity-sized)
+    insert_overlay: int = 0  # insert_batch staging overlay (rows + valid)
+    id_maps: int = 0         # serving ext↔int int64 maps (2 x cap)
+    misc: int = 0            # entry/counters/rng etc.
+    n_hot: int = 0           # dense-lane row count (not bytes)
+    n_cold: int = 0          # cold-lane row count (not bytes)
+
+    _BYTE_FIELDS = ("hot_vectors", "cold_codes", "upper_graph",
+                    "upper_vec_cache", "simhash_codes", "memtable",
+                    "tombstones", "insert_overlay", "id_maps", "misc")
+
+    @property
+    def total(self) -> int:
+        return sum(getattr(self, f) for f in self._BYTE_FIELDS)
+
+    def __add__(self, other: "MemoryBreakdown") -> "MemoryBreakdown":
+        kw = {f: getattr(self, f) + getattr(other, f)
+              for f in self._BYTE_FIELDS + ("n_hot", "n_cold")}
+        return MemoryBreakdown(**kw)
+
+    def as_dict(self) -> dict:
+        d = {f: int(getattr(self, f)) for f in
+             self._BYTE_FIELDS + ("n_hot", "n_cold")}
+        d["total"] = int(self.total)
+        return d
+
+
+@dataclass(frozen=True)
 class ShardStats:
     """Per-shard slice of `BackendStats`."""
 
     size: int            # live (returnable) nodes
     n_tombstones: int    # lazily deleted, not yet consolidated
     delete_noops: int    # device-counted deletes of absent/dead ids
+    n_hot: int = 0       # dense-lane rows (== size+tombstones, tier off)
+    n_cold: int = 0      # quantized-lane rows
 
     @property
     def tombstone_ratio(self) -> float:
@@ -112,6 +162,9 @@ class BackendStats:
     delete_noops: int
     max_tombstone_ratio: float
     shards: tuple = ()     # tuple[ShardStats, ...], one entry per shard
+    # per-component resident bytes, aggregated across shards (None only
+    # for legacy constructors that predate the tier accounting)
+    memory: Optional[MemoryBreakdown] = None
 
 
 @runtime_checkable
@@ -157,6 +210,12 @@ class VectorBackend(Protocol):
     def reorder(self, *, window: int = 8, lam: float = 1.0) -> np.ndarray: ...
 
     def stats(self) -> BackendStats: ...
+
+    def memory_bytes(self) -> int: ...        # MemoryBreakdown total
+
+    # one batched demote/promote pass per shard (DESIGN.md §12); returns
+    # {"demoted": n, "promoted": n} summed over shards
+    def tier_maintain(self, policy) -> dict: ...
 
     def heat_total(self) -> int: ...
 

@@ -305,13 +305,28 @@ class ShardedBackend:
         return perm
 
     def stats(self) -> BackendStats:
-        per = tuple(sh.stats().shards[0] for sh in self.shards)
+        full = [sh.stats() for sh in self.shards]
+        per = tuple(f.shards[0] for f in full)
+        mem = full[0].memory
+        for f in full[1:]:
+            mem = mem + f.memory
         return BackendStats(
             size=sum(p.size for p in per),
             n_tombstones=sum(p.n_tombstones for p in per),
             delete_noops=sum(p.delete_noops for p in per),
             max_tombstone_ratio=max(p.tombstone_ratio for p in per),
-            shards=per)
+            shards=per, memory=mem)
+
+    def tier_maintain(self, policy) -> dict:
+        """Run the tier policy on every shard (each shard holds its own
+        hot budget — heat is shard-local, like the consolidate trigger).
+        Returns total moves across shards."""
+        moved = {"demoted": 0, "promoted": 0}
+        for sh in self.shards:
+            got = sh.tier_maintain(policy)
+            for k in moved:
+                moved[k] += got[k]
+        return moved
 
     def heat_total(self) -> int:
         return sum(sh.heat_total() for sh in self.shards)
@@ -465,6 +480,12 @@ class ShardedBackend:
         from repro.core import iostats
         model = model or iostats.DISK
         return sum(sh.io_cost(model) for sh in self.shards)
+
+    def memory_breakdown(self):
+        mem = self.shards[0].memory_breakdown()
+        for sh in self.shards[1:]:
+            mem = mem + sh.memory_breakdown()
+        return mem
 
     def memory_bytes(self) -> int:
         return sum(sh.memory_bytes() for sh in self.shards)

@@ -22,9 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lsm, simhash
+from repro.core.backend import MemoryBreakdown
 from repro.core.iostats import IOStats
 from repro.core.traversal import BeamResult, beam_search, greedy_descent
-from repro.kernels.gather_l2.ops import gather_l2
+from repro.kernels.gather_l2.ops import gather_l2, gather_l2_q8
 from repro.kernels.l2_distance.ops import l2_distance
 
 INF = jnp.inf
@@ -53,6 +54,21 @@ class HNSWConfig(NamedTuple):
     #: tombstones out of the graph later.  False = the eager Algorithm-2
     #: relink-on-delete path (the paper baseline).
     lazy_delete: bool = True
+    #: two-lane tiered store (DESIGN.md §12): cold nodes answer beam
+    #: expansions from the int8 quantized lane and the final candidate
+    #: window is reranked against full-precision rows from the cold store.
+    tier: bool = False
+    #: width of the exact-rerank window over the beam result (clamped to
+    #: ef_search).  Recall loss from cold-lane quantization is bounded by
+    #: this window: any true neighbor the approximate beam ranks within
+    #: the top `rerank` gets its exact distance back before the final cut.
+    rerank: int = 32
+    #: scale on the Exp(1) level draw: P(level >= 1) = exp(-1/level_scale).
+    #: 1.0 keeps the historical draw (~37% of nodes upper); the paper's
+    #: "<1% of nodes in upper layers" regime is level_scale ~= 0.25
+    #: (e^-4 ~= 1.8%), which the memory benchmarks use so the resident
+    #: upper-layer vector cache doesn't dwarf the lane accounting.
+    level_scale: float = 1.0
 
     @property
     def lsm_cfg(self) -> lsm.LSMConfig:
@@ -97,6 +113,14 @@ class HNSWState(NamedTuple):
     tombstone: jax.Array    # bool[cap]
     n_tombstones: jax.Array  # int32[] — live tombstone count
     n_delete_noops: jax.Array  # int32[] — deletes of absent/dead ids
+    # tiered hot/cold lanes (DESIGN.md §12): `hot` marks nodes whose dense
+    # f32 row is RAM-resident; cold nodes are served from (qvecs, qscale)
+    # — per-row absmax int8 — and only touch the full-precision row at
+    # rerank.  `tier_heat` is the demotion policy's EWMA of per-node heat.
+    hot: jax.Array          # bool[cap] — True = dense lane resident
+    qvecs: jax.Array        # int8[cap, dim] — cold-lane codes
+    qscale: jax.Array       # f32[cap] — cold-lane per-row scales
+    tier_heat: jax.Array    # f32[cap] — heat EWMA (policy state)
 
 
 def init(cfg: HNSWConfig, key: jax.Array) -> HNSWState:
@@ -117,6 +141,10 @@ def init(cfg: HNSWConfig, key: jax.Array) -> HNSWState:
         tombstone=jnp.zeros((cfg.cap,), jnp.bool_),
         n_tombstones=jnp.zeros((), jnp.int32),
         n_delete_noops=jnp.zeros((), jnp.int32),
+        hot=jnp.ones((cfg.cap,), jnp.bool_),
+        qvecs=jnp.zeros((cfg.cap, cfg.dim), jnp.int8),
+        qscale=jnp.zeros((cfg.cap,), jnp.float32),
+        tier_heat=jnp.zeros((cfg.cap,), jnp.float32),
     )
 
 
@@ -133,6 +161,59 @@ def _dist_fn(state: HNSWState, q: jax.Array):
     def fn(ids):
         return gather_l2(q[None, :], state.vectors, ids[None, :])[0]
     return fn
+
+
+def _exact_resident(state: HNSWState) -> jax.Array:
+    """bool[cap]: nodes whose f32 row is RAM-resident (DESIGN.md §12).
+
+    Hot-lane nodes by definition; upper-layer nodes too, because their
+    rows are already in the resident upper routing cache regardless of
+    lane — demoting one only drops its bottom-lane dense copy.
+    """
+    return state.hot | (state.levels > 0)
+
+
+def _tier_dist_fn(state: HNSWState, q: jax.Array):
+    """Mixed-lane distance: exact for resident rows, dequant+L2 for cold.
+
+    Each id hits exactly one lane (the other contributes +inf), so the
+    lanes merge with an elementwise min.  Cold distances are approximate;
+    `_tier_rerank` restores exactness for the final candidate window.
+    """
+    resident = _exact_resident(state)
+
+    def fn(ids):
+        res = resident[jnp.maximum(ids, 0)]
+        hot_ids = jnp.where((ids >= 0) & res, ids, -1)
+        cold_ids = jnp.where((ids >= 0) & ~res, ids, -1)
+        d_hot = gather_l2(q[None, :], state.vectors, hot_ids[None, :])[0]
+        d_cold = gather_l2_q8(q[None, :], state.qvecs, state.qscale,
+                              cold_ids[None, :])[0]
+        return jnp.minimum(d_hot, d_cold)
+    return fn
+
+
+def _tier_rerank(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
+                 res: BeamResult) -> BeamResult:
+    """Exact rerank of the top-`cfg.rerank` beam window (the tier
+    contract): cold candidates get their full-precision row fetched from
+    the cold store (one modeled disk read each, counted in n_vec), the
+    window re-sorts on exact distances, and everything past the window
+    keeps its approximate ordering — recall loss is bounded by the
+    window, not the quantizer.
+    """
+    r = max(1, min(cfg.rerank, int(res.ids.shape[0])))
+    ids_r = res.ids[:r]
+    cold = (ids_r >= 0) & ~_exact_resident(state)[jnp.maximum(ids_r, 0)]
+    fetch = jnp.where(cold, ids_r, -1)
+    d_exact = gather_l2(q[None, :], state.vectors, fetch[None, :])[0]
+    d_new = jnp.where(cold, d_exact, res.dists[:r])
+    neg, order = jax.lax.top_k(-d_new, r)
+    stats = res.stats._replace(
+        n_vec=res.stats.n_vec + jnp.sum(cold).astype(jnp.int32))
+    return res._replace(ids=res.ids.at[:r].set(ids_r[order]),
+                        dists=res.dists.at[:r].set(-neg),
+                        stats=stats)
 
 
 def _bottom_adj_fn(cfg: HNSWConfig, state: HNSWState):
@@ -322,14 +403,18 @@ def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
     code_q = simhash.encode(simhash.SimHashParams(state.proj), q[None, :])[0]
     adj_fn = _bottom_adj_fn(cfg, state) if snapshot is None \
         else _snapshot_adj_fn(snapshot)
-    return beam_search(
+    dist_fn = _tier_dist_fn(state, q) if cfg.tier else _dist_fn(state, q)
+    res = beam_search(
         q, ep, d_ep,
-        adj_fn, _dist_fn(state, q),
+        adj_fn, dist_fn,
         state.codes, code_q, routable,
         cap=cfg.cap, ef=ef, k=cfg.k, m_bits=cfg.m_bits, eps=cfg.eps,
         rho=rho, max_iters=2 * ef, use_filter=use_filter,
         q_norm=jnp.sqrt(jnp.sum(q * q)), mean_norm=state.mean_norm,
         n_expand=n_expand, active=active, returnable=returnable)
+    if cfg.tier:
+        res = _tier_rerank(cfg, state, q, res)
+    return res
 
 
 def search_batch(cfg: HNSWConfig, state: HNSWState, qs: jax.Array,
@@ -380,10 +465,12 @@ def insert(cfg: HNSWConfig, state: HNSWState, x: jax.Array,
            key: jax.Array) -> Tuple[HNSWState, IOStats]:
     """Insert one vector (Algorithm 1).  Returns (state, construction IO)."""
     i = state.count
-    # paper: Pr(L) ∝ e^{-L}  -> L = floor(Exp(1)), capped at num_upper
+    # paper: Pr(L) ∝ e^{-L/s}  -> L = floor(s * Exp(1)), capped at num_upper
+    # (s = cfg.level_scale; 1.0 is the classic draw)
     u01 = jax.random.uniform(key, (), jnp.float32, 1e-7, 1.0)
-    lvl = jnp.minimum(jnp.floor(-jnp.log(u01)).astype(jnp.int32),
-                      cfg.num_upper)
+    lvl = jnp.minimum(
+        jnp.floor(-cfg.level_scale * jnp.log(u01)).astype(jnp.int32),
+        cfg.num_upper)
 
     xnorm = jnp.sqrt(jnp.sum(x * x))
     code = simhash.encode(simhash.SimHashParams(state.proj), x[None, :])[0]
@@ -551,8 +638,9 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
     xnorms = jnp.sqrt(jnp.sum(xs * xs, axis=1))
     u01 = jax.vmap(
         lambda kk: jax.random.uniform(kk, (), jnp.float32, 1e-7, 1.0))(keys)
-    lvls = jnp.minimum(jnp.floor(-jnp.log(u01)).astype(jnp.int32),
-                       cfg.num_upper)
+    lvls = jnp.minimum(
+        jnp.floor(-cfg.level_scale * jnp.log(u01)).astype(jnp.int32),
+        cfg.num_upper)
 
     # Intra-batch neighbor candidates: the snapshot cannot see batch
     # siblings, and an out-of-distribution batch (say, a brand-new
@@ -1116,7 +1204,12 @@ def consolidate(cfg: HNSWConfig, state: HNSWState, *,
         # repaired rows changed slot alignment; their heat restarts
         heat=jnp.where((tomb | changed)[:, None], 0, state.heat),
         tombstone=jnp.zeros_like(tomb),
-        n_tombstones=jnp.zeros((), jnp.int32))
+        n_tombstones=jnp.zeros((), jnp.int32),
+        # reclaimed slots leave the tier: back to the (empty) hot lane so
+        # per-lane byte accounting never counts dead ids as cold rows
+        hot=jnp.where(tomb, True, state.hot),
+        qscale=jnp.where(tomb, 0.0, state.qscale),
+        tier_heat=jnp.where(tomb, 0.0, state.tier_heat))
     stats = IOStats(
         n_adj=((1 + cfg.M) * n_reclaimed
                + jnp.sum(changed).astype(jnp.int32)),
@@ -1189,7 +1282,13 @@ def _incremental_graph(vecs_np, member_ids, deg: int, seed: int,
         chunk = order[s:e]
         pv = jnp.asarray(vecs_np[np.asarray(placed)])
         d_blk = np.asarray(l2_distance(jnp.asarray(vecs_np[chunk]), pv))
-        kk = min(2 * deg, len(placed))     # candidate pool for diversity
+        # candidate pool for diversity.  Very small builds (tiny shards,
+        # sparse upper layers) see the *complete* placed set: with only a
+        # few dozen nodes the 2*deg nearest candidates all sit inside one
+        # tight cluster and diversity selection can strand other clusters
+        # entirely (the small-shard navigability loss).
+        kk = len(placed) if ids.size <= max(128, 4 * deg) \
+            else min(2 * deg, len(placed))
         top = np.argpartition(d_blk, kk - 1, axis=1)[:, :kk] \
             if kk < len(placed) else \
             np.broadcast_to(np.arange(len(placed)), (len(chunk),
@@ -1216,6 +1315,79 @@ def _incremental_graph(vecs_np, member_ids, deg: int, seed: int,
     return rows
 
 
+def _repair_reachability(rows, vecs_np, member_ids, entry: int, deg: int):
+    """Guarantee every member is reachable from `entry` over `rows`.
+
+    Diversity selection on clustered data can leave whole clusters as
+    graph islands (no inbound path from the entry chain), which beam
+    search then never finds no matter the ef.  Repair: BFS from the
+    entry; while any member is unreachable, bridge the globally closest
+    (reachable, unreachable) pair with a bidirectional edge — each
+    bridge absorbs that island's entire component.  Bridge edges are
+    *protected*: a full row evicts its unprotected slot most redundant
+    w.r.t. the new neighbor (the `_backlink_rows` rule), never an
+    earlier bridge — two islands sharing one anchor would otherwise
+    evict each other's bridge forever.  Anchors with no evictable slot
+    are skipped, and the loop is bounded by the member count, so repair
+    always terminates.
+    """
+    import numpy as np
+    members = np.asarray(member_ids)
+    if members.size <= 1:
+        return rows
+    in_layer = np.zeros(rows.shape[0], bool)
+    in_layer[members] = True
+    protected = np.zeros(rows.shape, bool)
+
+    def bfs():
+        seen = np.zeros(rows.shape[0], bool)
+        seen[entry] = True
+        frontier = np.asarray([entry])
+        while frontier.size:
+            nxt = rows[frontier].ravel()
+            nxt = np.unique(nxt[nxt >= 0])
+            nxt = nxt[in_layer[nxt] & ~seen[nxt]]
+            seen[nxt] = True
+            frontier = nxt
+        return seen
+
+    def add_edge(src: int, dst: int):
+        if dst in rows[src]:
+            j = int(np.flatnonzero(rows[src] == dst)[0])
+            protected[src, j] = True
+            return
+        free = np.flatnonzero(rows[src] < 0)
+        if free.size:
+            j = int(free[0])
+        else:
+            cand = np.flatnonzero(~protected[src])
+            if cand.size == 0:
+                return      # row is all bridges; caller skips such anchors
+            nbr = vecs_np[rows[src, cand]]
+            j = int(cand[np.argmin(((nbr - vecs_np[dst]) ** 2).sum(1))])
+        rows[src, j] = dst
+        protected[src, j] = True
+
+    for _ in range(members.size):
+        seen = bfs()
+        un = members[~seen[members]]
+        if un.size == 0:
+            break
+        reach = members[seen[members]]
+        d = ((vecs_np[un][:, None, :]
+              - vecs_np[reach][None, :, :]) ** 2).sum(-1)
+        # only anchors that can still take a bridge edge
+        evictable = ((rows[reach] < 0) | ~protected[reach]).any(axis=1)
+        if not evictable.any():
+            break
+        d[:, ~evictable] = np.inf
+        bi, bj = np.unravel_index(int(np.argmin(d)), d.shape)
+        u_node, r_node = int(un[bi]), int(reach[bj])
+        add_edge(r_node, u_node)
+        add_edge(u_node, r_node)
+    return rows
+
+
 def bulk_build(cfg: HNSWConfig, vectors: jax.Array, key: jax.Array,
                *, batch: int = 64) -> HNSWState:
     """Initial index build: batched incremental construction per layer.
@@ -1238,14 +1410,17 @@ def bulk_build(cfg: HNSWConfig, vectors: jax.Array, key: jax.Array,
     norms = jnp.linalg.norm(vecs, axis=1)
     codes = simhash.encode(simhash.SimHashParams(state.proj), vecs)
     lvls_np = np.minimum(
-        np.floor(-np.log(np.asarray(jax.random.uniform(
+        np.floor(-cfg.level_scale * np.log(np.asarray(jax.random.uniform(
             k_lvl, (n,), jnp.float32, 1e-7, 1.0)))).astype(np.int32),
         cfg.num_upper)
     lvls_np[0] = cfg.num_upper   # stable entry chain
     ids = jnp.arange(n, dtype=jnp.int32)
 
+    # entry = node 0 (forced to the top level above); every layer repairs
+    # reachability from it so no cluster is stranded as a graph island
     bottom = _incremental_graph(vecs_np, np.arange(n), cfg.M, seed=0,
                                 batch=batch)
+    bottom = _repair_reachability(bottom, vecs_np, np.arange(n), 0, cfg.M)
     store = lsm.bulk_load(cfg.lsm_cfg, ids, jnp.asarray(bottom))
 
     upper = jnp.full((cfg.num_upper, cfg.cap, cfg.M_up), -1, jnp.int32)
@@ -1253,6 +1428,7 @@ def bulk_build(cfg: HNSWConfig, vectors: jax.Array, key: jax.Array,
         members = np.flatnonzero(lvls_np > u)
         rows_u = _incremental_graph(vecs_np, members, cfg.M_up, seed=u + 1,
                                     batch=batch)
+        rows_u = _repair_reachability(rows_u, vecs_np, members, 0, cfg.M_up)
         upper = upper.at[u, :n].set(jnp.asarray(rows_u))
 
     lvls = jnp.asarray(lvls_np)
@@ -1275,16 +1451,54 @@ def bulk_build(cfg: HNSWConfig, vectors: jax.Array, key: jax.Array,
 # memory accounting (paper Fig. 6 — what must stay RAM-resident)
 # ---------------------------------------------------------------------------
 
-def memory_resident_bytes(cfg: HNSWConfig, state: HNSWState) -> jax.Array:
-    """Bytes of RAM the index needs: upper layers + codes + memtable.
-
-    Vectors and the bottom-layer graph live on "disk"; DiskANN-style systems
-    keep the full graph in memory during updates — that difference is the
-    paper's 66.2% memory claim (Fig. 6).
-    """
+def memory_counts(state: HNSWState) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-side (n_routable, n_hot, n_upper) for the byte model."""
+    routable = state.levels >= 0
+    n_routable = jnp.sum(routable)
+    n_hot = jnp.sum(routable & state.hot)
     n_upper = jnp.sum(state.levels > 0)
-    upper_bytes = n_upper * cfg.M_up * 4 * cfg.num_upper
-    code_bytes = jnp.sum(state.levels >= 0) * cfg.words * 4
-    memtable_bytes = cfg.lsm_cfg.mem_cap * (4 + 4 * cfg.M + 1)
-    vec_cache = n_upper * cfg.dim * 4     # upper-node vectors cached in RAM
-    return upper_bytes + code_bytes + memtable_bytes + vec_cache + 4096
+    return n_routable, n_hot, n_upper
+
+
+def memory_breakdown(cfg: HNSWConfig, state: HNSWState,
+                     counts=None) -> MemoryBreakdown:
+    """Per-component resident bytes (DESIGN.md §12).
+
+    The serving-vector lanes: with tiering off every routable node keeps
+    its dense f32 row resident (the dense baseline the paper's Fig. 6
+    argues against); with tiering on only hot-lane nodes do, and cold
+    nodes cost ``dim + 4`` bytes (int8 row + f32 scale).  The bottom
+    adjacency graph stays on "disk" (the LSM tree) in both modes —
+    DiskANN-style systems keeping the *graph* in RAM during updates is
+    the other half of the paper's 66.2% claim.
+
+    Components the pre-tier accounting omitted are now counted: the
+    tombstone bitmap, the insert-overlay staging buffers, and the
+    ext↔int id maps a serving layer holds 1:1 with backend capacity.
+    `counts` lets a caller pass pre-fetched host values of
+    `memory_counts` to avoid a device sync.
+    """
+    if counts is None:
+        counts = memory_counts(state)
+    n_routable, n_hot, n_upper = (int(c) for c in counts)
+    n_cold = n_routable - n_hot
+    if not cfg.tier:
+        n_hot, n_cold = n_routable, 0
+    return MemoryBreakdown(
+        hot_vectors=n_hot * cfg.dim * 4,
+        cold_codes=n_cold * (cfg.dim + 4),
+        upper_graph=n_upper * cfg.M_up * 4 * cfg.num_upper,
+        upper_vec_cache=n_upper * cfg.dim * 4,
+        simhash_codes=n_routable * cfg.words * 4,
+        memtable=cfg.lsm_cfg.mem_cap * (4 + 4 * cfg.M + 1),
+        tombstones=cfg.cap,
+        insert_overlay=(cfg.cap + 1) * (4 * cfg.M + 1),
+        id_maps=2 * cfg.cap * 8,
+        misc=4096,
+        n_hot=n_hot,
+        n_cold=n_cold)
+
+
+def memory_resident_bytes(cfg: HNSWConfig, state: HNSWState) -> int:
+    """Total resident bytes: `memory_breakdown(...).total` (host int)."""
+    return memory_breakdown(cfg, state).total

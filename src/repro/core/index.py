@@ -17,10 +17,11 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import hnsw, iostats, lsm, reorder
-from repro.core.backend import (BackendStats, SearchResult, ShardStats,
-                                UpdateResult)
+from repro.core.backend import (BackendStats, MemoryBreakdown, SearchResult,
+                                ShardStats, UpdateResult)
 from repro.core.iostats import CostModel, IOStats
 from repro.kernels.l2_distance.ops import l2_distance
+from repro.tier import policy as tier_policy
 
 
 def brute_force_knn(vectors: jax.Array, queries: jax.Array, k: int,
@@ -352,6 +353,18 @@ class LSMVecIndex:
         self._version += 1
         return n
 
+    def tier_maintain(self, policy: "tier_policy.TierPolicy") -> dict:
+        """One batched demote/promote pass of the tier policy
+        (DESIGN.md §12).  Returns {"demoted": n, "promoted": n}.  Jit
+        caches key on (cfg, policy), both static — a serving layer using
+        one policy compiles this exactly once.  No-op (zero moves) when
+        the hot fraction already sits inside the hysteresis band.
+        """
+        self.state, st, moved = tier_policy.tier_maintain(
+            self.cfg, self.state, policy)
+        self.io_stats = self.io_stats + st
+        return {k: int(v) for k, v in moved.items()}
+
     # -- read snapshot (DESIGN.md §8) -----------------------------------------
 
     def snapshot(self) -> jax.Array:
@@ -389,13 +402,16 @@ class LSMVecIndex:
         count (the old `LSMVecIndex.delete_noops` / engine-property pair
         could drift); serving metrics must read it from here.
         """
-        live, nt, noops = (int(v) for v in jax.device_get(
+        live, nt, noops, counts = jax.device_get(
             (self.state.n_live, self.state.n_tombstones,
-             self.state.n_delete_noops)))
-        shard = ShardStats(size=live, n_tombstones=nt, delete_noops=noops)
+             self.state.n_delete_noops, hnsw.memory_counts(self.state)))
+        live, nt, noops = int(live), int(nt), int(noops)
+        mem = hnsw.memory_breakdown(self.cfg, self.state, counts)
+        shard = ShardStats(size=live, n_tombstones=nt, delete_noops=noops,
+                           n_hot=mem.n_hot, n_cold=mem.n_cold)
         return BackendStats(size=live, n_tombstones=nt, delete_noops=noops,
                             max_tombstone_ratio=shard.tombstone_ratio,
-                            shards=(shard,))
+                            shards=(shard,), memory=mem)
 
     def heat_total(self) -> int:
         """Accumulated edge-heat counts (one scalar sync)."""
@@ -516,8 +532,12 @@ class LSMVecIndex:
     def io_cost(self, model: CostModel = iostats.DISK) -> float:
         return float(iostats.search_cost(self.io_stats, model))
 
+    def memory_breakdown(self) -> MemoryBreakdown:
+        """Per-component resident bytes (DESIGN.md §12)."""
+        return hnsw.memory_breakdown(self.cfg, self.state)
+
     def memory_bytes(self) -> int:
-        return int(hnsw.memory_resident_bytes(self.cfg, self.state))
+        return int(self.memory_breakdown().total)
 
     @property
     def size(self) -> int:

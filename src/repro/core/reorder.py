@@ -196,4 +196,10 @@ def apply_permutation(cfg: hnsw.HNSWConfig, state: hnsw.HNSWState,
                         perm_j[jnp.maximum(state.entry, 0)], state.entry),
         heat=state.heat[inv],
         tombstone=state.tombstone[inv],
+        # tier lanes ride the same physical relayout (tier_heat is
+        # per-node policy state; qvecs/qscale stay aligned with vectors)
+        hot=state.hot[inv],
+        qvecs=state.qvecs[inv],
+        qscale=state.qscale[inv],
+        tier_heat=state.tier_heat[inv],
     )

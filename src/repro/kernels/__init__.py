@@ -7,7 +7,8 @@ Each kernel ships three files:
 """
 
 from repro.kernels.l2_distance.ops import l2_distance
-from repro.kernels.gather_l2.ops import gather_l2
+from repro.kernels.gather_l2.ops import gather_l2, gather_l2_q8
 from repro.kernels.simhash.ops import collision_count, simhash_encode
 
-__all__ = ["l2_distance", "gather_l2", "simhash_encode", "collision_count"]
+__all__ = ["l2_distance", "gather_l2", "gather_l2_q8", "simhash_encode",
+           "collision_count"]

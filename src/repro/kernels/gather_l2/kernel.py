@@ -63,3 +63,48 @@ def gather_l2_pallas(queries: jax.Array, table: jax.Array, ids: jax.Array,
         interpret=interpret,
     )(flat_ids, queries, table)
     return jnp.where(ids >= 0, out, jnp.inf)
+
+
+def _gather_l2_q8_kernel(ids_ref, q_ref, row_ref, scale_ref, o_ref):
+    # Dequantize in-register: the int8 row and its f32 scale arrive in
+    # the same block pipeline, so reconstruction fuses with the distance
+    # pass — the cold lane never materializes an f32 row in HBM.
+    q = q_ref[...].astype(jnp.float32)                      # [1, d]
+    r = row_ref[...].astype(jnp.float32) * scale_ref[0, 0]  # [1, d]
+    diff = q - r
+    o_ref[...] = jnp.sum(diff * diff, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_l2_q8_pallas(queries: jax.Array, qtable: jax.Array,
+                        scales: jax.Array, ids: jax.Array,
+                        *, interpret: bool = False) -> jax.Array:
+    """Cold-lane gather: queries [B, d], qtable int8[N, d], scales f32[N],
+    ids int32[B, K] -> f32[B, K].  Same grid/prefetch structure as
+    `gather_l2_pallas`; the per-row scale rides along as a (1, 1) block
+    selected by the same prefetched id.
+    """
+    b, d = queries.shape
+    _, k = ids.shape
+    assert d % 128 == 0, "pad dim to a lane multiple"
+
+    flat_ids = jnp.maximum(ids, 0).reshape(-1)   # redirect sentinels to row 0
+    scales2d = scales.reshape(-1, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, ids_ref: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j, ids_ref: (ids_ref[i * k + j], 0)),
+            pl.BlockSpec((1, 1), lambda i, j, ids_ref: (ids_ref[i * k + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, ids_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        _gather_l2_q8_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(flat_ids, queries, qtable, scales2d)
+    return jnp.where(ids >= 0, out, jnp.inf)

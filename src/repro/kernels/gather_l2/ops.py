@@ -7,8 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gather_l2.kernel import gather_l2_pallas
-from repro.kernels.gather_l2.ref import gather_l2_ref
+from repro.kernels.gather_l2.kernel import gather_l2_pallas, gather_l2_q8_pallas
+from repro.kernels.gather_l2.ref import gather_l2_q8_ref, gather_l2_ref
 
 def _on_tpu() -> bool:
     # lazy: calling default_backend() at import time would lock
@@ -38,3 +38,30 @@ def gather_l2(queries: jax.Array, table: jax.Array, ids: jax.Array,
         queries = jnp.pad(queries, ((0, 0), (0, pad)))
         table = jnp.pad(table, ((0, 0), (0, pad)))
     return gather_l2_pallas(queries, table, ids, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gather_l2_q8(queries: jax.Array, qtable: jax.Array, scales: jax.Array,
+                 ids: jax.Array, *, use_pallas: bool | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """Cold-lane companion to `gather_l2`: fetch int8 rows, dequantize
+    with their per-row scale, and return squared L2 to `queries`.
+
+    queries [B, d], qtable int8[N, d], scales f32[N], ids int32[B, K]
+    -> f32[B, K]; ids < 0 yield +inf.  Approximate by construction —
+    final candidates must be reranked against full-precision rows
+    (the tier rerank contract, DESIGN.md §12).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if not use_pallas:
+        return gather_l2_q8_ref(queries, qtable, scales, ids)
+    d = queries.shape[-1]
+    pad = (-d) % 128
+    if pad:
+        queries = jnp.pad(queries, ((0, 0), (0, pad)))
+        qtable = jnp.pad(qtable, ((0, 0), (0, pad)))
+    return gather_l2_q8_pallas(queries, qtable, scales, ids,
+                               interpret=interpret)

@@ -17,3 +17,20 @@ def gather_l2_ref(queries: jnp.ndarray, table: jnp.ndarray,
     diff = rows - q[:, None, :]
     d2 = jnp.sum(diff * diff, axis=-1)
     return jnp.where(ids >= 0, d2, jnp.inf)
+
+
+def gather_l2_q8_ref(queries: jnp.ndarray, qtable: jnp.ndarray,
+                     scales: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Cold-lane variant: fused dequantize + squared L2.
+
+    queries [B, d], qtable int8[N, d], scales f32[N], ids int32[B, K]
+    -> dists f32[B, K].  Row i reconstructs as ``qtable[i] * scales[i]``
+    (per-row absmax scalar quantization, see `repro.tier.quant`).
+    Negative ids yield +inf, same contract as `gather_l2_ref`.
+    """
+    q = queries.astype(jnp.float32)                   # [B, d]
+    safe = jnp.maximum(ids, 0)
+    rows = qtable[safe].astype(jnp.float32) * scales[safe][..., None]
+    diff = rows - q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(ids >= 0, d2, jnp.inf)

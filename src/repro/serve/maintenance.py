@@ -34,6 +34,8 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.tier import TierPolicy
+
 
 @dataclass
 class MaintenancePolicy:
@@ -55,6 +57,12 @@ class MaintenancePolicy:
     #: gated on `check_every`: durability cadence must not stretch just
     #: because maintenance probes are sparse.
     checkpoint_every: Optional[int] = None
+    #: tiered hot/cold lane policy (DESIGN.md §12); None disables.  A
+    #: demote/promote pass runs on every due check (it is a cheap jitted
+    #: no-op when the hot fraction already sits inside the hysteresis
+    #: band), per shard — heat is shard-local, like the consolidate
+    #: trigger.  Requires the backend's HNSWConfig to have `tier=True`.
+    tier_policy: Optional[TierPolicy] = None
 
 
 class MaintenanceManager:
@@ -71,6 +79,9 @@ class MaintenanceManager:
         self.consolidations = 0
         self.slots_reclaimed = 0
         self.checkpoints = 0
+        self.tier_passes = 0
+        self.tier_demoted = 0
+        self.tier_promoted = 0
         #: the engine wires its `checkpoint()` here; the manager owns
         #: only the cadence (checkpoint_every write batches)
         self.checkpoint_fn: Optional[Callable[[], Optional[str]]] = None
@@ -168,4 +179,18 @@ class MaintenanceManager:
                 self.backend.reset_heat()
                 self.reorders += 1
                 actions.append("reorder")
+
+        if pol.tier_policy is not None:
+            # after any reorder above: tier_maintain folds the heat the
+            # reorder just consumed into its own EWMA, so running it
+            # last keeps the two heat consumers in the same order every
+            # check.  A pass that moves nothing still counts (the
+            # trigger fired); the action is only recorded on real moves
+            # so serve metrics show lane activity, not probe cadence.
+            moved = self.backend.tier_maintain(pol.tier_policy)
+            self.tier_passes += 1
+            self.tier_demoted += moved["demoted"]
+            self.tier_promoted += moved["promoted"]
+            if moved["demoted"] or moved["promoted"]:
+                actions.append("tier")
         return actions

@@ -31,7 +31,8 @@ class ServeMetrics:
         self.windows: Dict[Op, float] = {op: 0.0 for op in Op}
         self.snapshot_resolves = 0
         self.maintenance_runs: Dict[str, int] = {
-            "compact": 0, "reorder": 0, "consolidate": 0, "checkpoint": 0}
+            "compact": 0, "reorder": 0, "consolidate": 0, "checkpoint": 0,
+            "tier": 0}
         #: WAL accounting (zero when the engine runs without a WAL):
         #: records appended vs group commits actually fsync'd — the
         #: ratio is the group-commit amortization the config bought

@@ -233,7 +233,10 @@ class ServeEngine:
             self.metrics.snapshot_resolves += 1
         record_heat = self.cfg.record_heat
         if record_heat is None:
-            record_heat = self.cfg.maintenance.heat_budget is not None
+            # both heat consumers need the traversal signal: the reorder
+            # trigger and the tier demotion policy (DESIGN.md §12)
+            record_heat = (self.cfg.maintenance.heat_budget is not None
+                           or self.cfg.maintenance.tier_policy is not None)
         res = self.backend.search(
             qs, k=self.cfg.k, ef=self.cfg.ef, rho=self.cfg.rho,
             n_expand=self.cfg.n_expand, record_heat=record_heat,

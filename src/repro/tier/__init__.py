@@ -1,0 +1,15 @@
+"""Tiered hot/cold vector store (DESIGN.md §12).
+
+Hot nodes keep dense f32 rows resident; cold nodes are demoted to an
+int8 scalar-quantized lane (plus the existing simhash codes) logically
+backed by the deeper LSM levels, with full-precision rerank of the
+final candidates.  `TierPolicy` turns the per-node heat signal already
+maintained for reordering into batched demote/promote decisions run
+alongside `consolidate`/`reorder` in background maintenance.
+"""
+
+from repro.tier.policy import TierPolicy, tier_maintain
+from repro.tier.quant import dequantize_rows, quantize_rows
+
+__all__ = ["TierPolicy", "tier_maintain", "quantize_rows",
+           "dequantize_rows"]

@@ -1,0 +1,110 @@
+"""Heat-driven demote/promote policy for the two-lane store.
+
+`tier_maintain` is a single jitted transition (policy is a static,
+hashable dataclass): it folds the traversal heat counters into a
+per-node EWMA, ranks live nodes by that score, and moves at most
+`max_demote` / `max_promote` nodes across the lane boundary per call.
+Hysteresis keeps the boundary from thrashing: a hot node is demoted
+only when its rank falls *below* the budget by the hysteresis margin,
+and a cold node is promoted only when its rank climbs *above* the
+budget by the same margin, so nodes oscillating around rank `k_hot`
+stay where they are.
+
+Nodes on the upper HNSW layers are not special-cased here: their f32
+rows are part of the resident upper-layer routing cache regardless of
+lane (see `hnsw.memory_breakdown`), so demoting one only drops its
+*bottom-lane* dense copy — search keeps exact distances for it via
+`hot | (levels > 0)` masking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.iostats import IOStats
+from repro.tier.quant import quantize_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPolicy:
+    """Static (hashable) knobs for one `tier_maintain` transition.
+
+    hot_frac    — resident dense-lane budget as a fraction of live nodes.
+    ewma        — weight of the *new* heat observation in the EWMA.
+    hysteresis  — dead band around the budget rank, as a fraction of
+                  `k_hot`; larger = fewer lane flips under noisy heat.
+    max_demote  — per-call cap on hot->cold moves (batched quantize).
+    max_promote — per-call cap on cold->hot moves (each is one modeled
+                  full-row fetch from the cold store, counted in n_vec).
+    """
+
+    hot_frac: float = 0.25
+    ewma: float = 0.5
+    hysteresis: float = 0.1
+    max_demote: int = 256
+    max_promote: int = 64
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy"))
+def tier_maintain(cfg, state, policy: TierPolicy):
+    """One batched demote/promote pass.  Returns (state', io, moved).
+
+    `moved` is a dict of scalar i32 counters {"demoted", "promoted"}.
+    The traversal heat counters in `state.heat` are *read*, not reset —
+    `reorder` owns the heat lifecycle; this pass only folds them into
+    the longer-horizon `tier_heat` EWMA.
+    """
+    cap = cfg.cap
+    live = (state.levels >= 0) & ~state.tombstone
+
+    node_heat = jnp.sum(state.heat, axis=1).astype(jnp.float32)
+    a = jnp.float32(policy.ewma)
+    tier_heat = a * node_heat + (1.0 - a) * state.tier_heat
+
+    # Rank live nodes by heat (0 = hottest).  Dead slots sort to the
+    # end and can never cross the demote/promote thresholds.
+    score = jnp.where(live, tier_heat, -jnp.inf)
+    order = jnp.argsort(-score)
+    rank = jnp.zeros((cap,), jnp.float32).at[order].set(
+        jnp.arange(cap, dtype=jnp.float32))
+
+    n_live = jnp.maximum(state.n_live, 1).astype(jnp.float32)
+    k_hot = jnp.ceil(jnp.float32(policy.hot_frac) * n_live)
+    demote_edge = k_hot * (1.0 + policy.hysteresis)
+    promote_edge = jnp.maximum(k_hot * (1.0 - policy.hysteresis), 1.0)
+
+    demote_mask = state.hot & live & (rank >= demote_edge)
+    promote_mask = ~state.hot & live & (rank < promote_edge)
+
+    # Batched selection: coldest demote candidates / hottest promote
+    # candidates first, capped at the policy's static batch sizes.
+    n_dem = min(int(policy.max_demote), cap)
+    n_pro = min(int(policy.max_promote), cap)
+    d_pri = jnp.where(demote_mask, -tier_heat, -jnp.inf)
+    d_val, d_ids = jax.lax.top_k(d_pri, n_dem)
+    d_ids = jnp.where(jnp.isfinite(d_val), d_ids, cap)   # cap => dropped
+    p_pri = jnp.where(promote_mask, tier_heat, -jnp.inf)
+    p_val, p_ids = jax.lax.top_k(p_pri, n_pro)
+    p_ids = jnp.where(jnp.isfinite(p_val), p_ids, cap)
+
+    # Demote: quantize the dense rows into the cold lane, clear hot.
+    rows = state.vectors[jnp.minimum(d_ids, cap - 1)]
+    q, scales = quantize_rows(rows)
+    qvecs = state.qvecs.at[d_ids].set(q, mode="drop")
+    qscale = state.qscale.at[d_ids].set(scales, mode="drop")
+    hot = state.hot.at[d_ids].set(False, mode="drop")
+    # Promote: flip the lane bit; the dense row is re-fetched from the
+    # cold store (vectors array = modeled disk), one n_vec read each.
+    hot = hot.at[p_ids].set(True, mode="drop")
+
+    n_demoted = jnp.sum(d_ids < cap).astype(jnp.int32)
+    n_promoted = jnp.sum(p_ids < cap).astype(jnp.int32)
+    io = IOStats(jnp.int32(0), n_promoted, jnp.int32(0), jnp.int32(0))
+
+    state = state._replace(hot=hot, qvecs=qvecs, qscale=qscale,
+                           tier_heat=tier_heat)
+    return state, io, {"demoted": n_demoted, "promoted": n_promoted}

@@ -1,0 +1,32 @@
+"""Scalar quantizer for the cold lane.
+
+Per-row absmax int8: ``scale = max|x| / 127``, ``q = round(x / scale)``.
+One f32 scale per row, so a cold row costs ``dim + 4`` bytes against
+``4 * dim`` dense — a 3.8x lane compression at dim=128 before the
+simhash codes (which both lanes keep).  The quantizer is intentionally
+symmetric and zero-preserving: an all-zero row round-trips exactly
+(scale clamps to a tiny epsilon instead of dividing by zero), and
+dequantization is a single fused multiply in the gather kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Rows quantize to [-127, 127] (not -128) so the lane is symmetric and
+# negation of a vector negates its codes exactly.
+_QMAX = 127.0
+_EPS = 1e-12
+
+
+def quantize_rows(rows: jnp.ndarray):
+    """f32 [n, d] -> (int8 codes [n, d], f32 scales [n])."""
+    absmax = jnp.max(jnp.abs(rows), axis=-1)
+    scale = jnp.maximum(absmax / _QMAX, _EPS).astype(jnp.float32)
+    q = jnp.clip(jnp.round(rows / scale[..., None]), -_QMAX, _QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rows(codes: jnp.ndarray, scales: jnp.ndarray):
+    """(int8 [n, d], f32 [n]) -> f32 [n, d] reconstruction."""
+    return codes.astype(jnp.float32) * scales[..., None]

@@ -145,8 +145,13 @@ def test_memory_accounting_grows_with_inserts():
         idx.insert(x)
     m1 = idx.memory_bytes()
     assert m1 >= m0
-    # memory-resident part must be far below the full data size
-    assert m1 < 0.8 * idx.state.vectors.nbytes
+    # the vector lanes only hold the live rows, far below the full
+    # cap-sized dense array; the total also stays under it even though
+    # memory_bytes() now counts all serving state (tombstone lane,
+    # insert overlay, ext<->int id maps)
+    bd = idx.memory_breakdown()
+    assert bd.hot_vectors + bd.cold_codes < 0.5 * idx.state.vectors.nbytes
+    assert m1 < idx.state.vectors.nbytes
 
 
 def test_reorder_preserves_results_and_improves_layout():

@@ -1,0 +1,346 @@
+"""Tiered hot/cold vector store tests (DESIGN.md §12): quantizer
+round-trip, the fused dequant+L2 kernel vs its oracle, policy
+convergence under hysteresis, mixed-lane search parity and recall,
+external-id stability across reorder/consolidate with a populated cold
+lane, checkpoint bit-exactness at shards=1 and shards=4, per-lane
+memory accounting, and the small-clustered-shard bulk_build
+reachability regression."""
+
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import hnsw, lsm
+from repro.core.distributed import ShardedBackend
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+from repro.kernels import gather_l2, gather_l2_q8
+from repro.kernels.gather_l2.ref import gather_l2_q8_ref
+from repro.serve import MaintenancePolicy, ServeConfig, ServeEngine
+from repro.tier import TierPolicy, dequantize_rows, quantize_rows
+
+CFG = hnsw.HNSWConfig(cap=1024, dim=32, M=8, M_up=4, num_upper=2,
+                      ef_search=48, ef_construction=48, k=10, rho=1.0,
+                      use_filter=False, lsm_mem_cap=128, lsm_levels=2,
+                      lsm_fanout=8, tier=True, rerank=32)
+
+POL = TierPolicy(hot_frac=0.25, ewma=0.5, hysteresis=0.05,
+                 max_demote=CFG.cap, max_promote=CFG.cap)
+
+
+def _vecs(n, seed=0, dim=None):
+    return np.random.default_rng(seed).standard_normal(
+        (n, dim or CFG.dim)).astype(np.float32)
+
+
+def _warm(idx, queries, rounds=2):
+    """Accumulate traversal heat so the policy has a signal to rank."""
+    for _ in range(rounds):
+        idx.search(queries, record_heat=True)
+
+
+def _skew_queries(base, n_q, seed=1):
+    """Perturbations of the head quarter of the corpus: a workload with
+    an actual hot set, so demotion targets the tail."""
+    rng = np.random.default_rng(seed)
+    picks = base[rng.integers(0, max(len(base) // 4, 1), n_q)]
+    return (picks + rng.normal(0, 0.1, picks.shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bounded_by_half_step():
+    rows = _vecs(64, seed=3) * 7.0
+    codes, scales = quantize_rows(rows)
+    assert codes.dtype == np.int8 and scales.dtype == np.float32
+    deq = np.asarray(dequantize_rows(codes, scales))
+    err = np.abs(deq - rows)
+    # absmax scalar quantization: error <= scale/2 per element
+    assert np.all(err <= np.asarray(scales)[:, None] * 0.5 + 1e-6)
+
+
+def test_quantize_zero_row_is_stable():
+    rows = np.zeros((2, CFG.dim), np.float32)
+    codes, scales = quantize_rows(rows)
+    assert np.all(np.asarray(codes) == 0)
+    assert np.all(np.asarray(dequantize_rows(codes, scales)) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant+L2 kernel family
+# ---------------------------------------------------------------------------
+
+def test_gather_l2_q8_ref_equals_dequant_then_gather():
+    rng = np.random.default_rng(5)
+    table = _vecs(128, seed=6) * 3.0
+    codes, scales = quantize_rows(table)
+    q = _vecs(4, seed=7)
+    ids = rng.integers(0, 128, (4, 16)).astype(np.int32)
+    ids[0, 3] = -1                                   # masked lane
+    d_fused = np.asarray(gather_l2_q8_ref(q, codes, scales, ids))
+    d_two_step = np.asarray(gather_l2(q, dequantize_rows(codes, scales),
+                                      ids))
+    assert np.isinf(d_fused[0, 3])
+    np.testing.assert_allclose(d_fused, d_two_step, rtol=1e-5, atol=1e-5)
+
+
+def test_gather_l2_q8_op_dispatches_to_ref_on_cpu():
+    table = _vecs(64, seed=8)
+    codes, scales = quantize_rows(table)
+    q = _vecs(3, seed=9)
+    ids = np.random.default_rng(10).integers(0, 64, (3, 8)).astype(np.int32)
+    np.testing.assert_allclose(
+        np.asarray(gather_l2_q8(q, codes, scales, ids)),
+        np.asarray(gather_l2_q8_ref(q, codes, scales, ids)),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# policy: convergence + hysteresis
+# ---------------------------------------------------------------------------
+
+def test_policy_converges_to_budget_and_hysteresis_holds():
+    base = _vecs(512, seed=11)
+    idx = LSMVecIndex.build(CFG, base)
+    _warm(idx, _skew_queries(base, 64))
+    m1 = idx.tier_maintain(POL)
+    assert m1["demoted"] > 0
+    st = idx.stats()
+    n_lane = st.memory.n_hot + st.memory.n_cold
+    # the hot lane lands at the budget, within the hysteresis band
+    assert st.memory.n_hot <= int(
+        np.ceil(POL.hot_frac * n_lane * (1 + POL.hysteresis))) + 1
+    # heat unchanged since -> ranks unchanged -> a second pass is a no-op
+    m2 = idx.tier_maintain(POL)
+    assert m2 == {"demoted": 0, "promoted": 0}
+
+
+def test_promotion_rehydrates_reheated_nodes():
+    base = _vecs(512, seed=12)
+    idx = LSMVecIndex.build(CFG, base)
+    _warm(idx, _skew_queries(base, 64, seed=13))
+    idx.tier_maintain(POL)
+    n_cold0 = idx.stats().memory.n_cold
+    assert n_cold0 > 0
+    # shift the workload to the previously-cold tail; its nodes reheat
+    rng = np.random.default_rng(14)
+    tail_q = (base[rng.integers(3 * len(base) // 4, len(base), 64)]
+              + rng.normal(0, 0.1, (64, CFG.dim))).astype(np.float32)
+    _warm(idx, tail_q, rounds=4)
+    moved = idx.tier_maintain(POL)
+    assert moved["promoted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# search: all-hot parity, tiered recall, rerank IO accounting
+# ---------------------------------------------------------------------------
+
+def test_all_hot_tier_search_is_bit_parity_with_dense():
+    base = _vecs(400, seed=15)
+    q = _vecs(16, seed=16)
+    res_t = LSMVecIndex.build(CFG, base).search(q)
+    res_d = LSMVecIndex.build(CFG._replace(tier=False), base).search(q)
+    np.testing.assert_array_equal(np.asarray(res_t.ids),
+                                  np.asarray(res_d.ids))
+    np.testing.assert_allclose(np.asarray(res_t.dists),
+                               np.asarray(res_d.dists), rtol=1e-6)
+
+
+def test_tiered_recall_holds_floor_and_rerank_fetches_cold_rows():
+    base = make_clustered_vectors(512, dim=CFG.dim, seed=17)
+    q = _skew_queries(base, 64, seed=18)
+    truth = brute_force_knn(base, q, CFG.k)
+    idx = LSMVecIndex.build(CFG, base)
+    _warm(idx, q)
+    recall_dense = recall_at_k(idx.search(q, record_heat=False).ids, truth)
+    idx.tier_maintain(POL)
+    assert idx.stats().memory.n_cold > 0
+    idx.reset_stats()
+    recall_tier = recall_at_k(idx.search(q, record_heat=False).ids, truth)
+    assert recall_tier >= 0.95 * recall_dense
+    # rerank's exact re-fetch of cold candidates is modeled disk IO
+    assert int(idx.io_stats.n_vec) > 0
+
+
+# ---------------------------------------------------------------------------
+# external-id stability across reorder + consolidate with a cold lane
+# ---------------------------------------------------------------------------
+
+def test_external_ids_stable_across_reorder_and_consolidate():
+    base = _vecs(400, seed=19)
+    idx = LSMVecIndex.build(CFG, base)
+    pol = MaintenancePolicy(tombstone_ratio=None, consolidate_ratio=0.2,
+                            heat_budget=1, check_every=1,
+                            tier_policy=POL)
+    eng = ServeEngine(idx, ServeConfig(query_batch=16, insert_batch=16,
+                                       delete_batch=16, maintenance=pol))
+    probe = base[37]
+    t0 = eng.submit_query(probe)
+    eng.drain()
+    assert int(t0.result().ids[0]) == 37
+
+    # trigger maintenance: reorder (permutes internal ids) + tier pass
+    eng.submit_insert(_vecs(1, seed=20)[0])
+    eng.drain()
+    assert eng.maintenance.reorders >= 1
+    assert eng.maintenance.tier_passes >= 1
+    assert eng.maintenance.tier_demoted > 0
+    t1 = eng.submit_query(probe)
+    eng.drain()
+    assert int(t1.result().ids[0]) == 37
+
+    # churn past the consolidate trigger; 37 stays live
+    for v in range(100, 220):
+        eng.submit_delete(v)
+    eng.submit_insert(_vecs(1, seed=21)[0])
+    eng.drain()
+    assert eng.maintenance.consolidations >= 1
+    t2 = eng.submit_query(probe)
+    eng.drain()
+    assert int(t2.result().ids[0]) == 37
+    returned = set(int(i) for i in t2.result().ids)
+    assert not (returned & set(range(100, 220)))
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip with a populated cold lane
+# ---------------------------------------------------------------------------
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def test_checkpoint_restore_bit_exact_with_cold_lane(tmp_path):
+    base = _vecs(300, seed=22)
+    idx = LSMVecIndex.build(CFG, base)
+    _warm(idx, _skew_queries(base, 32, seed=23))
+    assert idx.tier_maintain(POL)["demoted"] > 0
+    idx.save(str(tmp_path), lsn=7)
+
+    idx2, md, _ = LSMVecIndex.restore(CFG, str(tmp_path))
+    assert md["lsn"] == 7
+    assert _trees_equal(idx.state, idx2.state)
+    st = idx2.stats()
+    assert st.memory.n_cold > 0                      # cold lane survived
+    q = _vecs(16, seed=24)
+    np.testing.assert_array_equal(
+        np.asarray(idx.search(q, record_heat=False).ids),
+        np.asarray(idx2.search(q, record_heat=False).ids))
+
+
+def test_sharded_checkpoint_restore_bit_exact_with_cold_lane(tmp_path):
+    cfg = CFG._replace(cap=512)
+    base = _vecs(600, seed=25)
+    be = ShardedBackend(cfg, 4).build(base, seed=25)
+    for _ in range(2):
+        be.search(_skew_queries(base, 32, seed=26))
+    moved = be.tier_maintain(POL)
+    assert moved["demoted"] > 0
+    assert be.stats().memory.n_cold > 0
+    be.save(str(tmp_path), lsn=9)
+
+    be2, md, _ = ShardedBackend.restore(cfg, str(tmp_path), n_shards=4)
+    assert md["lsn"] == 9
+    for a, b in zip(be.shards, be2.shards):
+        assert _trees_equal(a.state, b.state)
+    q = _vecs(16, seed=27)
+    np.testing.assert_array_equal(np.asarray(be.search(q).ids),
+                                  np.asarray(be2.search(q).ids))
+
+
+# ---------------------------------------------------------------------------
+# memory accounting (per-lane + the serving state satellite)
+# ---------------------------------------------------------------------------
+
+def test_memory_breakdown_components_and_tier_shrinks_footprint():
+    base = _vecs(512, seed=28)
+    idx = LSMVecIndex.build(CFG, base)
+    st = idx.stats()
+    mem0 = st.memory
+    assert mem0 is not None
+    # serving-state components the old accounting omitted are surfaced
+    # and non-zero (tombstone lane, insert overlay, ext<->int id maps)
+    d = mem0.as_dict()
+    for comp in ("tombstones", "insert_overlay", "id_maps", "memtable",
+                 "simhash_codes", "hot_vectors"):
+        assert d[comp] > 0, comp
+    assert d["total"] == sum(v for k, v in d.items()
+                             if k not in ("total", "n_hot", "n_cold"))
+    assert idx.memory_bytes() == mem0.total
+
+    _warm(idx, _skew_queries(base, 64, seed=29))
+    idx.tier_maintain(POL)
+    mem1 = idx.stats().memory
+    assert mem1.n_cold > 0
+    assert mem1.total < mem0.total                   # demotion freed bytes
+    assert mem1.cold_codes == mem1.n_cold * (CFG.dim + 4)
+    # per-shard lane counts ride the stats surface
+    sh = idx.stats().shards[0]
+    assert (sh.n_hot, sh.n_cold) == (mem1.n_hot, mem1.n_cold)
+
+
+def test_dense_config_reports_all_rows_hot():
+    idx = LSMVecIndex.build(CFG._replace(tier=False), _vecs(200, seed=30))
+    mem = idx.stats().memory
+    assert mem.n_cold == 0 and mem.cold_codes == 0
+    assert mem.n_hot >= 200
+
+
+# ---------------------------------------------------------------------------
+# bulk_build small-clustered-shard reachability regression
+# ---------------------------------------------------------------------------
+
+def _bottom_reachable(cfg, state, n):
+    """BFS over the bottom layer from the entry's bottom anchor."""
+    live, rows = lsm.resolve_all(cfg.lsm_cfg, state.store, n)
+    rows = np.asarray(rows)
+    live = np.asarray(live).astype(bool) & (
+        np.asarray(state.levels[:n]) >= 0)
+    seen = {0}
+    frontier = collections.deque([0])
+    while frontier:
+        u = frontier.popleft()
+        for v in rows[u]:
+            v = int(v)
+            if v >= 0 and live[v] and v not in seen:
+                seen.add(v)
+                frontier.append(v)
+    return seen, set(np.flatnonzero(live))
+
+
+@pytest.mark.parametrize("n", [64, 96, 128])
+def test_bulk_build_tiny_clustered_shard_fully_reachable(n):
+    # regression: bulk_build on very small clustered shards used to
+    # truncate the candidate pool below the cluster count, stranding
+    # whole clusters off the entry component (the sharded smoke's
+    # per-shard scale).  Every live node must be reachable on the
+    # bottom layer, and recall must not crater.
+    cfg = CFG._replace(cap=max(2 * n, 256))
+    base = make_clustered_vectors(n, dim=CFG.dim, seed=31)
+    idx = LSMVecIndex.build(cfg, base)
+    seen, want = _bottom_reachable(cfg, idx.state, n)
+    assert seen >= want, f"unreachable: {sorted(want - seen)[:10]}"
+    q = (base + np.random.default_rng(32).normal(
+        0, 0.05, base.shape)).astype(np.float32)
+    truth = brute_force_knn(base, q, cfg.k)
+    assert recall_at_k(idx.search(q, record_heat=False).ids, truth) >= 0.9
+
+
+def test_bulk_build_tiny_shards_inside_sharded_backend():
+    # 4 shards over 256 rows = 64 nodes/shard: the regime the carried
+    # issue called out as losing navigability
+    base = make_clustered_vectors(256, dim=CFG.dim, seed=33)
+    be = ShardedBackend(CFG._replace(cap=256), 4).build(base, seed=33)
+    q = _vecs(32, seed=34)
+    # backend ids are block-encoded gids: map truth through the
+    # allocation-order id table
+    truth = np.asarray(be.initial_ids())[brute_force_knn(base, q, CFG.k)]
+    assert recall_at_k(np.asarray(be.search(q).ids), truth) >= 0.85
