@@ -41,6 +41,7 @@ import jax.numpy as jnp                                        # noqa: E402
 
 from _util import write_bench_json                             # noqa: E402
 from repro.core import hnsw                                    # noqa: E402
+from repro.core.backend import SearchParams                    # noqa: E402
 from repro.core.index import (LSMVecIndex, brute_force_knn,    # noqa: E402
                               recall_at_k)
 from repro.data.synth import make_clustered_vectors            # noqa: E402
@@ -105,13 +106,14 @@ def _fixed_batch_qps(idx: LSMVecIndex, pool: np.ndarray, batch: int,
                      k: int) -> float:
     """Best-of-TRIALS fixed-shape search throughput (the PR-1 path)."""
     nb = len(pool) // batch
-    idx.search(pool[:batch], k=k, record_heat=False)      # compile
+    idx.search(pool[:batch], k=k,
+               params=SearchParams(record_heat=False))      # compile
     dt = float("inf")
     for _ in range(TRIALS):
         t0 = time.monotonic()
         for b in range(nb):
             idx.search(pool[b * batch:(b + 1) * batch], k=k,
-                       record_heat=False)
+                       params=SearchParams(record_heat=False))
         jax.block_until_ready(idx.state.count)
         dt = min(dt, time.monotonic() - t0)
     return nb * batch / dt

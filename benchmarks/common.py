@@ -127,8 +127,9 @@ def run_workloads(*, n_base: int = 4096, dim: int = 64, n_batches: int = 8,
                 idx.reset_stats()
                 t1 = time.monotonic()
                 # LSMVecIndex returns a SearchResult, baselines a plain
-                # tuple — both unpack as (ids, dists)
-                ids, _ = idx.search(queries, k=10)
+                # (ids, dists) tuple
+                res = idx.search(queries, k=10)
+                ids = res.ids if hasattr(res, "ids") else res[0]
                 search_wall = time.monotonic() - t1
                 search_cost = float(iostats.search_cost(idx.io_stats, DISK)) \
                     * 1e3 / len(queries)

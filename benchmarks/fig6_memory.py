@@ -38,6 +38,7 @@ import jax.numpy as jnp                                        # noqa: E402
 
 from _util import write_bench_json                             # noqa: E402
 from repro.core import hnsw                                    # noqa: E402
+from repro.core.backend import SearchParams                    # noqa: E402
 from repro.core.index import (LSMVecIndex, brute_force_knn,    # noqa: E402
                               recall_at_k)
 from repro.data.synth import make_clustered_vectors            # noqa: E402
@@ -124,7 +125,8 @@ def run(*, n: int, dim: int, n_queries: int, head_frac: float,
     # state of the very same index, so graph and level draws are shared
     # with every tiered arm).  The searches double as heat warmup.
     for _ in range(warm_rounds):
-        ids_d, _ = idx0.search(queries, k=cfg.k, record_heat=True)
+        ids_d = idx0.search(queries, k=cfg.k,
+                            params=SearchParams(record_heat=True)).ids
     recall_dense = recall_at_k(np.asarray(ids_d), truth)
     mem_dense = idx0.memory_breakdown()
     print(f"fig6,dense,recall={recall_dense:.4f},"
@@ -138,7 +140,8 @@ def run(*, n: int, dim: int, n_queries: int, head_frac: float,
         moved = idx.tier_maintain(pol)
         moved2 = idx.tier_maintain(pol)   # EWMA settles, hysteresis holds
         idx.reset_stats()
-        ids_t, _ = idx.search(queries, k=cfg.k, record_heat=False)
+        ids_t = idx.search(queries, k=cfg.k,
+                           params=SearchParams(record_heat=False)).ids
         rerank_fetches = int(idx.io_stats.n_vec) / n_queries
         recall_t = recall_at_k(np.asarray(ids_t), truth)
         mem_t = idx.memory_breakdown()

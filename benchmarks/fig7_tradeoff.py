@@ -14,6 +14,7 @@ import numpy as np
 
 from benchmarks.common import DISK, default_cfg
 from repro.core import iostats
+from repro.core.backend import SearchParams
 from repro.core.baselines import DiskANNIndex, SPFreshIndex
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
@@ -29,7 +30,7 @@ def main(n_base: int = 4096, dim: int = 64, n_queries: int = 64):
     lv = LSMVecIndex.build(default_cfg(dim, n_base + 16), base)
     for ef in (16, 32, 48, 96):
         lv.reset_stats()
-        ids = lv.search(queries, k=10, ef=ef).ids
+        ids = lv.search(queries, k=10, params=SearchParams(ef=ef)).ids
         cost = float(iostats.search_cost(lv.io_stats, DISK)) * 1e3 / n_queries
         rec = recall_at_k(ids, truth)
         frontier.setdefault("lsmvec", []).append((rec, cost))

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import DISK, default_cfg
 from repro.core import iostats
+from repro.core.backend import SearchParams
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
 
@@ -30,8 +31,8 @@ def main(n_base: int = 4096, dim: int = 64, n_queries: int = 64):
     for rho in RHOS:
         idx.reset_stats()
         # rho = 1.0 is the paper's "no sampling applied" baseline (Eq. 7)
-        ids = idx.search(queries, k=10, rho=rho,
-                         use_filter=(rho < 1.0)).ids
+        ids = idx.search(queries, k=10, params=SearchParams(
+            rho=rho, use_filter=(rho < 1.0))).ids
         cost = float(iostats.search_cost(idx.io_stats, DISK)) * 1e3 / n_queries
         rec = recall_at_k(ids, truth)
         curve.append((rho, rec, cost))

@@ -33,6 +33,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from _util import write_bench_json                            # noqa: E402
 from repro.core import hnsw                                   # noqa: E402
+from repro.core.backend import SearchParams                   # noqa: E402
 from repro.core.index import (LSMVecIndex, brute_force_knn,   # noqa: E402
                               recall_at_k)
 from repro.data.synth import make_clustered_vectors           # noqa: E402
@@ -133,13 +134,14 @@ def run(*, n_base: int, batch: int, n_queries: int, dim: int, seed: int,
     truth = brute_force_knn(jnp.asarray(allv), jnp.asarray(queries), cfg.k)
     search = {}
     for b in (1, 4):
-        ids = idx.search(queries, k=cfg.k, n_expand=b).ids  # warm/compile
+        ids = idx.search(queries, k=cfg.k,
+                         params=SearchParams(n_expand=b)).ids  # warm/compile
         dt = float("inf")
         for _ in range(TRIALS):
             t0 = time.monotonic()
             for _ in range(search_reps):
-                ids = idx.search(queries, k=cfg.k, n_expand=b,
-                                 record_heat=False).ids
+                ids = idx.search(queries, k=cfg.k, params=SearchParams(
+                    n_expand=b, record_heat=False)).ids
             jax.block_until_ready(idx.state.count)
             dt = min(dt, (time.monotonic() - t0) / search_reps)
         search[f"qps_b{b}"] = round(n_queries / dt, 1)

@@ -1,6 +1,8 @@
 """Dynamic-workload demo on the online serving engine: the paper's
 balanced insert-delete churn (Fig. 5 protocol) interleaved with queries,
-driven through `repro.serve` micro-batching (DESIGN.md §8).
+driven through `repro.serve` micro-batching (DESIGN.md §8), with
+non-blocking (double-buffered) consolidation overlapping the query
+stream (DESIGN.md §13).
 
 Each batch round submits individual insert/delete/query requests like
 independent clients; the engine coalesces them into fixed-shape padded
@@ -43,7 +45,10 @@ def main(n_base=1024, dim=48, n_batches=5, n_shards=1):
         backend = LSMVecIndex.build(cfg, base)
     engine = ServeEngine(backend, ServeConfig(
         query_batch=32, insert_batch=16, delete_batch=16,
-        maintenance=MaintenancePolicy(tombstone_ratio=0.15, check_every=2)))
+        maintenance=MaintenancePolicy(tombstone_ratio=0.15, check_every=2,
+                                      # overlapped consolidation is the
+                                      # default; False = stop-the-world
+                                      overlap=True)))
 
     allv = [base.copy()]
     live = np.ones(n_base, bool)
@@ -82,6 +87,8 @@ def main(n_base=1024, dim=48, n_batches=5, n_shards=1):
         print(f"{b},{rec:.3f},{upd_ms:.2f},{srch_ms:.2f},"
               f"{backend.memory_bytes()/1e6:.2f},{int(live.sum())},"
               f"{maint}")
+    # settle any still-in-flight overlapped repair before final stats
+    engine.maintenance.barrier()
 
     m = engine.metrics.snapshot()
     st = backend.stats()

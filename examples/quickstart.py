@@ -10,7 +10,7 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DISK, HNSWConfig, LSMVecIndex
+from repro.core import DISK, HNSWConfig, LSMVecIndex, SearchParams  # noqa: F401
 from repro.core.index import brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
 
@@ -27,6 +27,8 @@ def main():
 
     queries = make_clustered_vectors(32, dim=dim, seed=7)
     res = idx.search(queries, k=10)           # typed SearchResult
+    # knobs ride a typed SearchParams instead of kwargs, e.g.
+    #   idx.search(queries, k=10, params=SearchParams(rho=0.7))
     ids = res.ids
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10)
     print(f"recall 10@10 = {recall_at_k(ids, truth):.3f}")
@@ -40,7 +42,7 @@ def main():
     new_vecs = make_clustered_vectors(16, dim=dim, seed=99) + 30.0
     new = idx.insert_batch(new_vecs)          # typed UpdateResult
     found = idx.search(new_vecs, k=1).ids
-    print(f"inserted {len(new)}; self-recall of new vectors: "
+    print(f"inserted {new.n_applied}; self-recall of new vectors: "
           f"{(found[:, 0] == np.asarray(new.ids)).mean():.2f}")
 
     idx.delete_batch(ids[0][:3].tolist())
@@ -51,8 +53,11 @@ def main():
     print(f"memory-resident footprint: {idx.memory_bytes()/1e6:.2f} MB "
           f"(vectors on 'disk': {idx.state.vectors.nbytes/1e6:.1f} MB)")
 
-    # maintenance: connectivity-aware reordering (paper §3.4)
-    idx.reorder(window=8, lam=1.0)
+    # maintenance: every op goes through the uniform maintain() entry
+    # (connectivity-aware reordering here, paper §3.4) and returns one
+    # typed MaintenanceReport
+    rep = idx.maintain("reorder", window=8, lam=1.0)
+    assert rep.applied and rep.perm is not None
     ids3 = idx.search(queries, k=10).ids
     print(f"post-reorder recall = "
           f"{recall_at_k(ids3, brute_force_knn(idx.state.vectors[:idx.state.count], jnp.asarray(queries), 10)):.3f}")

@@ -14,8 +14,9 @@
 - baselines  — DiskANN-like and SPFresh-like comparison systems
 """
 
-from repro.core.backend import (BackendStats, SearchResult, ShardStats,
-                                UpdateResult, VectorBackend)
+from repro.core.backend import (BackendStats, MaintenanceReport,
+                                SearchHandle, SearchParams, SearchResult,
+                                ShardStats, UpdateResult, VectorBackend)
 from repro.core.hnsw import HNSWConfig, HNSWState
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.core.iostats import DISK, CostModel, IOStats, tpu_hbm_model
@@ -24,5 +25,5 @@ __all__ = [
     "HNSWConfig", "HNSWState", "LSMVecIndex", "brute_force_knn",
     "recall_at_k", "IOStats", "CostModel", "DISK", "tpu_hbm_model",
     "VectorBackend", "BackendStats", "ShardStats", "SearchResult",
-    "UpdateResult",
+    "UpdateResult", "SearchParams", "SearchHandle", "MaintenanceReport",
 ]

@@ -17,16 +17,26 @@ can fold it into its own external↔internal map.  External ids — the ids
 clients hold — are owned entirely by the serving layer; the backend
 never sees them.
 
+Search is two-phase (DESIGN.md §13): `dispatch_search` enqueues the
+device work and returns a `SearchHandle` without forcing a host sync;
+`handle.collect()` blocks on the device arrays and produces the final
+`SearchResult`.  `search` = dispatch + collect, so single-call sites
+are unchanged and shards=1 stays bit-parity.  Maintenance is unified
+behind `maintain(op, **params) -> MaintenanceReport`, with an optional
+async pair `begin_maintain`/`poll_maintain` for overlapped
+consolidation.
+
 Typed results replace the ad-hoc tuple/list returns: `search` returns a
 `SearchResult`, `insert_batch`/`delete_batch` return an `UpdateResult`.
-Both stay iterable/sequence-like so call sites written against the old
-`(ids, dists)` / `list[int]` shapes keep working during migration.
+Both are frozen value types — the PR-4 sequence-compat shims are gone;
+use `.ids`/`.dists` explicitly.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Iterator, Optional, Protocol, Sequence, runtime_checkable
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
@@ -36,19 +46,14 @@ class SearchResult:
     """Batched ANN search result in the backend's internal id space.
 
     `ids` int [B, k] (-1 pads under-full rows), `dists` f32 [B, k]
-    (squared L2, +inf on pads).  Iterates as `(ids, dists)` for
-    compatibility with tuple unpacking.
+    (squared L2, +inf on pads).
     """
 
     ids: np.ndarray
     dists: np.ndarray
 
-    def __iter__(self) -> Iterator[np.ndarray]:
-        yield self.ids
-        yield self.dists
 
-
-@dataclass(frozen=True, eq=False)
+@dataclass(frozen=True)
 class UpdateResult:
     """Result of a batched mutation.
 
@@ -58,30 +63,87 @@ class UpdateResult:
     deletes with a routable non-negative id).  Dispatched deletes that
     turn out to be device-side no-ops (absent/already-dead ids) are NOT
     subtracted here — they are reported once, in
-    `stats().delete_noops`, so the two counts never drift.  Sequence
-    protocol + list equality over `ids` keep old `list[int]`-shaped
-    call sites working.
+    `stats().delete_noops`, so the two counts never drift.
     """
 
     ids: np.ndarray
     n_applied: int
 
-    def __iter__(self):
-        return iter(self.ids)
 
-    def __len__(self) -> int:
-        return len(self.ids)
+@dataclass(frozen=True)
+class SearchParams:
+    """Typed search knobs — the one place defaults are resolved.
 
-    def __getitem__(self, i):
-        return self.ids[i]
+    A `None` field means "use the backend config default" (resolved via
+    `resolve(cfg)` at the dispatch boundary, nowhere else).
+    `record_heat=None` defers to the caller's policy: `LSMVecIndex`
+    resolves it to True, `ServeEngine` resolves it from its tier policy.
+    `use_snapshot` selects the cached dense-read snapshot (serving
+    path); `pad_to` pads the query batch to a fixed traced width.
+    """
 
-    def __eq__(self, other):
-        if isinstance(other, UpdateResult):
-            return (np.array_equal(self.ids, other.ids)
-                    and self.n_applied == other.n_applied)
-        if isinstance(other, (list, tuple, np.ndarray)):
-            return list(self.ids) == list(np.asarray(other))
-        return NotImplemented
+    rho: Optional[float] = None
+    ef: Optional[int] = None
+    use_filter: Optional[bool] = None
+    n_expand: Optional[int] = None
+    record_heat: Optional[bool] = None
+    use_snapshot: bool = False
+    pad_to: Optional[int] = None
+
+    def resolve(self, cfg) -> "SearchParams":
+        """Fill `None` knobs from an `HNSWConfig` — the single
+        config-derived-defaults site for the whole stack."""
+        return SearchParams(
+            rho=float(cfg.rho if self.rho is None else self.rho),
+            ef=int(cfg.ef_search if self.ef is None else self.ef),
+            use_filter=bool(cfg.use_filter if self.use_filter is None
+                            else self.use_filter),
+            n_expand=int(cfg.n_expand if self.n_expand is None
+                         else self.n_expand),
+            record_heat=(True if self.record_heat is None
+                         else bool(self.record_heat)),
+            use_snapshot=bool(self.use_snapshot),
+            pad_to=self.pad_to,
+        )
+
+    def replace(self, **kw) -> "SearchParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class MaintenanceReport:
+    """Uniform result of one `maintain(op)` invocation.
+
+    `applied` is False when the op's own trigger rule declined to run
+    (e.g. consolidate below the tombstone-ratio threshold).
+    `reclaimed` — tombstone slots spliced out (consolidate);
+    `perm` — internal-id permutation applied (reorder), else None;
+    `demoted`/`promoted` — tier lane moves (tier).  `detail` carries
+    op-specific extras (per-shard counts etc.).
+    """
+
+    op: str
+    applied: bool
+    reclaimed: int = 0
+    perm: Optional[np.ndarray] = None
+    demoted: int = 0
+    promoted: int = 0
+    detail: dict = field(default_factory=dict)
+
+
+@runtime_checkable
+class SearchHandle(Protocol):
+    """An in-flight search: device work dispatched, host sync deferred.
+
+    `collect()` blocks on the device arrays and returns the final
+    `SearchResult`; it is called exactly once.  `is_ready()` is a
+    non-blocking poll (True once every underlying device array has
+    resolved — advisory, collect() is always safe).
+    """
+
+    def collect(self) -> SearchResult: ...
+
+    def is_ready(self) -> bool: ...
 
 
 @dataclass(frozen=True)
@@ -171,14 +233,17 @@ class BackendStats:
 class VectorBackend(Protocol):
     """What the serving layer requires of an index.
 
-    Mutations: `insert_batch` / `delete_batch` take `pad_to` so a fixed
-    micro-batch width dispatches through one traced shape; `search`
-    additionally takes `use_snapshot` (cached dense reads).
-    Maintenance: `consolidate(ratio=...)` applies the per-shard trigger
-    rule (a shard consolidates iff its own tombstone ratio crosses
-    `ratio`; `None` = unconditional), `reorder` returns the internal-id
-    permutation it applied.  `initial_ids` seeds an external-id map:
-    internal ids in allocation order for every node allocated so far.
+    Reads: `dispatch_search(queries, k, params=...)` enqueues device
+    work and returns a `SearchHandle`; `search` is the one-call
+    dispatch+collect.  Mutations: `insert_batch` / `delete_batch` take
+    `pad_to` so a fixed micro-batch width dispatches through one traced
+    shape.  Maintenance: `maintain(op, **params)` covers
+    consolidate/compact/reorder/tier uniformly and returns a
+    `MaintenanceReport`; `begin_maintain`/`poll_maintain` run a
+    consolidation overlapped with serving (double-buffered repair,
+    atomic cutover — DESIGN.md §13).  `initial_ids` seeds an
+    external-id map: internal ids in allocation order for every node
+    allocated so far.
     """
 
     @property
@@ -191,11 +256,11 @@ class VectorBackend(Protocol):
     def snapshot_stale(self) -> bool: ...     # next snapshot read re-resolves
 
     def search(self, queries, k: Optional[int] = None, *,
-               rho: Optional[float] = None, ef: Optional[int] = None,
-               use_filter: Optional[bool] = None,
-               n_expand: Optional[int] = None, record_heat: bool = True,
-               use_snapshot: bool = False,
-               pad_to: Optional[int] = None) -> SearchResult: ...
+               params: Optional[SearchParams] = None) -> SearchResult: ...
+
+    def dispatch_search(self, queries, k: Optional[int] = None, *,
+                        params: Optional[SearchParams] = None
+                        ) -> SearchHandle: ...
 
     def insert_batch(self, xs, *,
                      pad_to: Optional[int] = None) -> UpdateResult: ...
@@ -203,19 +268,26 @@ class VectorBackend(Protocol):
     def delete_batch(self, ids, *,
                      pad_to: Optional[int] = None) -> UpdateResult: ...
 
-    def consolidate(self, *, ratio: Optional[float] = None) -> int: ...
+    def maintain(self, op: str, **params) -> MaintenanceReport: ...
 
-    def compact(self) -> None: ...
+    # -- overlapped consolidation (DESIGN.md §13) -----------------------------
+    # `begin_maintain("consolidate", ...)` starts a double-buffered repair
+    # against a clone of the live state and returns True iff one was
+    # started (False: trigger declined, or a repair is already in
+    # flight).  Queries keep serving from the live snapshot;
+    # `poll_maintain()` cuts over atomically once the repair's device
+    # work is done and returns its report (None while still running or
+    # when nothing is in flight; `block=True` forces completion).
+    # Mutations barrier on any in-flight repair, so the cutover always
+    # lands on a write-batch boundary — the WAL replay invariant.
+    def begin_maintain(self, op: str, **params) -> bool: ...
 
-    def reorder(self, *, window: int = 8, lam: float = 1.0) -> np.ndarray: ...
+    def poll_maintain(self, *, block: bool = False
+                      ) -> Optional[MaintenanceReport]: ...
 
     def stats(self) -> BackendStats: ...
 
     def memory_bytes(self) -> int: ...        # MemoryBreakdown total
-
-    # one batched demote/promote pass per shard (DESIGN.md §12); returns
-    # {"demoted": n, "promoted": n} summed over shards
-    def tier_maintain(self, policy) -> dict: ...
 
     def heat_total(self) -> int: ...
 

@@ -29,7 +29,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt
 from repro.core import hnsw
-from repro.core.backend import (BackendStats, SearchResult, UpdateResult,
+from repro.core.backend import (BackendStats, MaintenanceReport,
+                                SearchParams, SearchResult, UpdateResult,
                                 merge_topk, shard_of_seq)
 from repro.core.index import LSMVecIndex
 from repro.kernels.l2_distance.ref import l2_distance_ref
@@ -99,6 +100,37 @@ class ShardedFlatIndex:
         return np.asarray(ids)[:, :k], np.asarray(dists)[:, :k]
 
 
+class ShardedDispatch:
+    """`SearchHandle` over the per-shard in-flight handles.
+
+    Dispatch already happened (all shards' device work is enqueued);
+    `collect()` blocks shard by shard, maps local ids into the
+    block-encoded global space, and runs the stable `merge_topk` host
+    merge.  Total wait is the *max* shard latency, not the sum — the
+    overlap the two-phase contract buys (DESIGN.md §13).
+    """
+
+    __slots__ = ("_handles", "_cap", "_k")
+
+    def __init__(self, handles, cap: int, k: int):
+        self._handles = handles
+        self._cap = cap
+        self._k = k
+
+    def is_ready(self) -> bool:
+        return all(h.is_ready() for h in self._handles)
+
+    def collect(self) -> SearchResult:
+        gids, dists = [], []
+        for s, h in enumerate(self._handles):
+            res = h.collect()
+            base = np.int64(s) * self._cap
+            gids.append(np.where(res.ids >= 0,
+                                 res.ids.astype(np.int64) + base, -1))
+            dists.append(res.dists)
+        return merge_topk(gids, dists, self._k)
+
+
 class ShardedBackend:
     """P independent LSM-VEC shards behind one `VectorBackend` surface.
 
@@ -141,6 +173,9 @@ class ShardedBackend:
         self._n_routed = 0           # global allocation counter (routing)
         self._alloc: list[int] = []  # global ids in allocation order
         self.consolidations = [0] * n_shards   # per-shard maintenance log
+        # overlapped consolidation: per-shard reports already claimed
+        # while other shards' repairs are still in flight
+        self._claimed: dict = {}
 
     def _empty_shard(self, s: int) -> LSMVecIndex:
         return LSMVecIndex(
@@ -211,28 +246,25 @@ class ShardedBackend:
         local = np.where(gid >= 0, gid % self.cfg.cap, -1)
         return shard, local
 
-    def search(self, queries, k: Optional[int] = None, *,
-               rho: Optional[float] = None, ef: Optional[int] = None,
-               use_filter: Optional[bool] = None,
-               n_expand: Optional[int] = None, record_heat: bool = True,
-               use_snapshot: bool = False,
-               pad_to: Optional[int] = None) -> SearchResult:
-        """Fan-out search: every shard answers with its device-side
-        local top-k; the host merges (`merge_topk`).  All per-query
-        knobs forward to the shards unchanged, so the merged result at
+    def dispatch_search(self, queries, k: Optional[int] = None, *,
+                        params: Optional[SearchParams] = None
+                        ) -> ShardedDispatch:
+        """Two-phase fan-out (DESIGN.md §13): enqueue every shard's
+        device-side local top-k *before* blocking on any result — the
+        per-shard devices compute concurrently and `collect()` pays the
+        max shard latency instead of the sum.  All per-query knobs
+        forward to the shards unchanged, so the merged result at
         shards=1 is bit-identical to the single-device index."""
         k = k or self.cfg.k
-        gids, dists = [], []
-        for s, sh in enumerate(self.shards):
-            res = sh.search(queries, k=k, rho=rho, ef=ef,
-                            use_filter=use_filter, n_expand=n_expand,
-                            record_heat=record_heat,
-                            use_snapshot=use_snapshot, pad_to=pad_to)
-            base = np.int64(s) * self.cfg.cap
-            gids.append(np.where(res.ids >= 0,
-                                 res.ids.astype(np.int64) + base, -1))
-            dists.append(res.dists)
-        return merge_topk(gids, dists, k)
+        handles = [sh.dispatch_search(queries, k=k, params=params)
+                   for sh in self.shards]
+        return ShardedDispatch(handles, self.cfg.cap, k)
+
+    def search(self, queries, k: Optional[int] = None, *,
+               params: Optional[SearchParams] = None) -> SearchResult:
+        """Fan-out search: dispatch to every shard, then the stable
+        `merge_topk` host merge."""
+        return self.dispatch_search(queries, k, params=params).collect()
 
     def insert_batch(self, xs, *,
                      pad_to: Optional[int] = None) -> UpdateResult:
@@ -276,10 +308,76 @@ class ShardedBackend:
                                             pad_to=pad_to)
         return UpdateResult(ids=ids, n_applied=int(routable.sum()))
 
+    def maintain(self, op: str, **params) -> MaintenanceReport:
+        """Uniform maintenance over all shards (`VectorBackend`
+        protocol).  Per-shard reports aggregate componentwise; for
+        "reorder" the per-shard permutations compose into one global
+        permutation exactly as the legacy method did."""
+        if op == "consolidate":
+            # overlapped repairs still in flight ARE this consolidation:
+            # claim them, then run the sync trigger on the rest
+            pre = self.poll_maintain(block=True)
+            total = pre.reclaimed if pre is not None else 0
+            total += self.consolidate(ratio=params.get("ratio"))
+            return MaintenanceReport(op=op, applied=total > 0,
+                                     reclaimed=total)
+        if op == "compact":
+            self.compact()
+            return MaintenanceReport(op=op, applied=True)
+        if op == "reorder":
+            perm = self.reorder(window=int(params.get("window", 8)),
+                                lam=float(params.get("lam", 1.0)))
+            return MaintenanceReport(op=op, applied=True, perm=perm)
+        if op == "tier":
+            moved = self.tier_maintain(params["policy"])
+            return MaintenanceReport(
+                op=op, applied=(moved["demoted"] + moved["promoted"]) > 0,
+                demoted=moved["demoted"], promoted=moved["promoted"])
+        raise ValueError(f"unknown maintenance op {op!r}")
+
+    def begin_maintain(self, op: str, **params) -> bool:
+        """Start overlapped consolidation on every shard whose own
+        tombstone-ratio trigger passes (each repair runs on that
+        shard's device, concurrent with fan-out queries).  True iff at
+        least one shard started."""
+        if op != "consolidate":
+            return False
+        started = False
+        for sh in self.shards:
+            started |= sh.begin_maintain(op, **params)
+        return started
+
+    def poll_maintain(self, *, block: bool = False
+                      ) -> Optional[MaintenanceReport]:
+        """Claim finished per-shard repairs; once no shard repair is
+        left in flight, return the aggregated report (None while any is
+        still running, or when nothing was pending at all)."""
+        for s, sh in enumerate(self.shards):
+            rep = sh.poll_maintain(block=block)
+            if rep is not None and rep.applied:
+                self.consolidations[s] += 1
+                self._claimed[s] = rep
+        if any(sh.maintenance_pending for sh in self.shards):
+            return None
+        if not self._claimed:
+            return None
+        claimed, self._claimed = self._claimed, {}
+        return MaintenanceReport(
+            op="consolidate", applied=True,
+            reclaimed=sum(r.reclaimed for r in claimed.values()),
+            detail={"overlapped": True, "shards": sorted(claimed)})
+
+    @property
+    def maintenance_pending(self) -> bool:
+        """A repair is in flight or a finished report awaits claim."""
+        return bool(self._claimed) or any(sh.maintenance_pending
+                                          for sh in self.shards)
+
     def consolidate(self, *, ratio: Optional[float] = None) -> int:
         """Per-shard trigger rule: each shard consolidates iff its own
         tombstone ratio reached `ratio` (None = every shard with any
-        tombstones).  Returns total slots reclaimed."""
+        tombstones).  Returns total slots reclaimed.  Deprecated entry
+        point — prefer `maintain("consolidate", ratio=...)`."""
         total = 0
         for s, sh in enumerate(self.shards):
             got = sh.consolidate(ratio=ratio)

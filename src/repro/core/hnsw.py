@@ -602,7 +602,8 @@ def _connect_upper(cfg: HNSWConfig, state: HNSWState, upper_adj: jax.Array,
 def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
                  keys: jax.Array, *,
                  valid: jax.Array | None = None,
-                 n_expand: int | None = None) -> Tuple[HNSWState, IOStats]:
+                 n_expand: int | None = None,
+                 return_overlay: bool = False):
     """Insert a batch of vectors in one jit — zero per-item host syncs.
 
     Two phases (DESIGN.md §4):
@@ -626,6 +627,13 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
     serving layer can dispatch ragged micro-batches through one traced
     shape.  Valid items must form a *prefix* (padding at the tail) so the
     ids computed from the scanned `count` stay consecutive.
+
+    `return_overlay=True` additionally returns the staged bottom-layer
+    write set `(overlay_rows int32[cap+1, M], overlay_valid bool[cap+1])`
+    — every key the batch touched with its *final* row.  A caller
+    holding a pre-batch dense snapshot can patch it with one
+    `jnp.where(overlay_valid, overlay_rows, snap)` instead of paying a
+    full `lsm.resolve_all` re-resolve (DESIGN.md §13).
     """
     if n_expand is None:
         n_expand = cfg.batch_expand
@@ -790,7 +798,7 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
                                 st.max_level))
         return (st, orows, ovalid), w_keys
 
-    (state, overlay_rows, _), w_keys = jax.lax.scan(
+    (state, overlay_rows, overlay_valid), w_keys = jax.lax.scan(
         step, (state, overlay_rows, overlay_valid),
         (xs, codes, xnorms, lvls, cand_nbrs, valid))
     # one bulk LSM apply: every staged key carries its *final* overlay row,
@@ -809,6 +817,8 @@ def insert_batch(cfg: HNSWConfig, state: HNSWState, xs: jax.Array,
     stats = stats._replace(
         n_vec=stats.n_vec
         + jnp.sum(valid).astype(jnp.int32) * cfg.M)
+    if return_overlay:
+        return state, stats, (overlay_rows, overlay_valid)
     return state, stats
 
 

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import hnsw, iostats, lsm, reorder
-from repro.core.backend import (BackendStats, MemoryBreakdown, SearchResult,
+from repro.core.backend import (BackendStats, MaintenanceReport,
+                                MemoryBreakdown, SearchParams, SearchResult,
                                 ShardStats, UpdateResult)
 from repro.core.iostats import CostModel, IOStats
 from repro.kernels.l2_distance.ops import l2_distance
@@ -61,6 +62,32 @@ def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray,
     return hits / (k * len(t))
 
 
+class DispatchedSearch:
+    """`SearchHandle` over raw device arrays (DESIGN.md §13).
+
+    Holds the jit outputs without forcing a host sync; `collect()` is
+    the one blocking point (`np.asarray`) and slices the padded batch
+    back to `[nq, k]` host-side.
+    """
+
+    __slots__ = ("_ids", "_dists", "_nq", "_k")
+
+    def __init__(self, ids, dists, nq: int, k: int):
+        self._ids, self._dists = ids, dists
+        self._nq, self._k = nq, k
+
+    def is_ready(self) -> bool:
+        try:
+            return bool(self._ids.is_ready() and self._dists.is_ready())
+        except AttributeError:      # already a host array
+            return True
+
+    def collect(self) -> SearchResult:
+        return SearchResult(
+            ids=np.asarray(self._ids)[:self._nq, :self._k],
+            dists=np.asarray(self._dists)[:self._nq, :self._k])
+
+
 class LSMVecIndex:
     """Dynamic disk-based vector index (LSM-VEC).
 
@@ -80,6 +107,11 @@ class LSMVecIndex:
         self._seed = seed
         self.state = state if state is not None else hnsw.init(
             cfg, jax.random.key(seed))
+        # commit the state to its device: committedness is part of the
+        # jit executable cache key, and the overlapped-repair cutover
+        # hands back a committed state — pinning up front means the
+        # first repair never invalidates warmed-up executables
+        self.state = jax.device_put(self.state, self._home_device())
         self._rng = jax.random.key(seed + 1)
         self.io_stats = IOStats.zero()
         # host mirror of state.count: id allocation and maintenance never
@@ -91,6 +123,13 @@ class LSMVecIndex:
         self._version = 0
         self._snap = None
         self._snap_version = -1
+        #: incremental snapshot patches applied (vs full re-resolves)
+        self.snap_patches = 0
+        # overlapped consolidation (DESIGN.md §13): (new_state, io, n)
+        # while a double-buffered repair is in flight, plus the report of
+        # the last repair finished by a write barrier, awaiting claim
+        self._pending_repair = None
+        self._done_report: Optional[MaintenanceReport] = None
 
         cfg_ = self.cfg
 
@@ -110,8 +149,21 @@ class LSMVecIndex:
         def _delete_batch(state, ids):
             return hnsw.delete_batch(cfg_, state, ids)
 
+        @functools.partial(jax.jit, donate_argnums=(0, 4))
+        def _insert_batch_snap(state, xs, keys, valid, snap):
+            state, st, (orows, ovalid) = hnsw.insert_batch(
+                cfg_, state, xs, keys, valid=valid, return_overlay=True)
+            snap = jnp.where(ovalid[:cfg_.cap, None], orows[:cfg_.cap], snap)
+            return state, st, snap
+
         @functools.partial(jax.jit, donate_argnums=0)
         def _consolidate(state):
+            return hnsw.consolidate(cfg_, state)
+
+        # non-donated: the live state keeps serving queries while the
+        # repair computes against it (double-buffer, DESIGN.md §13)
+        @jax.jit
+        def _consolidate_bg(state):
             return hnsw.consolidate(cfg_, state)
 
         @functools.partial(jax.jit, static_argnames=("rho", "use_filter",
@@ -148,9 +200,11 @@ class LSMVecIndex:
 
         self._insert_fn = _insert
         self._insert_batch_fn = _insert_batch
+        self._insert_batch_snap_fn = _insert_batch_snap
         self._delete_fn = _delete
         self._delete_batch_fn = _delete_batch
         self._consolidate_fn = _consolidate
+        self._consolidate_bg_fn = _consolidate_bg
         self._search_fn = _search
         self._search_snap_fn = _search_snap
         self._resolve_fn = _resolve
@@ -166,8 +220,33 @@ class LSMVecIndex:
 
     # -- updates --------------------------------------------------------------
 
+    def _barrier_repair(self) -> None:
+        """Write barrier: force-finish any in-flight overlapped repair.
+
+        Every mutation calls this first, so a consolidation cutover
+        always lands on a write-batch boundary — the invariant that
+        makes WAL replay deterministic (DESIGN.md §13).  The finished
+        report is stashed for the next `poll_maintain` to claim."""
+        if self._pending_repair is not None:
+            self._finish_repair()
+
+    def _finish_repair(self) -> None:
+        """Atomic cutover to the repaired state.  Edge heat recorded by
+        queries that served *during* the repair is dropped with the old
+        state: consolidate zeroes heat on every changed row anyway and
+        heat is a purely advisory signal (tier/reorder triggers)."""
+        new_state, st, n = self._pending_repair
+        self._pending_repair = None
+        self.state = new_state
+        self.io_stats = self.io_stats + st
+        self._version += 1
+        self._done_report = MaintenanceReport(
+            op="consolidate", applied=True, reclaimed=n,
+            detail={"overlapped": True})
+
     def insert(self, x) -> int:
         """Insert one vector; returns its id."""
+        self._barrier_repair()
         self._rng, sub = jax.random.split(self._rng)
         new_id = self._count
         self.state, st = self._insert_fn(
@@ -180,7 +259,7 @@ class LSMVecIndex:
     def insert_batch(self, xs, *,
                      pad_to: Optional[int] = None) -> UpdateResult:
         """Insert a batch in one jit'd device call; returns the new ids
-        as an `UpdateResult` (sequence-compatible with the old list).
+        as an `UpdateResult`.
 
         The whole batch is dispatched as a single donated-buffer
         `hnsw.insert_batch` (vmapped candidate search + scanned writes)
@@ -193,7 +272,14 @@ class LSMVecIndex:
         every call reuses one traced shape regardless of how many items a
         serving micro-batch actually carries (batches larger than `pad_to`
         chunk).  Without it the jit specializes on the exact batch length.
+
+        When the cached read snapshot is fresh, the batch routes through
+        the overlay-returning variant and *patches* the snapshot in the
+        same jit (one `jnp.where` over the staged write set) instead of
+        invalidating it — the next query batch skips the full
+        `lsm.resolve_all` re-resolve (DESIGN.md §13).
         """
+        self._barrier_repair()
         xs = np.asarray(xs, np.float32)
         if xs.size == 0:
             return UpdateResult(ids=np.zeros((0,), np.int64), n_applied=0)
@@ -207,6 +293,7 @@ class LSMVecIndex:
         if len(rest) == 0:
             return UpdateResult(ids=np.asarray(ids, np.int64),
                                 n_applied=len(ids))
+        patch = self._snap is not None and self._snap_version == self._version
         width = pad_to if pad_to else len(rest)
         for s in range(0, len(rest), width):
             chunk = rest[s:s + width]
@@ -217,10 +304,18 @@ class LSMVecIndex:
             self._rng, sub = jax.random.split(self._rng)
             keys = jax.random.split(sub, width)
             ids.extend(range(self._count, self._count + n))
-            self.state, st = self._insert_batch_fn(
-                self.state, jnp.asarray(padded), keys, jnp.asarray(valid))
+            if patch:
+                self.state, st, self._snap = self._insert_batch_snap_fn(
+                    self.state, jnp.asarray(padded), keys,
+                    jnp.asarray(valid), self._snap)
+                self.snap_patches += 1
+            else:
+                self.state, st = self._insert_batch_fn(
+                    self.state, jnp.asarray(padded), keys, jnp.asarray(valid))
             self._count += n
             self._version += 1
+            if patch:
+                self._snap_version = self._version
             self.io_stats = self.io_stats + st
         return UpdateResult(ids=np.asarray(ids, np.int64),
                             n_applied=len(ids))
@@ -230,6 +325,7 @@ class LSMVecIndex:
         sets the tombstone bit — no LSM write, so the cached read
         snapshot stays valid (the returnable mask, not the snapshot,
         hides the node)."""
+        self._barrier_repair()
         self.state, st = self._delete_fn(self.state, jnp.asarray(node_id))
         if not self.cfg.lazy_delete:
             self._version += 1
@@ -244,6 +340,7 @@ class LSMVecIndex:
         dispatch through one traced shape; larger batches chunk.  Lazy
         deletes leave the read snapshot valid (tombstone-bit only).
         """
+        self._barrier_repair()
         ids = np.atleast_1d(np.asarray(ids, np.int32))
         if len(ids) == 0:
             return UpdateResult(ids=np.zeros((0,), np.int64), n_applied=0)
@@ -262,36 +359,33 @@ class LSMVecIndex:
 
     # -- search ---------------------------------------------------------------
 
-    def search(self, queries, k: Optional[int] = None, *,
-               rho: Optional[float] = None, ef: Optional[int] = None,
-               use_filter: Optional[bool] = None,
-               n_expand: Optional[int] = None,
-               record_heat: bool = True,
-               use_snapshot: bool = False,
-               pad_to: Optional[int] = None) -> SearchResult:
-        """Batched ANN search.  queries [B, dim] -> SearchResult
-        (ids [B, k], dists [B, k]; unpacks like the old tuple).
+    def dispatch_search(self, queries, k: Optional[int] = None, *,
+                        params: Optional[SearchParams] = None
+                        ) -> DispatchedSearch:
+        """Enqueue a batched ANN search; no host sync (DESIGN.md §13).
 
-        `n_expand` > 1 expands that many frontier nodes per beam iteration
-        (multi-expansion); 1 is the classic exact-parity path.
+        queries [B, dim] -> `DispatchedSearch` whose `collect()` blocks
+        on the device arrays and returns the final `SearchResult`
+        (ids [B, k], dists [B, k]).  All knobs ride in `params`
+        (`SearchParams`); `None` fields resolve from the config here —
+        the single defaults site.
 
-        `use_snapshot` serves bottom-layer adjacency from the cached dense
-        LSM view (`snapshot()`), re-resolved only after writes — identical
-        results, but each hop is a row gather instead of an LSM probe.
-        `pad_to` zero-pads the query batch to a fixed width with masked
-        lanes so every call shares one traced shape (implies the snapshot
-        path, which is where the mask-aware kernels live).
+        `params.n_expand` > 1 expands that many frontier nodes per beam
+        iteration (multi-expansion); 1 is the classic exact-parity path.
+        `params.use_snapshot` serves bottom-layer adjacency from the
+        cached dense LSM view (`snapshot()`), re-resolved (or overlay-
+        patched) only after writes — identical results, but each hop is
+        a row gather instead of an LSM probe.  `params.pad_to` zero-pads
+        the query batch to a fixed width with masked lanes so every call
+        shares one traced shape (implies the snapshot path, which is
+        where the mask-aware kernels live).
         """
-        cfg = self.cfg
-        k = k or cfg.k
-        rho = cfg.rho if rho is None else float(rho)
-        use_filter = cfg.use_filter if use_filter is None else use_filter
-        ef = ef or cfg.ef_search
-        n_expand = cfg.n_expand if n_expand is None else int(n_expand)
+        p = (params or SearchParams()).resolve(self.cfg)
+        k = k or self.cfg.k
         qs_np = np.atleast_2d(np.asarray(queries, np.float32))
         nq = len(qs_np)
-        if use_snapshot or pad_to is not None:
-            width = pad_to if pad_to else nq
+        if p.use_snapshot or p.pad_to is not None:
+            width = p.pad_to if p.pad_to else nq
             if nq > width:
                 raise ValueError(f"batch {nq} exceeds pad width {width}")
             padded = np.zeros((width, qs_np.shape[1]), np.float32)
@@ -299,25 +393,143 @@ class LSMVecIndex:
             valid = np.arange(width) < nq
             res, heat_delta = self._search_snap_fn(
                 self.state, jnp.asarray(padded), jnp.asarray(valid),
-                self.snapshot(), rho, use_filter, ef, n_expand)
+                self.snapshot(), p.rho, p.use_filter, p.ef, p.n_expand)
         else:
             res, heat_delta = self._search_fn(
-                self.state, jnp.asarray(qs_np), rho, use_filter,
-                ef, n_expand)
-        if record_heat:
+                self.state, jnp.asarray(qs_np), p.rho, p.use_filter,
+                p.ef, p.n_expand)
+        if p.record_heat:
             self.state = self.state._replace(
                 heat=self.state.heat + heat_delta)
         batch_stats = jax.tree.map(lambda a: jnp.sum(a), res.stats)
         self.io_stats = self.io_stats + IOStats(*batch_stats)
-        # slice host-side: device slicing re-specializes on every distinct
-        # residual batch length (a fresh XLA program per shape)
-        return SearchResult(ids=np.asarray(res.ids)[:nq, :k],
-                            dists=np.asarray(res.dists)[:nq, :k])
+        # slicing happens host-side at collect(): device slicing would
+        # re-specialize on every distinct residual batch length
+        return DispatchedSearch(res.ids, res.dists, nq, k)
+
+    def search(self, queries, k: Optional[int] = None, *,
+               params: Optional[SearchParams] = None) -> SearchResult:
+        """Batched ANN search: dispatch + collect in one call."""
+        return self.dispatch_search(queries, k, params=params).collect()
 
     # -- maintenance ----------------------------------------------------------
 
+    def maintain(self, op: str, **params) -> MaintenanceReport:
+        """Uniform maintenance entry point (`VectorBackend` protocol).
+
+        ops: "consolidate" (`ratio=`), "compact", "reorder"
+        (`window=`, `lam=`), "tier" (`policy=`).  The legacy per-op
+        methods remain as thin deprecated wrappers around the same
+        implementations.
+        """
+        if op == "consolidate":
+            # a repair finished by a write barrier (or still in flight)
+            # IS this consolidation — claim it instead of re-running
+            rep = self.poll_maintain(block=True)
+            if rep is not None and rep.applied:
+                return rep
+            n = self.consolidate(ratio=params.get("ratio"))
+            return MaintenanceReport(op=op, applied=n > 0, reclaimed=n)
+        if op == "compact":
+            self.compact()
+            return MaintenanceReport(op=op, applied=True)
+        if op == "reorder":
+            perm = self.reorder(window=int(params.get("window", 8)),
+                                lam=float(params.get("lam", 1.0)))
+            return MaintenanceReport(op=op, applied=True, perm=perm)
+        if op == "tier":
+            moved = self.tier_maintain(params["policy"])
+            return MaintenanceReport(
+                op=op, applied=(moved["demoted"] + moved["promoted"]) > 0,
+                demoted=moved["demoted"], promoted=moved["promoted"])
+        raise ValueError(f"unknown maintenance op {op!r}")
+
+    def begin_maintain(self, op: str, **params) -> bool:
+        """Start an overlapped consolidation (DESIGN.md §13).
+
+        Runs the `lax.map` splice repair against a *non-donated* clone
+        of the live state: queries keep dispatching on `self.state`
+        while the repair computes.  Returns True iff a repair was
+        started (False: unsupported op, one already in flight, or the
+        tombstone-ratio trigger declined).  Cutover happens in
+        `poll_maintain` — or earlier, at the next mutation's write
+        barrier.
+        """
+        if op != "consolidate" or self._pending_repair is not None:
+            return False
+        # scalar sync up front — maintenance cadence, not the hot path
+        n = int(self.state.n_tombstones)
+        if n == 0:
+            return False
+        ratio = params.get("ratio")
+        if ratio is not None and n / max(self.size + n, 1) < ratio:
+            return False
+        spare = self._spare_device()
+        if spare is not None:
+            # run the repair on a spare device so it never serializes
+            # the serving device's execution stream: queries dispatched
+            # during the repair start immediately instead of queueing
+            # behind a cap-sized rebuild.  The repaired state rides a
+            # device-to-device transfer home, enqueued behind the
+            # compute — cutover still just swaps the pointer.
+            src = jax.device_put(self.state, spare)
+            out = self._consolidate_bg_fn(src)
+            new_state, st = jax.device_put(out, self._home_device())
+        else:
+            new_state, st = self._consolidate_bg_fn(self.state)
+        self._pending_repair = (new_state, st, n)
+        return True
+
+    def _home_device(self):
+        """The device the live state is committed to."""
+        try:
+            return next(iter(self.state.count.devices()))
+        except AttributeError:      # pragma: no cover - old jax
+            return jax.local_devices()[0]
+
+    def _spare_device(self):
+        """A local device other than the home device, if one exists —
+        where overlapped repairs run (DESIGN.md §13).  Deterministic
+        (next device in the local ring) so the repair executable
+        compiles exactly once per index."""
+        devs = jax.local_devices()
+        if len(devs) < 2:
+            return None
+        home = self._home_device()
+        try:
+            i = devs.index(home)
+        except ValueError:
+            return None
+        return devs[(i + 1) % len(devs)]
+
+    def poll_maintain(self, *, block: bool = False
+                      ) -> Optional[MaintenanceReport]:
+        """Cut over to a finished repair and return its report.
+
+        Non-blocking by default: returns None while the repair's device
+        work is still running (polled via `jax.Array.is_ready`).  Also
+        returns (and clears) the report of a repair that a write
+        barrier already finished.  `block=True` forces the cutover.
+        """
+        if self._pending_repair is not None:
+            new_state = self._pending_repair[0]
+            ready = getattr(new_state.count, "is_ready", lambda: True)()
+            if not (block or ready):
+                return None
+            self._finish_repair()
+        rep, self._done_report = self._done_report, None
+        return rep
+
+    @property
+    def maintenance_pending(self) -> bool:
+        """A repair is in flight or a finished report awaits claim."""
+        return (self._pending_repair is not None
+                or self._done_report is not None)
+
     def reorder(self, *, window: int = 8, lam: float = 1.0) -> np.ndarray:
-        """Connectivity-aware relayout (§3.4), applied at compaction."""
+        """Connectivity-aware relayout (§3.4), applied at compaction.
+        Deprecated entry point — prefer `maintain("reorder", ...)`."""
+        self._barrier_repair()
         n = self._count
         live, rows = lsm.resolve_all(self.cfg.lsm_cfg, self.state.store, n)
         live_np = np.asarray(live).astype(bool) & (
@@ -330,6 +542,8 @@ class LSMVecIndex:
         return perm
 
     def compact(self) -> None:
+        """Deprecated entry point — prefer `maintain("compact")`."""
+        self._barrier_repair()
         self.state = self.state._replace(
             store=lsm.compact_all(self.cfg.lsm_cfg, self.state.store))
         self._version += 1
@@ -342,7 +556,10 @@ class LSMVecIndex:
         tombstones) has reached it (None = unconditional).  Internal ids
         are never reused, so external id maps stay valid with no
         rewrite.  One scalar sync up front — this is the rare
-        maintenance path, not the serving hot path."""
+        maintenance path, not the serving hot path.  Deprecated entry
+        point — prefer `maintain("consolidate", ratio=...)` or the
+        overlapped `begin_maintain`/`poll_maintain` pair."""
+        self._barrier_repair()
         n = int(self.state.n_tombstones)
         if n == 0:
             return 0
@@ -359,7 +576,9 @@ class LSMVecIndex:
         caches key on (cfg, policy), both static — a serving layer using
         one policy compiles this exactly once.  No-op (zero moves) when
         the hot fraction already sits inside the hysteresis band.
+        Deprecated entry point — prefer `maintain("tier", policy=...)`.
         """
+        self._barrier_repair()
         self.state, st, moved = tier_policy.tier_maintain(
             self.cfg, self.state, policy)
         self.io_stats = self.io_stats + st
@@ -430,6 +649,7 @@ class LSMVecIndex:
         caches too — benchmark trials use this to undo donation).  The
         RNG stream carries over, so a clone inserts with the same
         randomness the original would have."""
+        self._barrier_repair()
         other = LSMVecIndex(self.cfg, seed=self._seed,
                             state=jax.tree.map(jnp.copy, self.state))
         other._rng = self._rng
@@ -451,6 +671,7 @@ class LSMVecIndex:
         and doubles as the checkpoint step, so steps are monotone as
         long as the caller only checkpoints after new writes.
         """
+        self._barrier_repair()
         self.sync()
         tree = lsm.dehydrate(self.state, "state")
         tree["rng"] = jax.random.key_data(self._rng)
@@ -511,6 +732,7 @@ class LSMVecIndex:
 
     def reset_heat(self) -> None:
         """Zero the edge-heat accumulator (after a heat-driven relayout)."""
+        self._barrier_repair()
         self.state = self.state._replace(heat=jnp.zeros_like(self.state.heat))
 
     def trace_counts(self) -> dict:
@@ -523,10 +745,12 @@ class LSMVecIndex:
         return {
             "insert": self._insert_fn._cache_size(),
             "insert_batch": self._insert_batch_fn._cache_size(),
+            "insert_batch_snapshot": self._insert_batch_snap_fn._cache_size(),
             "delete": self._delete_fn._cache_size(),
             "delete_batch": self._delete_batch_fn._cache_size(),
             "search": self._search_fn._cache_size(),
             "search_snapshot": self._search_snap_fn._cache_size(),
+            "consolidate_bg": self._consolidate_bg_fn._cache_size(),
         }
 
     def io_cost(self, model: CostModel = iostats.DISK) -> float:

@@ -44,6 +44,9 @@ class ServeMetrics:
         #: count of absent-id no-ops lives on the backend stats surface
         #: (`VectorBackend.stats().delete_noops`)
         self.delete_noops = 0
+        #: pumps that withheld pending write batches because an
+        #: overlapped repair was in flight (relaxed mode; DESIGN.md §13)
+        self.write_holds = 0
 
     def record_batch(self, op: Op, n: int, latencies, now: float) -> None:
         self._count[op] += n
@@ -68,6 +71,7 @@ class ServeMetrics:
         out: dict = {"wall_s": round(wall, 4),
                      "snapshot_resolves": self.snapshot_resolves,
                      "delete_noops": self.delete_noops,
+                     "write_holds": self.write_holds,
                      "maintenance": dict(self.maintenance_runs),
                      "wal": {"records": self.wal_records,
                              "commits": self.wal_commits}}

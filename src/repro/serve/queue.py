@@ -59,7 +59,12 @@ class CoalescingQueue:
         """Current per-op coalescing windows (a copy)."""
         return dict(self._windows)
 
-    def _gather(self) -> Tuple[List[Request], bool]:
+    def has_pending(self, op: Op) -> bool:
+        """True when at least one request of `op` is queued."""
+        return any(r.op is op for r in self._fifo)
+
+    def _gather(self, only_op: Optional[Op] = None
+                ) -> Tuple[List[Request], bool]:
         """Candidate run for the next micro-batch (not yet removed).
 
         Returns (run, closed): `closed` means the run can never grow —
@@ -69,8 +74,11 @@ class CoalescingQueue:
         only name an id some already-*completed* insert returned (the
         external-id contract), so only same-op arrival order — which
         every run preserves — is semantically load-bearing.
+        `only_op` restricts the run to that op (the engine's write-hold
+        during an overlapped repair, relaxed mode only); the run may be
+        empty.
         """
-        head_op = self._fifo[0].op
+        head_op = self._fifo[0].op if only_op is None else only_op
         cap = self._caps[head_op]
         run: List[Request] = []
         blocked = False
@@ -87,16 +95,26 @@ class CoalescingQueue:
             return run, False
         return run, blocked
 
-    def next_batch(self, now: float, *,
-                   force: bool = False) -> Optional[Tuple[Op, List[Request]]]:
+    def next_batch(self, now: float, *, force: bool = False,
+                   hold_writes: bool = False
+                   ) -> Optional[Tuple[Op, List[Request]]]:
         """Pop the next micro-batch, or None if coalescing should wait.
 
         `now` comes from the engine's clock; `force` releases regardless
-        of window state (used by drain()).
+        of window state (used by drain()).  `hold_writes` (relaxed mode
+        only — strict arrival order is the parity contract and is never
+        reordered) restricts the batch to queries: the engine sets it
+        while an overlapped repair is in flight so write batches — whose
+        barrier would force the cutover early — defer until the repair
+        lands, while queries keep flowing.  Returns None when only
+        writes are pending under a hold.
         """
         if not self._fifo:
             return None
-        run, closed = self._gather()
+        only = Op.QUERY if (hold_writes and not self.strict_order) else None
+        run, closed = self._gather(only)
+        if not run:
+            return None
         op = run[0].op
         expired = now - run[0].t_enqueue >= self._windows[op]
         if not (closed or expired or force):

@@ -49,6 +49,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint import latest_step
+from repro.core.backend import SearchParams
 from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import CoalescingQueue
@@ -81,14 +82,14 @@ class ServeConfig:
     #: strict = serializable in arrival order (parity mode); relaxed =
     #: same-op coalescing across op boundaries (throughput mode)
     strict_order: bool = False
-    k: Optional[int] = None           # search params; None = backend config
-    ef: Optional[int] = None
-    rho: Optional[float] = None
-    n_expand: Optional[int] = None
-    #: None = record edge heat only when the maintenance policy consumes
-    #: it (heat_budget set); the per-batch heat scatter is pure cost
-    #: otherwise
-    record_heat: Optional[bool] = None
+    k: Optional[int] = None           # result width; None = backend config
+    #: typed per-query knobs (`SearchParams`): None fields resolve from
+    #: the backend config at dispatch — the engine adds only its own
+    #: serving-path fields (use_snapshot, pad_to = query_batch) and, when
+    #: `record_heat` is left None, records edge heat only when the
+    #: maintenance policy consumes it (heat_budget or tier_policy set);
+    #: the per-batch heat scatter is pure cost otherwise
+    search: SearchParams = field(default_factory=SearchParams)
     maintenance: MaintenancePolicy = field(default_factory=MaintenancePolicy)
     #: durability spine (DESIGN.md §11).  `wal` turns on write-ahead
     #: logging of every insert/delete micro-batch: tickets defer until
@@ -231,16 +232,17 @@ class ServeEngine:
         qs = np.stack([r.payload for r in reqs])
         if self.backend.snapshot_stale:
             self.metrics.snapshot_resolves += 1
-        record_heat = self.cfg.record_heat
-        if record_heat is None:
+        p = self.cfg.search
+        if p.record_heat is None:
             # both heat consumers need the traversal signal: the reorder
             # trigger and the tier demotion policy (DESIGN.md §12)
-            record_heat = (self.cfg.maintenance.heat_budget is not None
-                           or self.cfg.maintenance.tier_policy is not None)
+            p = p.replace(record_heat=(
+                self.cfg.maintenance.heat_budget is not None
+                or self.cfg.maintenance.tier_policy is not None))
         res = self.backend.search(
-            qs, k=self.cfg.k, ef=self.cfg.ef, rho=self.cfg.rho,
-            n_expand=self.cfg.n_expand, record_heat=record_heat,
-            use_snapshot=True, pad_to=self.cfg.query_batch)
+            qs, k=self.cfg.k,
+            params=p.replace(use_snapshot=True,
+                             pad_to=self.cfg.query_batch))
         ext = np.where(res.ids >= 0,
                        self._int2ext[np.maximum(res.ids, 0)], -1)
         for row_ids, row_d, req in zip(ext, res.dists, reqs):
@@ -405,6 +407,11 @@ class ServeEngine:
         deletes that hit absent/dead internal ids."""
         return self.metrics.delete_noops + self.backend.stats().delete_noops
 
+    def _claim_overlap(self, *, block: bool = False) -> None:
+        """Book a finished overlapped consolidation (DESIGN.md §13)."""
+        if self.maintenance.poll_overlap(block=block):
+            self.metrics.maintenance_runs["consolidate"] += 1
+
     def pump(self, *, force: bool = False) -> Optional[Op]:
         """Execute at most one micro-batch; returns its op, or None.
 
@@ -412,12 +419,34 @@ class ServeEngine:
         Pumps are serialized against each other by `_pump_lock`, but the
         queue lock is held only to pop the batch — submit_* never waits
         behind a device dispatch.
+
+        While an overlapped repair is in flight (relaxed mode), write
+        batches are held back — their write barrier would force the
+        cutover early and stall on the repair — and queries keep
+        flowing against the live state; the hold lifts as soon as the
+        repair lands (polled here every pump).  Under `force` (drain
+        semantics) a held write forces the cutover instead of waiting.
         """
         with self._pump_lock:
+            self._claim_overlap()   # book a landed repair promptly
+            hold = (self.maintenance.overlap_inflight
+                    and not self.cfg.strict_order)
             with self._lock:
                 if self.cfg.adaptive_windows:
                     self._shape_windows()
-                got = self.queue.next_batch(self.clock(), force=force)
+                got = self.queue.next_batch(self.clock(), force=force,
+                                            hold_writes=hold)
+                held_writes = hold and (
+                    self.queue.has_pending(Op.INSERT)
+                    or self.queue.has_pending(Op.DELETE))
+            if held_writes:
+                self.metrics.write_holds += 1
+            if got is None and held_writes and force:
+                # drain must make progress: force the cutover, then
+                # release the held writes normally
+                self._claim_overlap(block=True)
+                with self._lock:
+                    got = self.queue.next_batch(self.clock(), force=True)
             if got is None:
                 # no batch released: still honor the group-commit clock
                 # so deferred acks can't wait behind an idle queue
@@ -467,6 +496,9 @@ class ServeEngine:
             if empty:
                 with self._pump_lock:
                     self._commit_wal(force=True)
+                    # settle any in-flight overlapped repair: after a
+                    # drain the maintenance counters must be final
+                    self._claim_overlap(block=True)
                 return n
             if self.pump(force=True) is not None:
                 n += 1
@@ -492,6 +524,10 @@ class ServeEngine:
         if self.cfg.ckpt_dir is None:
             return None
         with self._pump_lock:
+            # a checkpoint must capture a settled backend: force the
+            # overlapped-repair cutover first so the saved state and the
+            # maintenance counters agree
+            self._claim_overlap(block=True)
             if self.wal is not None:
                 self._commit_wal(force=True)
                 lsn = self.wal.last_lsn
@@ -570,6 +606,9 @@ class ServeEngine:
                 int(md.get("maint_deletes", 0))
         if eng.wal is not None:
             eng._replay(eng.wal.records(after=eng._covering_lsn))
+            # replay may have re-triggered an overlapped repair; settle
+            # it so the recovered engine's state is deterministic
+            eng._claim_overlap(block=True)
         return eng
 
     def _replay(self, records: List[WalRecord]) -> int:

@@ -96,11 +96,11 @@ def test_both_backends_satisfy_the_protocol():
         res = b.search(base[:3], k=5)
         assert isinstance(res, SearchResult)
         assert res.ids.shape == res.dists.shape == (3, 5)
-        ids, dists = res                     # legacy unpack still works
-        np.testing.assert_array_equal(ids, res.ids)
+        with pytest.raises(TypeError):
+            ids, dists = res             # sequence compat is gone
         up = b.insert_batch(make_data(4, seed=1))
-        assert isinstance(up, UpdateResult) and len(up) == 4
-        assert b.delete_batch([int(up[0])]).n_applied == 1
+        assert isinstance(up, UpdateResult) and up.n_applied == 4
+        assert b.delete_batch([int(up.ids[0])]).n_applied == 1
         st = b.stats()
         assert st.n_tombstones == 1 and len(st.shards) >= 1
         assert st.n_tombstones == sum(s.n_tombstones for s in st.shards)

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import hnsw, lsm
+from repro.core.backend import SearchParams
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
 
@@ -31,7 +32,7 @@ def test_insert_batch_ids_size_and_count_mirror():
     data = make_data(256, seed=1)
     idx = LSMVecIndex.build(CFG, data)
     xs = make_data(96, seed=2)
-    ids = idx.insert_batch(xs)
+    ids = idx.insert_batch(xs).ids.tolist()
     assert ids == list(range(256, 256 + 96))
     assert idx.size == 352
     assert idx._count == int(idx.state.count) == 352
@@ -40,8 +41,8 @@ def test_insert_batch_ids_size_and_count_mirror():
 def test_insert_batch_find_self(built_index):
     idx, data = built_index
     new = make_data(32, seed=42) + 100.0     # far-away cluster
-    ids = idx.insert_batch(new)
-    found, _ = idx.search(new, k=1)
+    ids = idx.insert_batch(new).ids.tolist()
+    found = idx.search(new, k=1).ids
     assert set(found[:, 0].tolist()) == set(ids)
 
 
@@ -52,7 +53,7 @@ def test_insert_batch_recall():
     idx.insert_batch(extra)
     allv = np.concatenate([base, extra])
     queries = make_data(24, seed=8)
-    ids, _ = idx.search(queries, k=10)
+    ids = idx.search(queries, k=10).ids
     truth = brute_force_knn(jnp.asarray(allv), jnp.asarray(queries), 10)
     r = recall_at_k(ids, truth)
     assert r >= 0.75, f"post-batch-insert recall {r:.3f}"
@@ -61,7 +62,7 @@ def test_insert_batch_recall():
 def test_insert_batch_rows_written_to_lsm():
     base = make_data(256, seed=5)
     idx = LSMVecIndex.build(CFG, base)
-    ids = idx.insert_batch(make_data(64, seed=6))
+    ids = idx.insert_batch(make_data(64, seed=6)).ids.tolist()
     live, rows = lsm.resolve_all(CFG.lsm_cfg, idx.state.store, idx._count)
     live = np.asarray(live)
     rows = np.asarray(rows)
@@ -74,10 +75,10 @@ def test_insert_batch_cold_start_seeds_per_item():
     cfg = CFG._replace(cap=512)
     idx = LSMVecIndex(cfg, seed=0)
     xs = make_data(96, seed=7)
-    ids = idx.insert_batch(xs)
+    ids = idx.insert_batch(xs).ids.tolist()
     assert ids == list(range(96))
     assert idx.size == 96
-    found, _ = idx.search(xs[:8], k=1)
+    found = idx.search(xs[:8], k=1).ids
     assert (found[:, 0] == np.arange(8)).mean() >= 0.9
 
 
@@ -111,10 +112,10 @@ def test_delete_batch_matches_sequential_deletes():
 def test_delete_batch_removes_from_results(built_index):
     idx, _ = built_index
     queries = make_data(8, seed=10)
-    ids, _ = idx.search(queries, k=1)
+    ids = idx.search(queries, k=1).ids
     victims = sorted(set(ids[:, 0].tolist()))
     idx.delete_batch(victims)
-    ids2, _ = idx.search(queries, k=10)
+    ids2 = idx.search(queries, k=10).ids
     for row in ids2:
         assert not (set(row.tolist()) & set(victims)), "deleted id returned"
 
@@ -127,8 +128,9 @@ def test_multi_expansion_recall_parity(built_index):
     live = np.asarray(idx.state.levels[:len(data)]) >= 0
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
                             live=jnp.asarray(live))
-    ids1, d1 = idx.search(queries, k=10, n_expand=1)
-    ids4, d4 = idx.search(queries, k=10, n_expand=4)
+    ids1 = idx.search(queries, k=10, params=SearchParams(n_expand=1)).ids
+    res4 = idx.search(queries, k=10, params=SearchParams(n_expand=4))
+    ids4, d4 = res4.ids, res4.dists
     r1 = recall_at_k(ids1, truth)
     r4 = recall_at_k(ids4, truth)
     assert abs(r4 - r1) <= 0.01, (r1, r4)
@@ -150,8 +152,10 @@ def test_multi_expansion_parity_on_damaged_graph():
     queries = make_data(24, seed=21)
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
                             live=jnp.asarray(live))
-    r1 = recall_at_k(idx.search(queries, k=10, n_expand=1).ids, truth)
-    r4 = recall_at_k(idx.search(queries, k=10, n_expand=4).ids, truth)
+    r1 = recall_at_k(
+        idx.search(queries, k=10, params=SearchParams(n_expand=1)).ids, truth)
+    r4 = recall_at_k(
+        idx.search(queries, k=10, params=SearchParams(n_expand=4)).ids, truth)
     assert r4 >= r1 - 0.01, (r1, r4)
 
 
@@ -161,10 +165,12 @@ def test_multi_expansion_visits_no_fewer_nodes(built_index):
     idx, _ = built_index
     queries = make_data(16, seed=12)
     idx.reset_stats()
-    idx.search(queries, k=10, n_expand=1, record_heat=False)
+    idx.search(queries, k=10,
+               params=SearchParams(n_expand=1, record_heat=False))
     hops1 = int(idx.io_stats.n_hops)
     idx.reset_stats()
-    idx.search(queries, k=10, n_expand=4, record_heat=False)
+    idx.search(queries, k=10,
+               params=SearchParams(n_expand=4, record_heat=False))
     hops4 = int(idx.io_stats.n_hops)
     idx.reset_stats()
     assert hops4 >= hops1
@@ -177,11 +183,11 @@ def test_insert_batch_padded_matches_exact_shape():
     data = make_data(256, seed=30)
     idx = LSMVecIndex.build(CFG, data)
     xs = make_data(20, seed=31)
-    ids = idx.insert_batch(xs, pad_to=32)
+    ids = idx.insert_batch(xs, pad_to=32).ids.tolist()
     assert ids == list(range(256, 276))
     assert idx.size == 276
     assert idx._count == int(idx.state.count) == 276
-    found, _ = idx.search(xs, k=1)
+    found = idx.search(xs, k=1).ids
     assert (found[:, 0] == np.array(ids)).mean() >= 0.9
     # padding ids were never allocated: nothing lives past the last valid
     live, rows = lsm.resolve_all(CFG.lsm_cfg, idx.state.store, CFG.cap)
@@ -197,12 +203,12 @@ def test_insert_batch_padded_no_retrace_across_occupancy():
     idx = LSMVecIndex(cfg, seed=0)
     seed_gap = LSMVecIndex.BATCH_MIN_GRAPH - idx.size
     ids = idx.insert_batch(make_data(seed_gap, seed=32), pad_to=32)
-    assert ids == list(range(seed_gap))
+    assert ids.ids.tolist() == list(range(seed_gap))
     assert idx.trace_counts()["insert_batch"] == 0   # all seeded per-item
     before = None
     for occupancy, seed in ((32, 33), (7, 34), (1, 35), (32, 36)):
         ids = idx.insert_batch(make_data(occupancy, seed=seed), pad_to=32)
-        assert len(ids) == occupancy
+        assert ids.n_applied == occupancy
         counts = idx.trace_counts()["insert_batch"]
         if before is not None:
             assert counts == before, "padded insert retraced"
@@ -210,7 +216,7 @@ def test_insert_batch_padded_no_retrace_across_occupancy():
     assert before == 1
     # ragged chunking: 70 items through width 32 = 3 calls, same trace
     ids = idx.insert_batch(make_data(70, seed=37), pad_to=32)
-    assert len(ids) == 70 and idx.trace_counts()["insert_batch"] == 1
+    assert ids.n_applied == 70 and idx.trace_counts()["insert_batch"] == 1
 
 
 def test_delete_batch_padded_and_masked_ids():
@@ -242,18 +248,20 @@ def test_search_snapshot_bit_parity(built_index):
     the per-hop LSM path returns, and padded lanes record no heat/stats."""
     idx, _ = built_index
     queries = make_data(24, seed=50)
-    ids_a, d_a = idx.search(queries, k=10, record_heat=False)
-    ids_b, d_b = idx.search(queries, k=10, record_heat=False,
-                            use_snapshot=True, pad_to=32)
+    res_a = idx.search(queries, k=10, params=SearchParams(record_heat=False))
+    res_b = idx.search(queries, k=10, params=SearchParams(
+        record_heat=False, use_snapshot=True, pad_to=32))
+    ids_a, d_a = res_a.ids, res_a.dists
+    ids_b, d_b = res_b.ids, res_b.dists
     np.testing.assert_array_equal(ids_a, ids_b)
     np.testing.assert_array_equal(d_a, d_b)
     # stats parity between the two paths on identical queries
     idx.reset_stats()
-    idx.search(queries, k=10, record_heat=False)
+    idx.search(queries, k=10, params=SearchParams(record_heat=False))
     direct = jax.tree.map(int, idx.io_stats)
     idx.reset_stats()
-    idx.search(queries, k=10, record_heat=False, use_snapshot=True,
-               pad_to=32)
+    idx.search(queries, k=10, params=SearchParams(
+        record_heat=False, use_snapshot=True, pad_to=32))
     snap = jax.tree.map(int, idx.io_stats)
     idx.reset_stats()
     assert direct == snap
@@ -264,12 +272,14 @@ def test_snapshot_invalidated_on_writes(built_index):
     must be findable through the snapshot path immediately."""
     idx, _ = built_index
     new = make_data(4, seed=51) + 250.0
-    ids = idx.insert_batch(new, pad_to=8)
-    found, _ = idx.search(new, k=1, use_snapshot=True, pad_to=8)
+    ids = idx.insert_batch(new, pad_to=8).ids.tolist()
+    found = idx.search(
+        new, k=1, params=SearchParams(use_snapshot=True, pad_to=8)).ids
     assert set(found[:, 0].tolist()) == set(ids)
     victim = ids[0]
     idx.delete_batch([victim], pad_to=8)
-    found2, _ = idx.search(new[:1], k=5, use_snapshot=True, pad_to=8)
+    found2 = idx.search(
+        new[:1], k=5, params=SearchParams(use_snapshot=True, pad_to=8)).ids
     assert victim not in found2[0].tolist()
 
 
@@ -277,12 +287,12 @@ def test_mixed_batch_and_single_updates():
     """Batched and per-item updates interleave cleanly."""
     base = make_data(300, seed=13)
     idx = LSMVecIndex.build(CFG, base)
-    ids = idx.insert_batch(make_data(40, seed=14))
+    ids = idx.insert_batch(make_data(40, seed=14)).ids.tolist()
     one = idx.insert(make_data(1, seed=15)[0])
     assert one == ids[-1] + 1
     idx.delete_batch(ids[:10])
     idx.delete(ids[10])
     assert idx.size == 300 + 40 + 1 - 11
     q = make_data(4, seed=16)
-    ids_s, d = idx.search(q, k=5)
+    d = idx.search(q, k=5).dists
     assert np.isfinite(d).all()

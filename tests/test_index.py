@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import hnsw
+from repro.core.backend import SearchParams
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 
 
@@ -34,16 +35,16 @@ def built_index():
 def test_bulk_build_recall(built_index):
     idx, data = built_index
     queries = make_data(32, seed=7)
-    ids, dists = idx.search(queries, k=10)
+    res = idx.search(queries, k=10)
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10)
-    r = recall_at_k(ids, truth)
+    r = recall_at_k(res.ids, truth)
     assert r >= 0.85, f"bulk-build recall {r:.3f} too low"
 
 
 def test_search_returns_sorted_distances(built_index):
     idx, _ = built_index
     queries = make_data(8, seed=9)
-    _, dists = idx.search(queries, k=10)
+    dists = idx.search(queries, k=10).dists
     for row in dists:
         assert np.all(np.diff(row) >= -1e-5)
 
@@ -53,7 +54,7 @@ def test_insert_then_find_self():
     idx = LSMVecIndex.build(CFG, data)
     new = make_data(8, seed=42) + 100.0  # far-away cluster
     ids = [idx.insert(x) for x in new]
-    found, _ = idx.search(new, k=1)
+    found = idx.search(new, k=1).ids
     assert set(found[:, 0].tolist()) == set(ids)
 
 
@@ -67,7 +68,7 @@ def test_incremental_insert_recall():
     assert idx.size == 640
     allv = np.concatenate([base, extra])
     queries = make_data(24, seed=8)
-    ids, _ = idx.search(queries, k=10)
+    ids = idx.search(queries, k=10).ids
     truth = brute_force_knn(jnp.asarray(allv), jnp.asarray(queries), 10)
     r = recall_at_k(ids, truth)
     assert r >= 0.75, f"post-insert recall {r:.3f}"
@@ -77,11 +78,11 @@ def test_delete_removes_from_results():
     data = make_data(256, seed=4)
     idx = LSMVecIndex.build(CFG, data)
     queries = data[:8]
-    ids, _ = idx.search(queries, k=1)
+    ids = idx.search(queries, k=1).ids
     victims = ids[:, 0].tolist()
     for v in set(victims):
         idx.delete(v)
-    ids2, _ = idx.search(queries, k=10)
+    ids2 = idx.search(queries, k=10).ids
     for row in ids2:
         assert not (set(row.tolist()) & set(victims)), "deleted id returned"
 
@@ -99,7 +100,7 @@ def test_delete_preserves_recall_on_rest():
     queries = make_data(24, seed=6)
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
                             live=jnp.asarray(live))
-    ids, _ = idx.search(queries, k=10)
+    ids = idx.search(queries, k=10).ids
     r = recall_at_k(ids, truth)
     assert r >= 0.7, f"post-delete recall {r:.3f}"
 
@@ -112,11 +113,11 @@ def test_sampling_reduces_vector_fetches():
     queries = make_data(32, seed=11)
 
     idx.reset_stats()
-    ids_full, _ = idx.search(queries, k=10, rho=1.0)
+    ids_full = idx.search(queries, k=10, params=SearchParams(rho=1.0)).ids
     full_fetches = int(idx.io_stats.n_vec)
 
     idx.reset_stats()
-    ids_samp, _ = idx.search(queries, k=10, rho=0.7)
+    ids_samp = idx.search(queries, k=10, params=SearchParams(rho=0.7)).ids
     samp_fetches = int(idx.io_stats.n_vec)
 
     assert samp_fetches < full_fetches
@@ -132,7 +133,7 @@ def test_hash_filter_counts_skips():
     idx = LSMVecIndex.build(cfg, data)
     queries = make_data(16, seed=13)
     idx.reset_stats()
-    idx.search(queries, k=10, use_filter=True)
+    idx.search(queries, k=10, params=SearchParams(use_filter=True))
     assert int(idx.io_stats.n_filtered) >= 0
     assert int(idx.io_stats.n_vec) > 0
 
@@ -158,12 +159,12 @@ def test_reorder_preserves_results_and_improves_layout():
     data = make_data(512, seed=16)
     idx = LSMVecIndex.build(CFG, data)
     queries = make_data(16, seed=17)
-    ids_before, d_before = idx.search(queries, k=5)
+    d_before = idx.search(queries, k=5).dists
     d_map_before = {tuple(np.round(r, 3)) for r in d_before}
     idx.search(queries, k=5)  # accumulate heat
     perm = idx.reorder(window=8, lam=1.0)
     assert sorted(perm.tolist()) == list(range(512))  # valid permutation
-    ids_after, d_after = idx.search(queries, k=5)
+    d_after = idx.search(queries, k=5).dists
     # distances identical (same vectors, relabeled ids)
     np.testing.assert_allclose(np.sort(d_after, axis=1),
                                np.sort(d_before, axis=1), rtol=1e-4,
@@ -177,5 +178,5 @@ def test_update_after_reorder():
     idx.reorder()
     new_vec = make_data(1, seed=20)[0] + 50.0
     nid = idx.insert(new_vec)
-    found, _ = idx.search(new_vec[None, :], k=1)
+    found = idx.search(new_vec[None, :], k=1).ids
     assert int(found[0, 0]) == nid

@@ -43,7 +43,7 @@ def test_lazy_delete_masks_results_without_graph_writes():
     assert int(idx.state.store.write_seq) == seq_before
     assert idx.size == 512 - len(victims)
     assert idx.n_tombstones == len(victims)
-    ids, _ = idx.search(data[victims], k=10)
+    ids = idx.search(data[victims], k=10).ids
     assert not (set(ids.flatten().tolist()) & set(victims)), \
         "tombstoned id returned"
 
@@ -63,7 +63,7 @@ def test_bridge_delete_keeps_graph_connected_before_consolidation():
     queries = make_data(32, seed=2)
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
                             live=jnp.asarray(live))
-    ids, _ = idx.search(queries, k=10)
+    ids = idx.search(queries, k=10).ids
     assert not (set(ids.flatten().tolist()) & set(bridges))
     r = recall_at_k(ids, truth)
     assert r >= 0.75, f"bridge deletes disconnected the graph: {r:.3f}"
@@ -114,7 +114,7 @@ def test_consolidate_reclaims_and_search_is_tombstone_free():
     queries = make_data(24, seed=6)
     truth = brute_force_knn(jnp.asarray(data), jnp.asarray(queries), 10,
                             live=jnp.asarray(live))
-    ids, _ = idx.search(queries, k=10)
+    ids = idx.search(queries, k=10).ids
     assert not (set(ids.flatten().tolist()) & set(victims.tolist()))
     assert recall_at_k(ids, truth) >= 0.7
 
@@ -124,7 +124,7 @@ def test_consolidate_entry_repair_and_updates_after():
     idx = LSMVecIndex.build(CFG, data)
     entry = int(idx.state.entry)
     idx.delete(entry)                   # tombstone the entry node itself
-    ids, _ = idx.search(data[entry][None, :], k=1)
+    ids = idx.search(data[entry][None, :], k=1).ids
     assert int(ids[0, 0]) != entry      # routable but not returnable
     idx.consolidate()
     assert int(idx.state.entry) != entry
@@ -132,7 +132,7 @@ def test_consolidate_entry_repair_and_updates_after():
     # the index keeps working: insert + exact self-search
     x = make_data(1, seed=8)[0] + 60.0
     nid = idx.insert(x)
-    found, _ = idx.search(x[None, :], k=1)
+    found = idx.search(x[None, :], k=1).ids
     assert int(found[0, 0]) == nid
 
 
@@ -291,7 +291,8 @@ def test_search_stays_exactly_k_deep_under_tombstones():
     idx = LSMVecIndex.build(CFG, data)
     rng = np.random.default_rng(2)
     idx.delete_batch(rng.choice(512, 200, replace=False).astype(np.int32))
-    ids, dists = idx.search(make_data(16, seed=16), k=10)
+    res = idx.search(make_data(16, seed=16), k=10)
+    ids, dists = res.ids, res.dists
     assert (ids >= 0).all(), "returnable re-pack under-filled the top-k"
     assert np.isfinite(dists).all()
     for row in dists:

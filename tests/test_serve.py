@@ -174,8 +174,8 @@ def test_strict_stream_parity_with_bare_index():
     serve_q = iter([t.result() for op, t in tickets if op == "q"])
     for op, items in expected:
         if op == "q":
-            ids, dists = idx_bare.search(np.stack(items), k=CFG.k)
-            for row_ids, row_d in zip(ids, dists):
+            bare = idx_bare.search(np.stack(items), k=CFG.k)
+            for row_ids, row_d in zip(bare.ids, bare.dists):
                 res = next(serve_q)
                 np.testing.assert_array_equal(res.ids, row_ids)
                 np.testing.assert_array_equal(res.dists, row_d)
@@ -206,6 +206,12 @@ def test_serve_zero_retraces_after_warmup():
     for i in range(5):
         eng.submit_query(base[i])
     eng.submit_delete(int(rng.integers(0, 256)))
+    eng.drain()
+    # second wave: an insert while the query snapshot is current compiles
+    # the incremental patch path (full resolve was compiled above)
+    eng.submit_query(base[0])
+    eng.drain()
+    eng.submit_insert(fresh[63])
     eng.drain()
     warm = idx.trace_counts()
     # sustained ragged traffic: occupancies vary, shapes must not
@@ -245,7 +251,7 @@ def test_serve_recall_matches_sequential_baseline():
     truth = brute_force_knn(allv, queries, 10, live=live)
     found = np.stack([t.result().ids for t in tickets])
     r_serve = recall_at_k(found, truth)
-    direct_ids, _ = idx.search(queries, k=10)
+    direct_ids = idx.search(queries, k=10).ids
     r_direct = recall_at_k(direct_ids, truth)
     assert r_serve == pytest.approx(r_direct, abs=1e-9)
     assert r_serve >= 0.7

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import hnsw, lsm
 from repro.core.distributed import ShardedBackend
+from repro.core.backend import SearchParams
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
 from repro.kernels import gather_l2, gather_l2_q8
@@ -38,7 +39,7 @@ def _vecs(n, seed=0, dim=None):
 def _warm(idx, queries, rounds=2):
     """Accumulate traversal heat so the policy has a signal to rank."""
     for _ in range(rounds):
-        idx.search(queries, record_heat=True)
+        idx.search(queries, params=SearchParams(record_heat=True))
 
 
 def _skew_queries(base, n_q, seed=1):
@@ -156,11 +157,13 @@ def test_tiered_recall_holds_floor_and_rerank_fetches_cold_rows():
     truth = brute_force_knn(base, q, CFG.k)
     idx = LSMVecIndex.build(CFG, base)
     _warm(idx, q)
-    recall_dense = recall_at_k(idx.search(q, record_heat=False).ids, truth)
+    recall_dense = recall_at_k(
+        idx.search(q, params=SearchParams(record_heat=False)).ids, truth)
     idx.tier_maintain(POL)
     assert idx.stats().memory.n_cold > 0
     idx.reset_stats()
-    recall_tier = recall_at_k(idx.search(q, record_heat=False).ids, truth)
+    recall_tier = recall_at_k(
+        idx.search(q, params=SearchParams(record_heat=False)).ids, truth)
     assert recall_tier >= 0.95 * recall_dense
     # rerank's exact re-fetch of cold candidates is modeled disk IO
     assert int(idx.io_stats.n_vec) > 0
@@ -232,8 +235,8 @@ def test_checkpoint_restore_bit_exact_with_cold_lane(tmp_path):
     assert st.memory.n_cold > 0                      # cold lane survived
     q = _vecs(16, seed=24)
     np.testing.assert_array_equal(
-        np.asarray(idx.search(q, record_heat=False).ids),
-        np.asarray(idx2.search(q, record_heat=False).ids))
+        np.asarray(idx.search(q, params=SearchParams(record_heat=False)).ids),
+        np.asarray(idx2.search(q, params=SearchParams(record_heat=False)).ids))
 
 
 def test_sharded_checkpoint_restore_bit_exact_with_cold_lane(tmp_path):
@@ -331,7 +334,9 @@ def test_bulk_build_tiny_clustered_shard_fully_reachable(n):
     q = (base + np.random.default_rng(32).normal(
         0, 0.05, base.shape)).astype(np.float32)
     truth = brute_force_knn(base, q, cfg.k)
-    assert recall_at_k(idx.search(q, record_heat=False).ids, truth) >= 0.9
+    assert recall_at_k(
+        idx.search(q, params=SearchParams(record_heat=False)).ids,
+        truth) >= 0.9
 
 
 def test_bulk_build_tiny_shards_inside_sharded_backend():
