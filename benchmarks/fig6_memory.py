@@ -33,16 +33,15 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax                                                     # noqa: E402
-import jax.numpy as jnp                                        # noqa: E402
+import jax
+import jax.numpy as jnp
 
-from _util import write_bench_json                             # noqa: E402
-from repro.core import hnsw                                    # noqa: E402
-from repro.core.backend import SearchParams                    # noqa: E402
-from repro.core.index import (LSMVecIndex, brute_force_knn,    # noqa: E402
-                              recall_at_k)
-from repro.data.synth import make_clustered_vectors            # noqa: E402
-from repro.tier import TierPolicy                              # noqa: E402
+from _util import write_bench_json
+from repro.core import hnsw
+from repro.core.backend import SearchParams
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+from repro.tier import TierPolicy
 
 SCHEMA = {
     "meta": ("mode", "backend", "n", "dim", "n_queries", "head_frac",

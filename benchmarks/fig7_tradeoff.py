@@ -10,7 +10,6 @@ ceiling sits below the graph systems'.
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import DISK, default_cfg
 from repro.core import iostats

@@ -62,22 +62,17 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax                                                     # noqa: E402
-import jax.numpy as jnp                                        # noqa: E402
+import jax
 
-from _util import write_bench_json                             # noqa: E402
-from repro.core import hnsw                                    # noqa: E402
-from repro.core.backend import SearchParams, shard_of_seq      # noqa: E402
-from repro.core.distributed import (ShardedBackend,            # noqa: E402
-                                    ShardedDispatch)
-from repro.core.index import (LSMVecIndex, brute_force_knn,    # noqa: E402
-                              recall_at_k)
-from repro.data.synth import make_clustered_vectors            # noqa: E402
-from repro.ft import (FailureInjector, RestartPolicy,          # noqa: E402
-                      run_with_recovery, verify_acked_writes)
-from repro.serve import (MaintenancePolicy, Op, ServeConfig,   # noqa: E402
-                         ServeEngine, WalConfig)
-from repro.tier import TierPolicy                              # noqa: E402
+from _util import write_bench_json
+from repro.core import hnsw
+from repro.core.backend import SearchParams, shard_of_seq
+from repro.core.distributed import ShardedBackend, ShardedDispatch
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
+from repro.ft import FailureInjector, RestartPolicy, run_with_recovery, verify_acked_writes
+from repro.serve import MaintenancePolicy, ServeConfig, ServeEngine, WalConfig
+from repro.tier import TierPolicy
 
 SCHEMA = {
     "meta": ("mode", "backend", "shards", "tier", "n_base", "n_ops", "mix",
@@ -482,7 +477,7 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
     warm_vecs2 = make_clustered_vectors(n_warm2, dim=dim, seed=seed + 10)
 
     wall = float("inf")
-    idx = eng = warm_traces = load_traces = None
+    eng = warm_traces = load_traces = None
     for trial in range(SERVE_TRIALS):
         # fresh copy: the previous trial's donated jits consumed its state
         idx_t = backend0.clone()
@@ -541,7 +536,7 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         if wall_t < wall:
             wall = wall_t
         # keep the last trial's artifacts for the recall/reference phases
-        idx, eng = idx_t, eng_t
+        eng = eng_t
         warm_traces, load_traces = warm_t, dict(idx_t.trace_counts())
 
     new_traces = {k: load_traces[k] - warm_traces.get(k, 0)

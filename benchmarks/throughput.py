@@ -31,12 +31,11 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from _util import write_bench_json                            # noqa: E402
-from repro.core import hnsw                                   # noqa: E402
-from repro.core.backend import SearchParams                   # noqa: E402
-from repro.core.index import (LSMVecIndex, brute_force_knn,   # noqa: E402
-                              recall_at_k)
-from repro.data.synth import make_clustered_vectors           # noqa: E402
+from _util import write_bench_json
+from repro.core import hnsw
+from repro.core.backend import SearchParams
+from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
+from repro.data.synth import make_clustered_vectors
 
 SCHEMA = {
     "meta": ("mode", "backend", "n_base", "batch", "n_queries", "dim",

@@ -1,8 +1,12 @@
 """Atomic, shard-aware checkpointing."""
 
-from repro.checkpoint.ckpt import (latest_step, load_arrays,
-                                   restore_checkpoint, save_checkpoint,
-                                   sweep_stale_tmp)
+from repro.checkpoint.ckpt import (
+    latest_step,
+    load_arrays,
+    restore_checkpoint,
+    save_checkpoint,
+    sweep_stale_tmp,
+)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "load_arrays", "sweep_stale_tmp"]

@@ -14,9 +14,16 @@
 - baselines  — DiskANN-like and SPFresh-like comparison systems
 """
 
-from repro.core.backend import (BackendStats, MaintenanceReport,
-                                SearchHandle, SearchParams, SearchResult,
-                                ShardStats, UpdateResult, VectorBackend)
+from repro.core.backend import (
+    BackendStats,
+    MaintenanceReport,
+    SearchHandle,
+    SearchParams,
+    SearchResult,
+    ShardStats,
+    UpdateResult,
+    VectorBackend,
+)
 from repro.core.hnsw import HNSWConfig, HNSWState
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.core.iostats import DISK, CostModel, IOStats, tpu_hbm_model

@@ -21,10 +21,10 @@ are benchmark substrates, not TPU targets.
 from __future__ import annotations
 
 import heapq
-from typing import Optional, Tuple
+from typing import Tuple
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.iostats import IOStats
 from repro.kernels.l2_distance.ops import l2_distance

@@ -20,8 +20,8 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.iostats import IOStats
 from repro.kernels.l2_distance.ops import l2_distance

@@ -29,9 +29,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt
 from repro.core import hnsw
-from repro.core.backend import (BackendStats, MaintenanceReport,
-                                SearchParams, SearchResult, UpdateResult,
-                                merge_topk, shard_of_seq)
+from repro.core.backend import (
+    BackendStats,
+    MaintenanceReport,
+    SearchParams,
+    SearchResult,
+    UpdateResult,
+    merge_topk,
+    shard_of_seq,
+)
 from repro.core.index import LSMVecIndex
 from repro.kernels.l2_distance.ref import l2_distance_ref
 
@@ -287,8 +293,9 @@ class ShardedBackend:
             gids[rows] = np.asarray(res.ids, np.int64) \
                 + np.int64(s) * self.cfg.cap
         # allocation order = submission order (ids are assigned in the
-        # order each shard's sub-batch preserves)
-        self._alloc.extend(int(g) for g in gids)
+        # order each shard's sub-batch preserves); one batched host
+        # conversion, not one numpy-scalar unboxing per id
+        self._alloc.extend(gids.tolist())
         return UpdateResult(ids=gids, n_applied=n)
 
     def delete_batch(self, ids, *,

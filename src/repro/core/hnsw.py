@@ -14,8 +14,6 @@ builds (an exact-kNN bottom graph, the offline analogue).
 
 from __future__ import annotations
 
-import functools
-import math
 from typing import NamedTuple, Tuple
 
 import jax
@@ -1490,7 +1488,10 @@ def memory_breakdown(cfg: HNSWConfig, state: HNSWState,
     """
     if counts is None:
         counts = memory_counts(state)
-    n_routable, n_hot, n_upper = (int(c) for c in counts)
+    # one fused fetch instead of three scalar unboxings; stats() passes
+    # pre-fetched host counts so the serve path never reaches the device
+    n_routable, n_hot, n_upper = map(
+        int, jax.device_get(counts))  # sync-ok: fused accounting fetch
     n_cold = n_routable - n_hot
     if not cfg.tier:
         n_hot, n_cold = n_routable, 0

@@ -17,10 +17,17 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import hnsw, iostats, lsm, reorder
-from repro.core.backend import (BackendStats, MaintenanceReport,
-                                MemoryBreakdown, SearchParams, SearchResult,
-                                ShardStats, UpdateResult)
+from repro.core.backend import (
+    BackendStats,
+    MaintenanceReport,
+    MemoryBreakdown,
+    SearchParams,
+    SearchResult,
+    ShardStats,
+    UpdateResult,
+)
 from repro.core.iostats import CostModel, IOStats
+from repro.core.sentinel import declared_sync
 from repro.kernels.l2_distance.ops import l2_distance
 from repro.tier import policy as tier_policy
 
@@ -83,9 +90,11 @@ class DispatchedSearch:
             return True
 
     def collect(self) -> SearchResult:
-        return SearchResult(
-            ids=np.asarray(self._ids)[:self._nq, :self._k],
-            dists=np.asarray(self._dists)[:self._nq, :self._k])
+        with declared_sync("search result materialization"):
+            # sync-ok: collect() is the protocol's declared result sync point
+            return SearchResult(
+                ids=np.asarray(self._ids)[:self._nq, :self._k],
+                dists=np.asarray(self._dists)[:self._nq, :self._k])
 
 
 class LSMVecIndex:
@@ -457,8 +466,9 @@ class LSMVecIndex:
         """
         if op != "consolidate" or self._pending_repair is not None:
             return False
-        # scalar sync up front — maintenance cadence, not the hot path
-        n = int(self.state.n_tombstones)
+        with declared_sync("maintenance cadence scalar"):
+            # sync-ok: scalar sync up front — maintenance cadence, not hot path
+            n = int(self.state.n_tombstones)
         if n == 0:
             return False
         ratio = params.get("ratio")
@@ -532,11 +542,14 @@ class LSMVecIndex:
         self._barrier_repair()
         n = self._count
         live, rows = lsm.resolve_all(self.cfg.lsm_cfg, self.state.store, n)
-        live_np = np.asarray(live).astype(bool) & (
-            np.asarray(self.state.levels[:n]) >= 0)
-        perm = reorder.gorder_permutation(
-            np.asarray(rows), np.asarray(self.state.heat[:n]),
-            window=window, lam=lam, live=live_np)
+        with declared_sync("reorder host relayout"):
+            # sync-ok: gorder relayout is a host-side maintenance pass
+            live_np = np.asarray(live).astype(bool) & (
+                np.asarray(self.state.levels[:n]) >= 0)
+            # sync-ok: gorder relayout is a host-side maintenance pass
+            perm = reorder.gorder_permutation(
+                np.asarray(rows), np.asarray(self.state.heat[:n]),
+                window=window, lam=lam, live=live_np)
         self.state = reorder.apply_permutation(self.cfg, self.state, perm)
         self._version += 1
         return perm
@@ -560,7 +573,8 @@ class LSMVecIndex:
         point — prefer `maintain("consolidate", ratio=...)` or the
         overlapped `begin_maintain`/`poll_maintain` pair."""
         self._barrier_repair()
-        n = int(self.state.n_tombstones)
+        with declared_sync("maintenance cadence scalar"):
+            n = int(self.state.n_tombstones)  # sync-ok: maintenance cadence
         if n == 0:
             return 0
         if ratio is not None and n / max(self.size + n, 1) < ratio:
@@ -621,9 +635,11 @@ class LSMVecIndex:
         count (the old `LSMVecIndex.delete_noops` / engine-property pair
         could drift); serving metrics must read it from here.
         """
-        live, nt, noops, counts = jax.device_get(
-            (self.state.n_live, self.state.n_tombstones,
-             self.state.n_delete_noops, hnsw.memory_counts(self.state)))
+        with declared_sync("stats surface fetch"):
+            # sync-ok: the single fused device fetch of the stats surface
+            live, nt, noops, counts = jax.device_get(
+                (self.state.n_live, self.state.n_tombstones,
+                 self.state.n_delete_noops, hnsw.memory_counts(self.state)))
         live, nt, noops = int(live), int(nt), int(noops)
         mem = hnsw.memory_breakdown(self.cfg, self.state, counts)
         shard = ShardStats(size=live, n_tombstones=nt, delete_noops=noops,
@@ -634,7 +650,8 @@ class LSMVecIndex:
 
     def heat_total(self) -> int:
         """Accumulated edge-heat counts (one scalar sync)."""
-        return int(jnp.sum(self.state.heat))
+        with declared_sync("heat trigger scalar"):
+            return int(jnp.sum(self.state.heat))  # sync-ok: heat cadence
 
     def initial_ids(self) -> np.ndarray:
         """Internal ids in allocation order, for seeding an external-id
@@ -642,7 +659,9 @@ class LSMVecIndex:
         return np.arange(self._count, dtype=np.int64)
 
     def sync(self) -> None:
-        jax.block_until_ready(self.state.count)
+        with declared_sync("explicit barrier"):
+            # sync-ok: sync() is the protocol's explicit barrier API
+            jax.block_until_ready(self.state.count)
 
     def clone(self) -> "LSMVecIndex":
         """Deep-copy the device state into a fresh index (fresh jit
@@ -761,13 +780,16 @@ class LSMVecIndex:
         return hnsw.memory_breakdown(self.cfg, self.state)
 
     def memory_bytes(self) -> int:
-        return int(self.memory_breakdown().total)
+        with declared_sync("memory accounting scalar"):
+            return int(self.memory_breakdown().total)
 
     @property
     def size(self) -> int:
-        return int(self.state.n_live)
+        with declared_sync("live-count scalar"):
+            return int(self.state.n_live)  # sync-ok: declared accessor
 
     @property
     def n_tombstones(self) -> int:
         """Nodes lazily deleted but not yet consolidated (one sync)."""
-        return int(self.state.n_tombstones)
+        with declared_sync("tombstone-count scalar"):
+            return int(self.state.n_tombstones)  # sync-ok: declared accessor

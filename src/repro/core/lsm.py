@@ -22,8 +22,7 @@ Newest-wins resolution order: memtable (highest slot first) > L0 > L1 > ...
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -29,8 +29,8 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import hnsw, lsm
 
@@ -126,7 +126,7 @@ def gorder_permutation(rows: np.ndarray, heat: np.ndarray | None = None,
             if len(window_nodes) > window:
                 old = window_nodes.pop(0)
                 credit(old, -1.0)
-    order.extend(int(d) for d in dead_ids)
+    order.extend(dead_ids.tolist())   # one batched conversion, not per-id
 
     perm = np.empty(n, np.int32)
     perm[np.asarray(order, np.int64)] = np.arange(n, dtype=np.int32)

@@ -1,0 +1,145 @@
+"""Runtime sync sentinels (DESIGN.md §14).
+
+`declared_sync` marks the handful of places where the serving stack is
+*allowed* to materialize device values on the host — the same points
+the static `tools.repro_lint` host-sync rule requires a
+``# sync-ok: <reason>`` comment on.  Serve tests run steady-state
+traffic inside `forbid_undeclared_sync()`, so any device→host sync
+*outside* one of these scopes raises at test time: the static
+allowlist is cross-checked by execution.
+
+Two layers of enforcement compose inside `forbid_undeclared_sync`:
+
+* ``jax.transfer_guard_device_to_host("disallow_explicit")`` — the
+  XLA-level guard.  Authoritative on accelerator backends, but inert
+  on the CPU backend, where device buffers live in host memory and
+  "transfers" are zero-copy.
+* a patch of ``ArrayImpl._value`` / ``ArrayImpl.item`` — the Python
+  chokepoints behind ``int()``/``float()``/``bool()``/``.tolist()``/
+  ``jax.device_get``/``.item()`` on a jax array.  This is exactly the
+  sink set the static HS001 rule flags, and it works on CPU.
+
+Known gap: buffer-protocol reads (``np.asarray(x)`` on CPU) bypass
+both layers — numpy takes a zero-copy view without consulting Python.
+On accelerator backends the XLA guard catches those too.
+
+Every `declared_sync` entry bumps a per-reason counter so tests can
+assert that the declared points (and only those) actually fired.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from contextlib import contextmanager
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+
+_counts: Dict[str, int] = collections.Counter()
+_lock = threading.Lock()
+
+# forbid_undeclared_sync() state: a global depth (guard active in any
+# thread guards every thread — serve worker threads sync too) plus a
+# thread-local allow depth (a declared_sync scope only blesses the
+# thread that entered it).
+_guard_depth = 0
+_tls = threading.local()
+
+
+class UndeclaredHostSyncError(RuntimeError):
+    """A device→host sync outside any `declared_sync` scope."""
+
+
+def _allowed() -> bool:
+    return getattr(_tls, "allow_depth", 0) > 0
+
+
+@contextmanager
+def declared_sync(reason: str) -> Iterator[None]:
+    """Scope in which device→host transfers are declared legitimate.
+
+    `reason` is mandatory and should say *why* the sync is allowed
+    ("result materialization", "maintenance cadence scalar", ...) —
+    it keys the counter surfaced by `sync_counts()`.
+    """
+    if not reason:
+        raise ValueError("declared_sync requires a non-empty reason")
+    with _lock:
+        _counts[reason] += 1
+    _tls.allow_depth = getattr(_tls, "allow_depth", 0) + 1
+    try:
+        with jax.transfer_guard_device_to_host("allow"):
+            yield
+    finally:
+        _tls.allow_depth -= 1
+
+
+@contextmanager
+def forbid_undeclared_sync() -> Iterator[None]:
+    """Raise `UndeclaredHostSyncError` on any host sync outside a
+    `declared_sync` scope, for the duration of the context.
+
+    Re-entrant; patches are installed on first entry and removed when
+    the last scope exits.
+    """
+    global _guard_depth
+    array_t = type(jnp.zeros(()))
+    with _lock:
+        if _guard_depth == 0:
+            _install(array_t)
+        _guard_depth += 1
+    try:
+        with jax.transfer_guard_device_to_host("disallow_explicit"):
+            yield
+    finally:
+        with _lock:
+            _guard_depth -= 1
+            if _guard_depth == 0:
+                _remove(array_t)
+
+
+_saved: Dict[str, object] = {}
+
+
+def _install(array_t: type) -> None:
+    _saved["_value"] = array_t.__dict__["_value"]
+    _saved["item"] = array_t.__dict__["item"]
+    orig_value = _saved["_value"]
+    orig_item = _saved["item"]
+
+    def guarded_value(self):
+        if _guard_depth > 0 and not _allowed():
+            raise UndeclaredHostSyncError(
+                "device→host sync outside declared_sync "
+                "(annotate the call site with `# sync-ok: <reason>` "
+                "and wrap it in repro.core.sentinel.declared_sync)")
+        return orig_value.fget(self)  # type: ignore[union-attr]
+
+    def guarded_item(self, *args, **kwargs):
+        if _guard_depth > 0 and not _allowed():
+            raise UndeclaredHostSyncError(
+                "`.item()` outside declared_sync "
+                "(annotate the call site with `# sync-ok: <reason>` "
+                "and wrap it in repro.core.sentinel.declared_sync)")
+        return orig_item(self, *args, **kwargs)  # type: ignore[operator]
+
+    array_t._value = property(guarded_value)
+    array_t.item = guarded_item
+
+
+def _remove(array_t: type) -> None:
+    array_t._value = _saved.pop("_value")
+    array_t.item = _saved.pop("item")
+
+
+def sync_counts() -> Dict[str, int]:
+    """Snapshot of {reason: times entered} since process start."""
+    with _lock:
+        return dict(_counts)
+
+
+def reset_sync_counts() -> None:
+    with _lock:
+        _counts.clear()

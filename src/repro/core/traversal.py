@@ -27,7 +27,6 @@ Implementation notes (TPU adaptation — DESIGN.md §2):
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Tuple
 
 import jax

@@ -6,8 +6,8 @@ Each kernel ships three files:
   ref.py    — pure-jnp oracle used by the allclose test sweeps
 """
 
-from repro.kernels.l2_distance.ops import l2_distance
 from repro.kernels.gather_l2.ops import gather_l2, gather_l2_q8
+from repro.kernels.l2_distance.ops import l2_distance
 from repro.kernels.simhash.ops import collision_count, simhash_encode
 
 __all__ = ["l2_distance", "gather_l2", "gather_l2_q8", "simhash_encode",

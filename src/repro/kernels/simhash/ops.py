@@ -7,8 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.simhash.kernel import (collision_count_pallas,
-                                          simhash_encode_pallas)
+from repro.kernels.simhash.kernel import collision_count_pallas, simhash_encode_pallas
 from repro.kernels.simhash.ref import collision_count_ref, simhash_encode_ref
 
 def _on_tpu() -> bool:

@@ -14,7 +14,7 @@ Hardware constants (TPU v5e-class target): 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import re
-from typing import Dict, Tuple
+from typing import Dict
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip

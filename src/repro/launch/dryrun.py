@@ -27,8 +27,7 @@ import jax
 from repro import configs
 from repro.launch import analysis, steps
 from repro.launch.mesh import make_production_mesh
-from repro.launch.sharding import (data_sharding, param_spec, state_spec,
-                                   tree_shardings)
+from repro.launch.sharding import data_sharding, param_spec, state_spec, tree_shardings
 from repro.optim import adamw_init
 
 
@@ -110,12 +109,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     rec["roofline"] = terms
 
     n_params = sum(
-        int(__import__("numpy").prod(l.shape))
-        for l in jax.tree.leaves(params_abs))
+        int(__import__("numpy").prod(leaf.shape))
+        for leaf in jax.tree.leaves(params_abs))
     embed = int(__import__("numpy").prod(params_abs["embed"].shape))
     routed = sum(
-        int(__import__("numpy").prod(l.shape))
-        for p, l in jax.tree_util.tree_flatten_with_path(params_abs)[0]
+        int(__import__("numpy").prod(leaf.shape))
+        for p, leaf in jax.tree_util.tree_flatten_with_path(params_abs)[0]
         if any(str(getattr(k, "key", "")) in ("w_gate", "w_up", "w_down")
                for k in p))
     rec["n_params"] = n_params

@@ -1,7 +1,6 @@
 """Unified LM stack: every assigned architecture is a composition of these
 modules (attention variants, MoE, SSM, RWKV, norms) driven by ModelConfig."""
 
-from repro.models.transformer import (Model, ModelConfig, MoEConfig,
-                                      SSMConfig)
+from repro.models.transformer import Model, ModelConfig, MoEConfig, SSMConfig
 
 __all__ = ["Model", "ModelConfig", "MoEConfig", "SSMConfig"]

@@ -50,7 +50,6 @@ def init_mamba2(key, cfg) -> Dict[str, Any]:
 
 
 def _split(cfg, zxbcdt):
-    s = cfg.ssm
     d_inner, n_heads, conv_ch = _dims(cfg)
     z = zxbcdt[..., :d_inner]
     xbc = zxbcdt[..., d_inner:d_inner + conv_ch]

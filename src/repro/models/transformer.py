@@ -18,14 +18,12 @@ remat.  Three entry points per model:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention as attn_mod
-from repro.models import layers, moe as moe_mod, rwkv as rwkv_mod, ssm
+from repro.models import attention as attn_mod, layers, moe as moe_mod, rwkv as rwkv_mod, ssm
 from repro.models.partition import constrain, gather_fsdp
 
 
@@ -375,9 +373,11 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int
             cfg.num_layers, lambda: ssm.mamba2_state_init(cfg, batch, dt))
         n_app = _n_shared_apps(cfg)
         if cfg.attention == "mla":
-            mk = lambda: attn_mod.mla_cache_init(cfg, batch, max_len, dt)
+            def mk():
+                return attn_mod.mla_cache_init(cfg, batch, max_len, dt)
         else:
-            mk = lambda: attn_mod.gqa_cache_init(cfg, batch, max_len, dt)
+            def mk():
+                return attn_mod.gqa_cache_init(cfg, batch, max_len, dt)
         state["shared_attn"] = stack(n_app, mk)
         return state
     if cfg.block_pattern == "rwkv":
@@ -386,9 +386,11 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int
         return state
     for (name, kind, count) in _groups(cfg):
         if cfg.attention == "mla":
-            mk = lambda: attn_mod.mla_cache_init(cfg, batch, max_len, dt)
+            def mk():
+                return attn_mod.mla_cache_init(cfg, batch, max_len, dt)
         else:
-            mk = lambda: attn_mod.gqa_cache_init(cfg, batch, max_len, dt)
+            def mk():
+                return attn_mod.gqa_cache_init(cfg, batch, max_len, dt)
         state[name] = stack(count, mk)
     return state
 

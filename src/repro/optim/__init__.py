@@ -2,9 +2,13 @@
 schedules, and gradient compression."""
 
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
-from repro.optim.compression import (compress_bf16, decompress_bf16,
-                                     ErrorFeedbackState, ef_int8_compress,
-                                     ef_int8_decompress)
+from repro.optim.compression import (
+    ErrorFeedbackState,
+    compress_bf16,
+    decompress_bf16,
+    ef_int8_compress,
+    ef_int8_decompress,
+)
 from repro.optim.schedule import cosine_schedule
 
 __all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",

@@ -22,7 +22,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params) -> AdamWState:
-    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     mu = jax.tree.map(f32, params)
     nu = jax.tree.map(f32, params)
     needs_master = any(p.dtype != jnp.float32

@@ -54,8 +54,27 @@ from repro.serve.maintenance import MaintenanceManager, MaintenancePolicy
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import CoalescingQueue
 from repro.serve.request import Op, QueryResult, Request, Ticket
-from repro.serve.wal import (KIND_INSERT, NO_LSN, WalConfig, WalRecord,
-                             WriteAheadLog)
+from repro.serve.wal import KIND_INSERT, NO_LSN, WalConfig, WalRecord, WriteAheadLog
+
+#: The engine's locking contract, machine-checked by the
+#: `lock-discipline` rule of `tools.repro_lint`: every listed attribute
+#: may only be touched with its lock held (`__init__` and the
+#: single-threaded `recover` path excepted).  `_lock` is the cheap
+#: submit-side lock — `submit_*` never waits behind a device dispatch;
+#: `_pump_lock` serializes batch execution, the id maps it mutates, and
+#: the deferred-ack/checkpoint bookkeeping.
+_GUARDED_BY = {
+    "_lock": ("queue", "_seq", "_gap_ema", "_last_arrival"),
+    "_pump_lock": (
+        "_int2ext", "_ext2int", "_next_ext", "_deleted_ext",
+        "_pending_acks", "_oldest_pending_t", "_covering_lsn",
+        "_has_ckpt", "_ckpt_seq", "batch_log",
+    ),
+}
+#: permitted nesting order, outermost first: a pump takes `_pump_lock`
+#: then briefly `_lock` to pop the batch; taking them the other way
+#: round is the ABBA deadlock the LK202 rule rejects
+_LOCK_ORDER = ("_pump_lock", "_lock")
 
 
 @dataclass
@@ -118,8 +137,8 @@ class ServeEngine:
                      Op.DELETE: self.cfg.delete_window},
             strict_order=self.cfg.strict_order)
         self._seq = 0
-        self._lock = threading.RLock()       # queue + id-map access
-        self._pump_lock = threading.RLock()  # serializes batch execution
+        self._lock = threading.RLock()       # submit side; see _GUARDED_BY
+        self._pump_lock = threading.RLock()  # execution side; see _GUARDED_BY
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         # stable external ids across reorder permutations and shards:
@@ -276,8 +295,10 @@ class ServeEngine:
         self._next_ext += n
         self._ext2int[ext_ids] = gids
         self._int2ext[gids] = ext_ids
-        for ext, req in zip(ext_ids, reqs):
-            self._stage_ack(req.ticket, int(ext))
+        # one batched host conversion for the whole ack run, not one
+        # numpy-scalar unboxing per request
+        for ext, req in zip(ext_ids.tolist(), reqs):
+            self._stage_ack(req.ticket, ext)
 
     def _apply_delete(self, ext: np.ndarray) -> np.ndarray:
         """Dedup + dispatch one delete batch; returns the fresh mask.
@@ -294,10 +315,11 @@ class ServeEngine:
         internal = self._ext2int[ext]
         fresh = np.ones(len(ext), bool)
         batch_seen: set = set()
-        for j, e in enumerate(ext):
-            e = int(e)
-            if e in self._deleted_ext or e in batch_seen \
-                    or internal[j] < 0:
+        # two batched host conversions up front instead of a
+        # numpy-scalar unboxing per element
+        dead = (internal < 0).tolist()
+        for j, e in enumerate(ext.tolist()):
+            if e in self._deleted_ext or e in batch_seen or dead[j]:
                 fresh[j] = False
             else:
                 batch_seen.add(e)
@@ -318,8 +340,8 @@ class ServeEngine:
         ext = np.asarray([r.payload for r in reqs], np.int64)
         self._log_batch(lambda: self.wal.append_delete(ext))
         fresh = self._apply_delete(ext)
-        for req, f in zip(reqs, fresh):
-            self._stage_ack(req.ticket, bool(f))
+        for req, f in zip(reqs, fresh.tolist()):
+            self._stage_ack(req.ticket, f)
 
     # -- WAL group commit + failure injection (DESIGN.md §11) -----------------
 
@@ -508,11 +530,13 @@ class ServeEngine:
     def resolve_ext(self, ext_id: int) -> int:
         """Internal id currently backing an external id (-1 = none) —
         the id-level survival probe the recovery harness verifies with."""
-        return int(self._ext2int[int(ext_id)])
+        with self._pump_lock:
+            return int(self._ext2int[int(ext_id)])
 
     def is_deleted(self, ext_id: int) -> bool:
         """True if this engine has applied a delete of `ext_id`."""
-        return int(ext_id) in self._deleted_ext
+        with self._pump_lock:
+            return int(ext_id) in self._deleted_ext
 
     def checkpoint(self) -> Optional[str]:
         """Write a covering checkpoint: force the group commit, save the
@@ -539,11 +563,15 @@ class ServeEngine:
             deleted = np.zeros(self.backend.cap, bool)
             if self._deleted_ext:
                 deleted[np.fromiter(self._deleted_ext, np.int64)] = True
+            # _seq belongs to the submit side: snapshot it under _lock
+            # (reading it under _pump_lock alone races a live submit_*)
+            with self._lock:
+                seq = self._seq
             path = self.backend.save(
                 self.cfg.ckpt_dir, lsn=lsn,
                 extra={"int2ext": self._int2ext, "ext2int": self._ext2int,
                        "deleted": deleted},
-                meta={"next_ext": self._next_ext, "seq": self._seq,
+                meta={"next_ext": self._next_ext, "seq": seq,
                       # maintenance trigger phase: replay must re-enter
                       # run_if_due with the same counters or its
                       # consolidate/compact timing drifts from the
@@ -620,24 +648,28 @@ class ServeEngine:
         everything after the covering LSN is by definition unapplied.
         Returns the number of records applied."""
         n = 0
-        for rec in records:
-            if rec.kind == KIND_INSERT:
-                res = self.backend.insert_batch(
-                    rec.vectors, pad_to=self.cfg.insert_batch)
-                gids = np.asarray(res.ids, np.int64)
-                self._ext2int[rec.ext_ids] = gids
-                self._int2ext[gids] = rec.ext_ids
-                self._next_ext = max(self._next_ext,
-                                     int(rec.ext_ids.max()) + 1)
-            else:
-                self._apply_delete(rec.ext_ids)
-            self.maintenance.note_write_batch()
-            actions = self.maintenance.run_if_due()
-            if "reorder" in actions:
-                self._apply_perm(self.maintenance.last_perm)
-            for a in actions:
-                self.metrics.maintenance_runs[a] += 1
-            n += 1
+        # recovery is single-threaded, but holding the execution lock
+        # keeps the _GUARDED_BY contract uniform (and is free: RLock,
+        # no contention before serving starts)
+        with self._pump_lock:
+            for rec in records:
+                if rec.kind == KIND_INSERT:
+                    res = self.backend.insert_batch(
+                        rec.vectors, pad_to=self.cfg.insert_batch)
+                    gids = np.asarray(res.ids, np.int64)
+                    self._ext2int[rec.ext_ids] = gids
+                    self._int2ext[gids] = rec.ext_ids
+                    self._next_ext = max(self._next_ext,
+                                         int(rec.ext_ids.max()) + 1)
+                else:
+                    self._apply_delete(rec.ext_ids)
+                self.maintenance.note_write_batch()
+                actions = self.maintenance.run_if_due()
+                if "reorder" in actions:
+                    self._apply_perm(self.maintenance.last_perm)
+                for a in actions:
+                    self.metrics.maintenance_runs[a] += 1
+                n += 1
         return n
 
     def close(self) -> None:

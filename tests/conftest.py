@@ -11,9 +11,30 @@ import gc
 import jax
 import pytest
 
+from repro.core.sentinel import forbid_undeclared_sync
+
 
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_per_module():
     yield
     jax.clear_caches()
     gc.collect()
+
+
+@pytest.fixture
+def no_host_sync():
+    """Runtime half of the repro-lint host-sync rule (DESIGN.md §14).
+
+    Everything executed under this fixture runs with device→host
+    syncs disallowed — including explicit `jax.device_get` — so the
+    only way to materialize a device value is through one of the
+    `repro.core.sentinel.declared_sync` scopes, which re-allow syncs
+    for the handful of statically `# sync-ok`-annotated points.  A
+    stray sync anywhere else raises `UndeclaredHostSyncError` with a
+    traceback pointing at the offending call.
+
+    Host→device is left unguarded: uploading query/insert payloads is
+    inherent to serving, not a regression signal.
+    """
+    with forbid_undeclared_sync():
+        yield

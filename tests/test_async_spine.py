@@ -12,8 +12,13 @@ import numpy as np
 import pytest
 
 from repro.core import hnsw
-from repro.core.backend import (MaintenanceReport, SearchHandle,
-                                SearchParams, SearchResult, merge_topk)
+from repro.core.backend import (
+    MaintenanceReport,
+    SearchHandle,
+    SearchParams,
+    SearchResult,
+    merge_topk,
+)
 from repro.core.distributed import ShardedBackend
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors

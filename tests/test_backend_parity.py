@@ -23,8 +23,15 @@ also passes on a single device in the tier-1 run.
 import numpy as np
 import pytest
 
-from repro.core import (HNSWConfig, LSMVecIndex, SearchResult, UpdateResult,
-                        VectorBackend, brute_force_knn, recall_at_k)
+from repro.core import (
+    HNSWConfig,
+    LSMVecIndex,
+    SearchResult,
+    UpdateResult,
+    VectorBackend,
+    brute_force_knn,
+    recall_at_k,
+)
 from repro.core.backend import shard_of_seq
 from repro.core.distributed import ShardedBackend
 from repro.data.synth import make_clustered_vectors

@@ -1,13 +1,10 @@
 """Tests for the DiskANN-like and SPFresh-like baselines."""
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.baselines import DiskANNIndex, SPFreshIndex
 from repro.core.index import brute_force_knn, recall_at_k
-
-
 from repro.data.synth import make_clustered_vectors
 
 

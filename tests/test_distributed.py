@@ -7,7 +7,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import hnsw
 from repro.core.distributed import ShardedBackend, ShardedFlatIndex

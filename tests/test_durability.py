@@ -9,14 +9,24 @@ import jax
 import numpy as np
 import pytest
 
-from repro.checkpoint import (latest_step, load_arrays, restore_checkpoint,
-                              save_checkpoint, sweep_stale_tmp)
+from repro.checkpoint import (
+    latest_step,
+    load_arrays,
+    restore_checkpoint,
+    save_checkpoint,
+    sweep_stale_tmp,
+)
 from repro.core import hnsw
 from repro.core.distributed import ShardedBackend
 from repro.core.index import LSMVecIndex
-from repro.ft import (FailureInjector, RestartPolicy, SimulatedFailure,
-                      run_with_recovery, run_with_restarts,
-                      verify_acked_writes)
+from repro.ft import (
+    FailureInjector,
+    RestartPolicy,
+    SimulatedFailure,
+    run_with_recovery,
+    run_with_restarts,
+    verify_acked_writes,
+)
 from repro.serve import MaintenancePolicy, ServeConfig, ServeEngine, WalConfig
 
 CFG = hnsw.HNSWConfig(cap=2048, dim=16, M=8, M_up=4, num_upper=2,

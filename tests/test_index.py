@@ -1,6 +1,5 @@
 """Integration tests: LSMVecIndex recall, dynamic updates, sampling, reorder."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,8 +7,6 @@ import pytest
 from repro.core import hnsw
 from repro.core.backend import SearchParams
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
-
-
 from repro.data.synth import make_clustered_vectors
 
 
@@ -160,7 +157,6 @@ def test_reorder_preserves_results_and_improves_layout():
     idx = LSMVecIndex.build(CFG, data)
     queries = make_data(16, seed=17)
     d_before = idx.search(queries, k=5).dists
-    d_map_before = {tuple(np.round(r, 3)) for r in d_before}
     idx.search(queries, k=5)  # accumulate heat
     perm = idx.reorder(window=8, lam=1.0)
     assert sorted(perm.tolist()) == list(range(512))  # valid permutation

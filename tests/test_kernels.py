@@ -17,8 +17,7 @@ from repro.kernels.gather_l2.ref import gather_l2_ref
 from repro.kernels.l2_distance.kernel import l2_distance_pallas
 from repro.kernels.l2_distance.ops import l2_distance
 from repro.kernels.l2_distance.ref import l2_distance_ref
-from repro.kernels.simhash.kernel import (collision_count_pallas,
-                                          simhash_encode_pallas)
+from repro.kernels.simhash.kernel import collision_count_pallas, simhash_encode_pallas
 from repro.kernels.simhash.ops import collision_count, simhash_encode
 from repro.kernels.simhash.ref import collision_count_ref, simhash_encode_ref
 

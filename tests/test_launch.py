@@ -11,14 +11,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs
 from repro.launch import analysis, hlo_analyzer, steps
 from repro.launch.mesh import make_test_mesh
-from repro.launch.sharding import (data_sharding, param_spec, state_spec,
-                                   tree_shardings)
+from repro.launch.sharding import data_sharding, param_spec, state_spec, tree_shardings
 from repro.optim import adamw_init
 
 

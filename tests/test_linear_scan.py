@@ -1,13 +1,11 @@
 """Property tests for the chunked linear-recurrence core (Mamba2/RWKV6)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st  # skips gracefully when absent
 
-from repro.models.linear_scan import (chunked_linear_attention,
-                                      recurrent_step, reference_scan)
+from repro.models.linear_scan import chunked_linear_attention, recurrent_step, reference_scan
 
 
 def _mk(seed, b, t, h, dk, dv, decay_scale, scalar):

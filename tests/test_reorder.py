@@ -1,7 +1,6 @@
 """Unit + property tests for connectivity-aware reordering (§3.4)."""
 
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st  # skips gracefully when absent
 
 from repro.core import reorder

@@ -1,0 +1,465 @@
+"""Self-tests for `tools.repro_lint` (DESIGN.md §14): each rule family
+fires on a minimal known-bad fixture, stays quiet on the known-good
+twin, suppression comments behave per spec — and the live repo lints
+clean (the meta-test CI's `static-analysis` job re-checks)."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.repro_lint import RULES, lint_paths, lint_sources
+from tools.repro_lint.registry import rule_names
+
+
+def codes(report):
+    return sorted(f.code for f in report.findings)
+
+
+def lint_one(src, rules=None):
+    return lint_sources({"m.py": src}, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# registry / driver
+# ---------------------------------------------------------------------------
+
+def test_all_rule_families_registered():
+    assert set(rule_names()) == {"host-sync", "jit-discipline",
+                                 "lock-discipline", "protocol"}
+    for name in rule_names():
+        assert callable(RULES[name])
+
+
+def test_unknown_rule_rejected():
+    with pytest.raises(KeyError):
+        lint_one("x = 1", rules=["no-such-rule"])
+
+
+def test_parse_error_is_a_finding():
+    rep = lint_one("def broken(:\n")
+    assert codes(rep) == ["PARSE"]
+
+
+# ---------------------------------------------------------------------------
+# host-sync (HS001/HS002) — the §8 zero-sync hot path
+# ---------------------------------------------------------------------------
+
+HOT = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+class Engine:
+    def pump(self):
+        self._exec()
+
+    def _exec(self):
+{body}
+"""
+
+
+def hot(body):
+    indented = "\n".join("        " + ln if ln else ""
+                         for ln in body.splitlines())
+    return HOT.format(body=indented)
+
+
+def test_hs001_int_on_device_array():
+    rep = lint_one(hot("x = jnp.sum(self.state.heat)\nreturn int(x)"),
+                   rules=["host-sync"])
+    assert codes(rep) == ["HS001"]
+
+
+def test_hs001_np_asarray_and_item_and_device_get():
+    rep = lint_one(hot(
+        "x = jnp.arange(4)\n"
+        "a = np.asarray(x)\n"
+        "b = x.tolist()\n"
+        "c = jax.device_get(x)"), rules=["host-sync"])
+    assert codes(rep) == ["HS001", "HS001", "HS001"]
+
+
+def test_hs001_branching_and_iteration_on_device_array():
+    rep = lint_one(hot(
+        "x = jnp.arange(4)\n"
+        "if x > 0:\n"
+        "    pass\n"
+        "for v in x:\n"
+        "    pass"), rules=["host-sync"])
+    assert codes(rep) == ["HS001", "HS001"]
+
+
+def test_hs_clean_when_not_reachable_from_pump():
+    src = """
+import jax.numpy as jnp
+def offline_eval():
+    return int(jnp.sum(jnp.arange(4)))
+"""
+    assert not lint_one(src, rules=["host-sync"]).findings
+
+
+def test_hs_cleansing_and_identity_checks_do_not_taint():
+    rep = lint_one(hot(
+        "x = jnp.arange(4)\n"
+        "if self._snap is None:\n"
+        "    pass\n"
+        "n = x.shape[0]\n"
+        "for i in range(n):\n"
+        "    pass"), rules=["host-sync"])
+    assert not rep.findings
+
+
+def test_hs002_per_element_loop_and_comprehension():
+    rep = lint_one(hot(
+        "ids = np.arange(8)\n"
+        "out = []\n"
+        "for e in ids:\n"
+        "    out.append(int(e))\n"
+        "out2 = [int(g) for g in ids]"), rules=["host-sync"])
+    assert codes(rep) == ["HS002", "HS002"]
+
+
+def test_sync_ok_suppresses_with_reason():
+    rep = lint_one(hot(
+        "x = jnp.sum(jnp.arange(4))\n"
+        "return int(x)  # sync-ok: declared scalar accessor"),
+        rules=["host-sync"])
+    assert not rep.findings
+    assert len(rep.suppressed) == 1
+
+
+def test_sync_ok_without_reason_is_fatal():
+    rep = lint_one(hot(
+        "x = jnp.sum(jnp.arange(4))\n"
+        "return int(x)  # sync-ok"), rules=["host-sync"])
+    assert "SUP001" in codes(rep)
+
+
+def test_unused_suppression_warns_but_passes():
+    rep = lint_one("x = 1  # sync-ok: nothing here syncs\n",
+                   rules=["host-sync"])
+    assert not rep.failed
+    assert any("unused" in w for w in rep.warnings)
+
+
+# ---------------------------------------------------------------------------
+# jit discipline (JD101-104) — donation + trace-cache hygiene
+# ---------------------------------------------------------------------------
+
+def test_jd101_use_after_donate():
+    src = """
+import jax
+class A:
+    def __init__(self, f):
+        self._step_fn = jax.jit(f, donate_argnums=0)
+    def bad(self, state):
+        out = self._step_fn(state)
+        return state
+    def good(self, state):
+        state = self._step_fn(state)
+        return state
+"""
+    rep = lint_one(src, rules=["jit-discipline"])
+    assert codes(rep) == ["JD101"]
+    assert rep.findings[0].line == 8        # the re-read, not the call
+
+
+def test_jd101_partial_jit_form_and_self_attr_buffer():
+    src = """
+import functools
+import jax
+class A:
+    def __init__(self, f):
+        self._fn = functools.partial(jax.jit, donate_argnums=(0,))(f)
+    def bad(self):
+        out = self._fn(self.state)
+        return self.state.count
+    def good(self):
+        self.state = self._fn(self.state)
+        return self.state.count
+"""
+    rep = lint_one(src, rules=["jit-discipline"])
+    assert codes(rep) == ["JD101"]
+
+
+def test_jd102_dynamic_static_argnames():
+    src = """
+import jax
+names = tuple(sorted(["a", "b"]))
+f1 = jax.jit(lambda x: x, static_argnames=names)
+f2 = jax.jit(lambda x: x, static_argnames=("rho", "ef"))
+"""
+    rep = lint_one(src, rules=["jit-discipline"])
+    assert codes(rep) == ["JD102"]
+
+
+def test_jd103_jit_built_in_loop():
+    src = """
+import jax
+fns = []
+for k in range(4):
+    fns.append(jax.jit(lambda x: x + 1))
+"""
+    rep = lint_one(src, rules=["jit-discipline"])
+    assert codes(rep) == ["JD103"]
+
+
+def test_jd104_aliased_donated_buffer():
+    src = """
+import jax
+class A:
+    def __init__(self, f):
+        self._fn = jax.jit(f, donate_argnums=0)
+    def bad(self, state):
+        state = self._fn(state, state)
+        return state
+"""
+    rep = lint_one(src, rules=["jit-discipline"])
+    assert codes(rep) == ["JD104"]
+
+
+def test_jd_clean_on_init_constructed_handles():
+    src = """
+import jax
+class A:
+    def __init__(self, f):
+        self._fn = jax.jit(f, donate_argnums=0,
+                           static_argnames=("ef",))
+    def step(self, state, ef):
+        state = self._fn(state, ef=ef)
+        return state
+"""
+    assert not lint_one(src, rules=["jit-discipline"]).findings
+
+
+# ---------------------------------------------------------------------------
+# lock discipline (LK201/LK202) — the scheduler's guarded-by contract
+# ---------------------------------------------------------------------------
+
+LOCKED = """
+import threading
+_GUARDED_BY = {{"_lock": ("queue",), "_pump_lock": ("acks",)}}
+_LOCK_ORDER = ("_pump_lock", "_lock")
+class E:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._pump_lock = threading.RLock()
+        self.queue = []
+        self.acks = []
+{body}
+"""
+
+
+def test_lk201_unguarded_access_and_lk202_inversion():
+    rep = lint_one(LOCKED.format(body="""
+    def bad(self):
+        self.queue.append(1)
+        with self._lock:
+            with self._pump_lock:
+                self.acks.append(2)
+"""), rules=["lock-discipline"])
+    assert codes(rep) == ["LK201", "LK202"]
+
+
+def test_lk_clean_with_correct_nesting():
+    rep = lint_one(LOCKED.format(body="""
+    def good(self):
+        with self._pump_lock:
+            with self._lock:
+                self.queue.append(1)
+            self.acks.append(2)
+"""), rules=["lock-discipline"])
+    assert not rep.findings
+
+
+def test_lk_private_helper_inherits_callers_locks():
+    rep = lint_one(LOCKED.format(body="""
+    def _helper(self):
+        self.acks.append(1)
+    def entry(self):
+        with self._pump_lock:
+            self._helper()
+"""), rules=["lock-discipline"])
+    assert not rep.findings
+
+
+def test_lk_private_helper_with_one_unlocked_caller_flagged():
+    rep = lint_one(LOCKED.format(body="""
+    def _helper(self):
+        self.acks.append(1)
+    def entry(self):
+        with self._pump_lock:
+            self._helper()
+    def entry2(self):
+        self._helper()
+"""), rules=["lock-discipline"])
+    assert codes(rep) == ["LK201"]
+
+
+def test_lk_nested_function_body_runs_unlocked():
+    rep = lint_one(LOCKED.format(body="""
+    def entry(self):
+        with self._pump_lock:
+            def later():
+                self.acks.append(1)
+            return later
+"""), rules=["lock-discipline"])
+    assert codes(rep) == ["LK201"]
+
+
+def test_lk_def_line_block_suppression():
+    rep = lint_one(LOCKED.format(body="""
+    def _replay(self):  # lint-ok[LK201]: single-threaded recovery
+        self.acks.append(1)
+        self.queue.append(2)
+"""), rules=["lock-discipline"])
+    assert not rep.findings
+    assert len(rep.suppressed) == 2
+
+
+# ---------------------------------------------------------------------------
+# protocol conformance (PC001-003)
+# ---------------------------------------------------------------------------
+
+PROTO = """
+from typing import Protocol
+class VectorBackend(Protocol):
+    def search(self): ...
+    def dispatch_search(self): ...
+    def insert_batch(self): ...
+    def delete_batch(self): ...
+    def maintain(self): ...
+    def stats(self): ...
+"""
+
+
+def test_pc001_near_implementation_missing_methods():
+    src = PROTO + """
+class AlmostBackend:
+    def search(self): ...
+    def dispatch_search(self): ...
+    def insert_batch(self): ...
+    def delete_batch(self): ...
+class TinyBaseline:
+    def search(self): ...
+"""
+    rep = lint_one(src, rules=["protocol"])
+    assert codes(rep) == ["PC001"]
+    assert "AlmostBackend" in rep.findings[0].message
+    assert "maintain" in rep.findings[0].message
+
+
+def test_pc001_init_attributes_satisfy_contract():
+    src = PROTO + """
+class Full:
+    def __init__(self):
+        self.stats = None
+    def search(self): ...
+    def dispatch_search(self): ...
+    def insert_batch(self): ...
+    def delete_batch(self): ...
+    def maintain(self): ...
+"""
+    assert not lint_one(src, rules=["protocol"]).findings
+
+
+def test_pc002_double_collect():
+    src = """
+def f(backend, qs):
+    h = backend.dispatch_search(qs)
+    a = h.collect()
+    b = h.collect()
+    return a, b
+"""
+    rep = lint_one(src, rules=["protocol"])
+    assert codes(rep) == ["PC002"]
+
+
+def test_pc002_exclusive_branches_and_loops_ok():
+    src = """
+def f(backend, qs, flag, handles):
+    h = backend.dispatch_search(qs)
+    if flag:
+        r = h.collect()
+    else:
+        r = h.collect()
+    out = []
+    for hh in handles:
+        hh = backend.dispatch_search(qs)
+        out.append(hh.collect())
+    return r, out
+"""
+    assert not lint_one(src, rules=["protocol"]).findings
+
+
+def test_pc002_collect_after_either_branch_flagged():
+    src = """
+def f(backend, qs, flag):
+    h = backend.dispatch_search(qs)
+    if flag:
+        r = h.collect()
+    return h.collect()
+"""
+    rep = lint_one(src, rules=["protocol"])
+    assert codes(rep) == ["PC002"]
+
+
+def test_pc003_unguarded_poll_maintain_result():
+    src = """
+def f(backend):
+    rep = backend.poll_maintain()
+    return rep.perm
+"""
+    rep = lint_one(src, rules=["protocol"])
+    assert codes(rep) == ["PC003"]
+
+
+def test_pc003_none_guard_forms_accepted():
+    src = """
+def early_return(backend):
+    rep = backend.poll_maintain()
+    if rep is None:
+        return None
+    return rep.perm
+
+def truthy(backend):
+    rep = backend.poll_maintain()
+    if rep:
+        return rep.perm
+
+def short_circuit(backend):
+    rep = backend.poll_maintain()
+    return rep and rep.perm
+"""
+    assert not lint_one(src, rules=["protocol"]).findings
+
+
+# ---------------------------------------------------------------------------
+# CLI + meta
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes_and_json(tmp_path):
+    from tools.repro_lint.__main__ import main
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n"
+                   "for k in range(2):\n"
+                   "    f = jax.jit(lambda x: x)\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    out = tmp_path / "report.json"
+    assert main([str(good)]) == 0
+    assert main([str(bad), "--json", str(out)]) == 1
+    import json
+    data = json.loads(out.read_text())
+    assert data["failed"] and data["findings"][0]["code"] == "JD103"
+    assert main(["--rules", "bogus", str(good)]) == 2
+
+
+def test_live_repo_lints_clean():
+    report = lint_paths(["src", "tests", "benchmarks"], root=str(REPO))
+    assert not report.failed, "\n" + report.render()

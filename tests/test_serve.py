@@ -8,8 +8,7 @@ import pytest
 from repro.core import HNSWConfig, LSMVecIndex
 from repro.core.index import brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
-from repro.serve import (CoalescingQueue, MaintenancePolicy, Op, Request,
-                         ServeConfig, ServeEngine)
+from repro.serve import CoalescingQueue, MaintenancePolicy, Op, Request, ServeConfig, ServeEngine
 
 CFG = HNSWConfig(cap=2048, dim=32, M=12, M_up=6, num_upper=2,
                  ef_search=48, ef_construction=48, k=10,
@@ -237,7 +236,8 @@ def test_serve_recall_matches_sequential_baseline():
                                        delete_batch=16, strict_order=True,
                                        maintenance=NO_MAINT),
                       clock=FakeClock())
-    ins = [eng.submit_insert(x) for x in fresh]
+    for x in fresh:
+        eng.submit_insert(x)
     dels = list(range(0, 100, 7))
     for d in dels:
         eng.submit_delete(d)

@@ -12,8 +12,14 @@ from hypothesis_compat import given, settings, st  # skips gracefully when absen
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data.synth import token_pipeline
 from repro.ft import FailureInjector, RestartPolicy, run_with_restarts
-from repro.optim import (adamw_init, adamw_update, cosine_schedule,
-                         compress_bf16, ef_int8_compress, ef_int8_decompress)
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    compress_bf16,
+    cosine_schedule,
+    ef_int8_compress,
+    ef_int8_decompress,
+)
 from repro.optim.compression import ef_init
 
 
@@ -24,7 +30,8 @@ from repro.optim.compression import ef_init
 def test_adamw_decreases_quadratic_loss():
     params = {"w": jnp.array([3.0, -2.0, 1.5])}
     state = adamw_init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     l0 = float(loss(params))
     for _ in range(100):
         grads = jax.grad(loss)(params)

@@ -13,8 +13,8 @@ import numpy as np
 import pytest
 
 from repro.core import hnsw, lsm
-from repro.core.distributed import ShardedBackend
 from repro.core.backend import SearchParams
+from repro.core.distributed import ShardedBackend
 from repro.core.index import LSMVecIndex, brute_force_knn, recall_at_k
 from repro.data.synth import make_clustered_vectors
 from repro.kernels import gather_l2, gather_l2_q8

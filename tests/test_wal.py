@@ -5,10 +5,8 @@ segment rotation/retention, and group-commit accounting."""
 import os
 
 import numpy as np
-import pytest
 
-from repro.serve.wal import (KIND_DELETE, KIND_INSERT, NO_LSN, WalConfig,
-                             WriteAheadLog)
+from repro.serve.wal import KIND_DELETE, KIND_INSERT, NO_LSN, WalConfig, WriteAheadLog
 
 
 def _wal(tmp_path, **kw):

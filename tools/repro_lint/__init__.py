@@ -1,0 +1,31 @@
+"""repro-lint: invariant-enforcing static analysis for this repo.
+
+The rules encode the cross-cutting invariants the end-to-end benchmarks
+gate only after the fact (DESIGN.md §14): no host syncs on the serve
+hot path, jit donation/static-arg discipline, the scheduler's
+guarded-by lock map, and `VectorBackend` protocol conformance.
+
+Usage::
+
+    python -m tools.repro_lint src tests benchmarks
+
+Programmatic::
+
+    from tools.repro_lint import lint_paths, lint_sources
+    report = lint_paths(["src"])
+    assert not report.failed, report.render()
+"""
+
+from tools.repro_lint.driver import Finding, LintReport, lint_paths, lint_sources
+from tools.repro_lint.project import Project
+from tools.repro_lint.registry import RULES, register
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "LintReport",
+    "Project",
+    "lint_paths",
+    "lint_sources",
+    "register",
+]

@@ -1,0 +1,49 @@
+"""CLI: ``python -m tools.repro_lint src tests benchmarks``.
+
+Exit 0 when the tree lints clean (every suppression reasoned), 1 on
+any finding, 2 on usage errors.  ``--json PATH`` writes the findings
+report consumed by the CI artifact upload.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.repro_lint.driver import lint_paths
+from tools.repro_lint.registry import rule_names
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="invariant-enforcing static analysis for this repo")
+    parser.add_argument("paths", nargs="+",
+                        help="files or directories to lint")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule subset "
+                             f"(default: all = {','.join(rule_names())})")
+    parser.add_argument("--json", default=None, metavar="PATH",
+                        help="also write a JSON findings report")
+    parser.add_argument("--root", default=".",
+                        help="project root paths are relative to")
+    args = parser.parse_args(argv)
+
+    selected = None
+    if args.rules:
+        selected = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        report = lint_paths(args.paths, root=args.root, rules=selected)
+    except KeyError as e:
+        print(f"repro_lint: {e}", file=sys.stderr)
+        return 2
+
+    print(report.render())
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            f.write(report.to_json())
+    return 1 if report.failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,182 @@
+"""Rule orchestration: run rules, apply suppressions, render reports."""
+
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from tools.repro_lint.project import Project, SourceFile
+from tools.repro_lint.registry import RULES, rule_names
+from tools.repro_lint.suppressions import Suppression
+
+
+@dataclass
+class Finding:
+    code: str                   # e.g. "HS001"
+    path: str
+    line: int
+    message: str
+    rule: str = ""              # registry family name
+    suppressed: bool = field(default=False, compare=False)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+@dataclass
+class LintReport:
+    findings: List[Finding]            # unsuppressed, fatal
+    suppressed: List[Finding]          # matched by a reasoned comment
+    warnings: List[str]                # unused suppressions etc.
+    rules_run: List[str]
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.findings)
+
+    def render(self) -> str:
+        out: List[str] = []
+        for f in sorted(self.findings, key=lambda f: (f.path, f.line, f.code)):
+            out.append(f.render())
+        for w in self.warnings:
+            out.append(f"warning: {w}")
+        out.append(
+            f"repro-lint: {len(self.findings)} finding(s), "
+            f"{len(self.suppressed)} suppressed, "
+            f"rules: {', '.join(self.rules_run)}")
+        return "\n".join(out)
+
+    def to_json(self) -> str:
+        def enc(f: Finding) -> Dict:
+            return {"code": f.code, "path": f.path, "line": f.line,
+                    "message": f.message, "rule": f.rule}
+
+        return json.dumps({
+            "failed": self.failed,
+            "findings": [enc(f) for f in sorted(
+                self.findings, key=lambda f: (f.path, f.line, f.code))],
+            "suppressed": [enc(f) for f in sorted(
+                self.suppressed, key=lambda f: (f.path, f.line, f.code))],
+            "warnings": self.warnings,
+            "rules_run": self.rules_run,
+        }, indent=2)
+
+
+def _statement_extents(sf: SourceFile) -> List[Tuple[int, int]]:
+    spans: List[Tuple[int, int]] = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.stmt):
+            spans.append((node.lineno, node.end_lineno or node.lineno))
+    return spans
+
+
+def _coverage(sup: Suppression, sf: SourceFile,
+              spans: List[Tuple[int, int]]) -> Tuple[int, int]:
+    """Inclusive line range a suppression comment covers."""
+    if sup.on_def_line and sup.codes:
+        # block scope: the whole def/class body
+        cands = [s for s in spans if s[0] == sup.line]
+        if cands:
+            return (sup.line, max(e for _, e in cands))
+    if sup.standalone:
+        nxt = [s for s in spans if s[0] > sup.line]
+        if not nxt:
+            return (sup.line, sup.line)
+        start = min(s[0] for s in nxt)
+        ends = [e for b, e in nxt if b == start]
+        # cover only the header line of compound statements so a
+        # standalone comment above a `with`/`for` doesn't blanket the body
+        first = min(ends)
+        return (start, first if _is_simple(sf, start) else start)
+    # trailing: innermost statement whose span includes the line
+    cands = [s for s in spans if s[0] <= sup.line <= s[1]]
+    if not cands:
+        return (sup.line, sup.line)
+    start = max(b for b, _ in cands)
+    end = min(e for b, e in cands if b == start)
+    if not _is_simple(sf, start):
+        end = sup.line            # header-only for compound statements
+    return (start, max(end, sup.line))
+
+
+def _is_simple(sf: SourceFile, lineno: int) -> bool:
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.stmt) and node.lineno == lineno:
+            if isinstance(node, (ast.If, ast.For, ast.While, ast.With,
+                                 ast.Try, ast.FunctionDef,
+                                 ast.AsyncFunctionDef, ast.ClassDef)):
+                return False
+    return True
+
+
+def _apply_suppressions(project: Project,
+                        findings: List[Finding]) -> LintReport:
+    live: List[Finding] = []
+    suppressed: List[Finding] = []
+    warnings: List[str] = []
+
+    cover: Dict[str, List[Tuple[Suppression, Tuple[int, int]]]] = {}
+    for path, sf in project.files.items():
+        spans = _statement_extents(sf)
+        entries = []
+        for sup in sf.suppressions:
+            if not sup.reason:
+                live.append(Finding(
+                    code="SUP001", path=path, line=sup.line,
+                    message=f"`# {sup.kind}` suppression without a "
+                            "reason — write `# "
+                            f"{sup.kind}: <why this is allowed>`",
+                    rule="suppressions"))
+                continue
+            entries.append((sup, _coverage(sup, sf, spans)))
+        cover[path] = entries
+
+    for f in findings:
+        hit = None
+        for sup, (lo, hi) in cover.get(f.path, []):
+            if lo <= f.line <= hi and sup.matches(f.code):
+                hit = sup
+                break
+        if hit is not None:
+            hit.used = True
+            f.suppressed = True
+            suppressed.append(f)
+        else:
+            live.append(f)
+
+    for path, entries in cover.items():
+        for sup, _ in entries:
+            if not sup.used:
+                warnings.append(
+                    f"{path}:{sup.line}: unused `# {sup.kind}` "
+                    f"suppression ({sup.reason})")
+    return LintReport(live, suppressed, warnings, [])
+
+
+def lint_project(project: Project,
+                 rules: Optional[Iterable[str]] = None) -> LintReport:
+    names = rule_names(rules)
+    findings: List[Finding] = []
+    for path, msg in project.errors:
+        findings.append(Finding(
+            code="PARSE", path=path, line=1,
+            message=f"could not parse: {msg}", rule="driver"))
+    for name in names:
+        for f in RULES[name](project):
+            f.rule = f.rule or name
+            findings.append(f)
+    report = _apply_suppressions(project, findings)
+    report.rules_run = names
+    return report
+
+
+def lint_paths(paths: Iterable[str], root: str = ".",
+               rules: Optional[Iterable[str]] = None) -> LintReport:
+    return lint_project(Project.from_paths(paths, root=root), rules)
+
+
+def lint_sources(sources: Dict[str, str],
+                 rules: Optional[Iterable[str]] = None) -> LintReport:
+    return lint_project(Project.from_sources(sources), rules)

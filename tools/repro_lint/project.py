@@ -1,0 +1,240 @@
+"""Parsed-source model shared by every rule.
+
+A `Project` holds one `SourceFile` per analyzed module (AST + raw
+lines + the suppression table) plus lazily-built cross-file indices:
+every function/method definition keyed by name, and a name-based
+call-graph approximation rules use for reachability questions
+("is this function on the serve hot path?").
+
+The call graph is deliberately an over-approximation: a call ``x.f()``
+edges to *every* definition named ``f`` (filtered for the
+`VectorBackend` protocol method names, which only resolve into backend
+implementation classes — see `CallGraph`).  Over-approximation errs
+toward flagging, and a human answers with an explicit suppression
+comment carrying a reason — never silently.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.repro_lint.suppressions import Suppression, parse_suppressions
+
+#: method names owned by the `VectorBackend` protocol (plus the
+#: `SearchHandle` pair).  Calls to these names only resolve into
+#: classes that implement the protocol surface — otherwise every
+#: baseline's host-native `search` would be pulled onto the hot path.
+PROTOCOL_METHOD_NAMES = frozenset({
+    "search", "dispatch_search", "collect", "is_ready",
+    "insert_batch", "delete_batch", "maintain", "begin_maintain",
+    "poll_maintain", "stats", "memory_bytes", "heat_total",
+    "reset_heat", "initial_ids", "trace_counts", "sync", "save",
+})
+
+#: ubiquitous builtin-collection method names that would otherwise
+#: create edges to any same-named def in the repo
+_STOP_CALL_NAMES = frozenset({
+    "append", "extend", "add", "discard", "remove", "clear", "pop",
+    "get", "items", "keys", "values", "update", "join", "split",
+    "strip", "sort", "copy", "format", "encode", "decode", "read",
+    "write", "close", "flush", "sum", "max", "min", "mean", "any",
+    "all", "tolist", "item", "astype", "reshape", "set", "wait",
+})
+
+
+@dataclass
+class FunctionInfo:
+    """One function/method definition and its outgoing call names."""
+
+    qualname: str               # "module::Class.method" or "module::func"
+    name: str
+    cls: Optional[str]
+    module: str                 # project-relative path of the file
+    node: ast.AST               # FunctionDef / AsyncFunctionDef
+    is_property: bool = False
+    calls: Set[str] = field(default_factory=set)
+    attr_loads: Set[str] = field(default_factory=set)
+
+
+class SourceFile:
+    """One parsed module: text, AST, and its suppression table."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self.suppressions: List[Suppression] = parse_suppressions(text)
+
+    def iter_functions(self) -> Iterable[FunctionInfo]:
+        for node in self.tree.body:
+            yield from _functions_in(node, self.path, cls=None)
+
+    def iter_classes(self) -> Iterable[ast.ClassDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ClassDef):
+                yield node
+
+
+def _functions_in(node: ast.AST, module: str,
+                  cls: Optional[str]) -> Iterable[FunctionInfo]:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        qual = f"{module}::{cls + '.' if cls else ''}{node.name}"
+        info = FunctionInfo(
+            qualname=qual, name=node.name, cls=cls, module=module,
+            node=node, is_property=_is_property(node))
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                callee = _call_name(sub.func)
+                if callee:
+                    info.calls.add(callee)
+            elif isinstance(sub, ast.Attribute) and isinstance(
+                    sub.ctx, ast.Load):
+                info.attr_loads.add(sub.attr)
+        yield info
+        # nested defs are visited for completeness but keep the same
+        # class context (closure helpers, jit bodies)
+        for sub in node.body:
+            yield from _functions_in(sub, module, cls)
+    elif isinstance(node, ast.ClassDef):
+        for sub in node.body:
+            yield from _functions_in(sub, module, node.name)
+
+
+def _is_property(node: ast.AST) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        if isinstance(dec, ast.Name) and dec.id == "property":
+            return True
+        if isinstance(dec, ast.Attribute) and dec.attr in (
+                "getter", "setter", "cached_property"):
+            return True
+    return False
+
+
+def _call_name(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+class CallGraph:
+    """Name-matched call graph over every definition in the project."""
+
+    def __init__(self, functions: List[FunctionInfo]):
+        self.functions = functions
+        self.by_name: Dict[str, List[FunctionInfo]] = {}
+        self._backend_classes: Set[Tuple[str, str]] = set()
+        cls_methods: Dict[Tuple[str, str], Set[str]] = {}
+        for f in functions:
+            self.by_name.setdefault(f.name, []).append(f)
+            if f.cls is not None:
+                cls_methods.setdefault((f.module, f.cls), set()).add(f.name)
+        for key, methods in cls_methods.items():
+            # protocol-name resolution targets: backend implementations
+            # and search handles (classes defining dispatch_search or
+            # collect); the `VectorBackend` Protocol class itself and
+            # host-native baselines never serve
+            if "dispatch_search" in methods or "collect" in methods:
+                self._backend_classes.add(key)
+
+    def targets(self, name: str) -> List[FunctionInfo]:
+        cands = self.by_name.get(name, [])
+        if name in PROTOCOL_METHOD_NAMES:
+            return [f for f in cands if f.cls is not None
+                    and (f.module, f.cls) in self._backend_classes]
+        if name in _STOP_CALL_NAMES:
+            return []
+        return cands
+
+    def reachable(self, roots: Iterable[FunctionInfo]) -> Set[str]:
+        """Qualnames reachable from `roots` via call edges; property
+        definitions are reached through plain attribute loads too."""
+        seen: Set[str] = set()
+        work = list(roots)
+        prop_names = {f.name for f in self.functions if f.is_property}
+        while work:
+            f = work.pop()
+            if f.qualname in seen:
+                continue
+            seen.add(f.qualname)
+            names = set(f.calls)
+            names |= {a for a in f.attr_loads if a in prop_names}
+            for callee in names:
+                for tgt in self.targets(callee):
+                    if tgt.qualname not in seen:
+                        work.append(tgt)
+        return seen
+
+
+class Project:
+    """All analyzed sources plus shared indices."""
+
+    def __init__(self, files: Dict[str, SourceFile],
+                 errors: Optional[List[Tuple[str, str]]] = None):
+        self.files = files
+        self.errors = errors or []     # (path, message) parse failures
+        self._functions: Optional[List[FunctionInfo]] = None
+        self._callgraph: Optional[CallGraph] = None
+
+    @classmethod
+    def from_paths(cls, paths: Iterable[str],
+                   root: str = ".") -> "Project":
+        files: Dict[str, SourceFile] = {}
+        errors: List[Tuple[str, str]] = []
+        for path in _collect_py(paths, root):
+            rel = os.path.relpath(path, root)
+            try:
+                with open(path, encoding="utf-8") as f:
+                    files[rel] = SourceFile(rel, f.read())
+            except (SyntaxError, UnicodeDecodeError) as e:
+                errors.append((rel, str(e)))
+        return cls(files, errors)
+
+    @classmethod
+    def from_sources(cls, sources: Dict[str, str]) -> "Project":
+        """Build from in-memory {path: source} — the test fixture hook."""
+        files: Dict[str, SourceFile] = {}
+        errors: List[Tuple[str, str]] = []
+        for path, text in sources.items():
+            try:
+                files[path] = SourceFile(path, text)
+            except SyntaxError as e:
+                errors.append((path, str(e)))
+        return cls(files, errors)
+
+    @property
+    def functions(self) -> List[FunctionInfo]:
+        if self._functions is None:
+            self._functions = [f for sf in self.files.values()
+                               for f in sf.iter_functions()]
+        return self._functions
+
+    @property
+    def callgraph(self) -> CallGraph:
+        if self._callgraph is None:
+            self._callgraph = CallGraph(self.functions)
+        return self._callgraph
+
+    def file(self, path: str) -> SourceFile:
+        return self.files[path]
+
+
+def _collect_py(paths: Iterable[str], root: str) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full) and full.endswith(".py"):
+            out.append(full)
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return sorted(out)

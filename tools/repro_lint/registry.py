@@ -1,0 +1,44 @@
+"""Pluggable rule registry.
+
+A rule is a callable ``(Project) -> Iterable[Finding]`` registered
+under a short family name.  The driver runs every registered rule (or
+an explicit subset via ``--rules``) and folds the findings through the
+suppression tables.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Iterable, List
+
+RULES: Dict[str, Callable] = {}
+
+
+def register(name: str) -> Callable:
+    """Class/function decorator adding a rule under ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in RULES:
+            raise ValueError(f"duplicate rule name: {name}")
+        RULES[name] = fn
+        return fn
+
+    return deco
+
+
+def load_builtin_rules() -> None:
+    """Import the rule modules for their registration side effects."""
+    for mod in ("host_sync", "jit_discipline", "lock_discipline",
+                "protocol"):
+        importlib.import_module(f"tools.repro_lint.rules.{mod}")
+
+
+def rule_names(selected: Iterable[str] | None = None) -> List[str]:
+    load_builtin_rules()
+    if selected is None:
+        return sorted(RULES)
+    unknown = [s for s in selected if s not in RULES]
+    if unknown:
+        raise KeyError(
+            f"unknown rule(s) {unknown}; available: {sorted(RULES)}")
+    return list(selected)

@@ -1,0 +1,1 @@
+"""Rule modules; importing each registers it with the registry."""

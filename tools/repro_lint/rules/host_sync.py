@@ -1,0 +1,318 @@
+"""HS: host-sync-in-hot-path (DESIGN.md §8/§13).
+
+The serve hot path — everything reachable from `ServeEngine.pump` and
+from the `dispatch_search` → `collect` fan-out — must not force a
+device→host synchronization.  A stray `int(x)` on a jax array blocks
+the python thread on the device stream and re-serializes the async
+spine.
+
+Codes:
+
+HS001  host sync applied to a jax-array-typed value in a hot-path
+       function: ``int()/float()/bool()``, ``np.asarray/np.array``,
+       ``.item()/.tolist()``, ``jax.device_get``,
+       ``jax.block_until_ready``, iterating the array, or branching
+       on it.  Every *legitimate* sync point carries a
+       ``# sync-ok: <reason>`` comment.
+HS002  per-element ``int()/float()`` conversion of the loop variable
+       inside a hot-path loop — one host transfer per element even on
+       numpy values; batch into a single
+       ``np.asarray(...).tolist()`` transfer instead.
+
+Taint is lexical and per-function: values produced by jax/jnp/lax
+calls, jitted-handle calls (``self._*_fn``), and known device-resident
+attributes are tainted; ``int()`` and friends cleanse (and are flagged
+when their operand is tainted).  The call-graph hot set is a name-based
+over-approximation — the answer to a false positive is a reasoned
+suppression, never silence.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Set
+
+from tools.repro_lint.driver import Finding
+from tools.repro_lint.project import FunctionInfo, Project
+from tools.repro_lint.registry import register
+
+#: module aliases whose call results are device arrays
+ARRAY_MODULES = {"jnp", "jax", "lax", "lsm", "hnsw"}
+
+#: jax.* / module attrs that do NOT return device arrays
+_NON_ARRAY_CALLS = {"jit", "named_scope", "transfer_guard",
+                    "transfer_guard_device_to_host", "checking_leaks",
+                    "default_device", "PRNGKey"}
+
+#: self-attributes that hold device-resident state
+TAINTED_ATTRS = {"state", "_snap", "_pending_repair", "_ids", "_dists",
+                 "_rng", "heat"}
+
+#: self-attributes that are host (numpy) despite array-ish names
+HOST_ATTRS = {"_int2ext", "_ext2int"}
+
+_JIT_HANDLE = re.compile(r"^_\w+_fn$")
+
+#: functions excluded from hot-path analysis even when name-reachable
+EXCLUDED_PATH_PARTS = ("baselines", "tests/", "benchmarks/")
+
+
+def _is_excluded(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(part in norm for part in EXCLUDED_PATH_PARTS)
+
+
+class _Taint:
+    """Per-function lexical taint state + sink detection."""
+
+    def __init__(self, fn: FunctionInfo, findings: List[Finding]):
+        self.fn = fn
+        self.findings = findings
+        self.tainted: Set[str] = set()
+        self.loop_vars: List[Set[str]] = []   # stack of for-loop targets
+
+    # -- expression taint ------------------------------------------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in ("shape", "ndim", "dtype"):
+                return False          # host-side array metadata
+            if isinstance(node.value, ast.Name) and \
+                    node.value.id == "self":
+                if node.attr in HOST_ATTRS:
+                    return False
+                return node.attr in TAINTED_ATTRS
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            return self.call_taint(node)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in node.ops):
+                return False          # identity checks never sync
+            return self.is_tainted(node.left) or any(
+                self.is_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return self.is_tainted(node.value)
+        return False
+
+    def call_taint(self, node: ast.Call) -> bool:
+        """Taint of a call's *result* (sinks are reported separately)."""
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            base = func.value
+            if isinstance(base, ast.Name) and base.id in ARRAY_MODULES:
+                return func.attr not in _NON_ARRAY_CALLS and \
+                    func.attr != "device_get"
+            if isinstance(base, ast.Name) and base.id == "self" and \
+                    _JIT_HANDLE.match(func.attr):
+                return True
+            if func.attr in ("item", "tolist", "is_ready"):
+                return False          # host result (sink checked elsewhere)
+            # method call on a tainted object: assume array-in-array-out
+            # for jnp-style chaining (x.sum(), x.astype(...))
+            if self.is_tainted(base):
+                return True
+            return False
+        if isinstance(func, ast.Name):
+            if func.id in ("int", "float", "bool", "str", "len"):
+                return False          # cleansing conversions
+            # unknown helper (merge_topk, …): propagate through args
+            return any(self.is_tainted(a) for a in node.args)
+        return False
+
+    # -- sinks -----------------------------------------------------------
+    def check_call(self, node: ast.Call) -> None:
+        func = node.func
+        args = node.args
+        if isinstance(func, ast.Name) and func.id in ("int", "float",
+                                                      "bool"):
+            if args and self.is_tainted(args[0]):
+                self._emit("HS001", node,
+                           f"`{func.id}()` on a device array forces a "
+                           "host sync on the hot path")
+            elif args and self._is_loop_var(args[0]) and func.id in (
+                    "int", "float"):
+                self._emit("HS002", node,
+                           f"per-element `{func.id}()` of loop variable "
+                           f"`{ast.unparse(args[0])}` — batch the "
+                           "conversion with one `np.asarray(...).tolist()`"
+                           " transfer before the loop")
+        elif isinstance(func, ast.Attribute):
+            base = func.value
+            if isinstance(base, ast.Name) and base.id == "np" and \
+                    func.attr in ("asarray", "array"):
+                if args and self.is_tainted(args[0]):
+                    self._emit("HS001", node,
+                               f"`np.{func.attr}()` on a device array "
+                               "copies device→host on the hot path")
+            elif isinstance(base, ast.Name) and base.id == "jax" and \
+                    func.attr in ("device_get", "block_until_ready"):
+                self._emit("HS001", node,
+                           f"`jax.{func.attr}()` synchronizes with the "
+                           "device on the hot path")
+            elif func.attr in ("item", "tolist") and self.is_tainted(base):
+                self._emit("HS001", node,
+                           f"`.{func.attr}()` on a device array forces "
+                           "a host sync on the hot path")
+
+    def _check_comprehension(self, comp: ast.AST) -> None:
+        """Per-element `int()/float()` of a comprehension variable is
+        the generator spelling of the HS002 loop pattern."""
+        targets: Set[str] = set()
+        for gen in comp.generators:
+            for n in ast.walk(gen.target):
+                if isinstance(n, ast.Name):
+                    targets.add(n.id)
+        if not targets:
+            return
+        for node in ast.walk(comp.elt):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in ("int", "float") and node.args and \
+                    isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id in targets:
+                self._emit("HS002", node,
+                           f"per-element `{node.func.id}()` of "
+                           f"comprehension variable "
+                           f"`{node.args[0].id}` — batch the "
+                           "conversion with one "
+                           "`np.asarray(...).tolist()` transfer")
+
+    def _is_loop_var(self, node: ast.AST) -> bool:
+        names = {v for frame in self.loop_vars for v in frame}
+        if isinstance(node, ast.Name):
+            return node.id in names
+        if isinstance(node, ast.Subscript) and isinstance(
+                node.value, ast.Name):
+            return node.value.id in names
+        return False
+
+    def _emit(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            code=code, path=self.fn.module, line=node.lineno,
+            message=f"{msg} (in `{self.fn.qualname.split('::')[1]}`)"))
+
+    # -- statement walk --------------------------------------------------
+    def run(self) -> None:
+        body = getattr(self.fn.node, "body", [])
+        self._walk(body)
+
+    def _walk(self, stmts: List[ast.stmt]) -> None:
+        for stmt in stmts:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                     # nested defs analyzed separately
+        # sinks anywhere in the statement's expressions
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                self.check_call(node)
+            elif isinstance(node, (ast.GeneratorExp, ast.ListComp,
+                                   ast.SetComp)):
+                self._check_comprehension(node)
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is None:
+                return
+            tainted = self.is_tainted(value)
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for t in targets:
+                self._bind(t, tainted)
+        elif isinstance(stmt, ast.For):
+            if self.is_tainted(stmt.iter):
+                self._emit("HS001", stmt.iter,
+                           "iterating a device array forces one host "
+                           "sync per element")
+            frame: Set[str] = set()
+            for n in ast.walk(stmt.target):
+                if isinstance(n, ast.Name):
+                    frame.add(n.id)
+            self._bind(stmt.target, self.is_tainted(stmt.iter))
+            self.loop_vars.append(frame)
+            self._walk(stmt.body)
+            self.loop_vars.pop()
+            self._walk(stmt.orelse)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            if self.is_tainted(stmt.test):
+                self._emit("HS001", stmt.test,
+                           "branching on a device array implicitly "
+                           "calls `bool()` — a host sync")
+            self._walk(stmt.body)
+            self._walk(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars,
+                               self.is_tainted(item.context_expr))
+            self._walk(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._walk(stmt.body)
+            for h in stmt.handlers:
+                self._walk(h.body)
+            self._walk(stmt.orelse)
+            self._walk(stmt.finalbody)
+        elif isinstance(stmt, ast.Assert):
+            if self.is_tainted(stmt.test):
+                self._emit("HS001", stmt.test,
+                           "asserting on a device array implicitly "
+                           "calls `bool()` — a host sync")
+
+    def _bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+        # attribute/subscript stores don't change name taint
+
+
+def hot_roots(project: Project) -> List[FunctionInfo]:
+    cg = project.callgraph
+    roots: List[FunctionInfo] = []
+    for f in project.functions:
+        if _is_excluded(f.module):
+            continue
+        if f.name == "pump" and f.cls is not None:
+            roots.append(f)
+        elif f.name in ("dispatch_search", "collect") and f.cls and \
+                (f.module, f.cls) in cg._backend_classes:
+            roots.append(f)
+    return roots
+
+
+@register("host-sync")
+def check_host_sync(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    roots = hot_roots(project)
+    if not roots:
+        return findings
+    hot = project.callgraph.reachable(roots)
+    for f in project.functions:
+        if f.qualname not in hot or _is_excluded(f.module):
+            continue
+        _Taint(f, findings).run()
+    return findings

@@ -1,0 +1,280 @@
+"""JD: jit discipline (DESIGN.md §8 zero-retrace serving).
+
+Codes:
+
+JD101  donated-buffer use-after-donate: an argument passed at a
+       ``donate_argnums`` position of a jitted handle is read again
+       later in the same function without being rebound by the call
+       statement.  Donated buffers are deallocated by XLA; the read
+       returns garbage or raises.
+JD102  ``static_argnames``/``static_argnums`` built from a dynamic
+       expression — values must be constant strings/ints so the trace
+       cache key is stable; dynamic values cause retrace storms.
+JD103  ``jax.jit`` construction inside a loop body or inside a
+       serve-hot-path function: each construction is a fresh trace
+       cache, defeating the §8 zero-retrace guarantee.  Build handles
+       once in ``__init__`` / module scope.
+JD104  the same buffer passed to two positions of a donating call
+       when one of them is donated — XLA may alias the donated input,
+       corrupting the second read.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.repro_lint.driver import Finding
+from tools.repro_lint.project import Project, SourceFile
+from tools.repro_lint.registry import register
+from tools.repro_lint.rules.host_sync import hot_roots
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "jax") or (
+        isinstance(node, ast.Name) and node.id == "jit")
+
+
+def _donate_indices(call: ast.Call) -> Optional[Set[int]]:
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                idx = set()
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and \
+                            isinstance(e.value, int):
+                        idx.add(e.value)
+                return idx
+    return None
+
+
+def _jit_constructions(sf: SourceFile):
+    """Yield (call_node, donate_indices|None) for every jit build."""
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_jax_jit(node.func):
+            yield node, _donate_indices(node)
+        elif isinstance(node.func, ast.Call) and \
+                _is_jax_jit_partial(node.func):
+            yield node, _donate_indices(node.func)
+
+
+def _is_jax_jit_partial(call: ast.Call) -> bool:
+    """``functools.partial(jax.jit, donate_argnums=...)`` pattern."""
+    f = call.func
+    if not (isinstance(f, ast.Attribute) and f.attr == "partial") and \
+            not (isinstance(f, ast.Name) and f.id == "partial"):
+        return False
+    return bool(call.args) and _is_jax_jit(call.args[0])
+
+
+def _expr_key(node: ast.AST) -> Optional[str]:
+    """Stable key for a Name or self-attribute expression."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return f"self.{node.attr}"
+    return None
+
+
+class _DonatingHandles:
+    """Map handle name → donated arg indices, per file."""
+
+    def __init__(self, sf: SourceFile):
+        self.handles: Dict[str, Set[int]] = {}
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            donate = None
+            for call, idx in _jit_constructions(sf):
+                if call is node.value and idx:
+                    donate = idx
+                    break
+            if donate is None:
+                continue
+            for t in node.targets:
+                key = _expr_key(t)
+                if key:
+                    self.handles[key] = donate
+
+
+def _check_donation(sf: SourceFile, findings: List[Finding]) -> None:
+    handles = _DonatingHandles(sf).handles
+    if not handles:
+        return
+    for fn in sf.iter_functions():
+        stmts = list(ast.walk(fn.node))
+        calls: List[Tuple[ast.Call, Set[int], ast.stmt]] = []
+        stmt_of: Dict[int, ast.stmt] = {}
+        # ast.walk is breadth-first, so later (deeper) statements
+        # overwrite: each call maps to its innermost enclosing stmt
+        for stmt in ast.walk(fn.node):
+            if isinstance(stmt, ast.stmt):
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Call):
+                        stmt_of[id(sub)] = stmt
+        for node in stmts:
+            if isinstance(node, ast.Call):
+                key = _expr_key(node.func)
+                if key in handles:
+                    calls.append((node, handles[key], stmt_of[id(node)]))
+        for call, donated, stmt in calls:
+            donated_keys: List[Tuple[str, int]] = []
+            seen_args: Dict[str, int] = {}
+            for i, arg in enumerate(call.args):
+                k = _expr_key(arg)
+                if k is None:
+                    continue
+                if k in seen_args and (i in donated or
+                                       seen_args[k] in donated):
+                    findings.append(Finding(
+                        code="JD104", path=sf.path, line=call.lineno,
+                        message=f"`{k}` passed twice to a donating "
+                                "jit handle; the donated copy may "
+                                "alias the other"))
+                seen_args.setdefault(k, i)
+                if i in donated:
+                    donated_keys.append((k, i))
+            if not donated_keys:
+                continue
+            rebound = _rebound_keys(stmt)
+            for k, i in donated_keys:
+                if k in rebound:
+                    continue
+                later = _later_load(fn.node, stmt, k)
+                if later is not None:
+                    findings.append(Finding(
+                        code="JD101", path=sf.path, line=later,
+                        message=f"`{k}` was donated at line "
+                                f"{call.lineno} (donate position {i}) "
+                                "and is read again — donated buffers "
+                                "are deallocated by XLA"))
+
+
+def _rebound_keys(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            k = _expr_key(node)
+            if k:
+                out.add(k)
+    return out
+
+
+def _later_load(fn_node: ast.AST, call_stmt: ast.stmt,
+                key: str) -> Optional[int]:
+    """Line of the first Load of `key` after the donating statement."""
+    boundary = call_stmt.end_lineno or call_stmt.lineno
+    for node in ast.walk(fn_node):
+        if node is call_stmt:
+            continue
+        lineno = getattr(node, "lineno", None)
+        if lineno is None or lineno <= boundary:
+            continue
+        if isinstance(node, (ast.Name, ast.Attribute)) and \
+                isinstance(getattr(node, "ctx", None), ast.Load) and \
+                _expr_key(node) == key:
+            # a rebinding between boundary and this load clears it
+            if _rebound_between(fn_node, key, boundary, lineno):
+                return None
+            return lineno
+    return None
+
+
+def _rebound_between(fn_node: ast.AST, key: str, lo: int,
+                     hi: int) -> bool:
+    for node in ast.walk(fn_node):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            if node.lineno <= lo or node.lineno > hi:
+                continue
+            if key in _rebound_keys(node):
+                return True
+    return False
+
+
+def _check_static_args(sf: SourceFile, findings: List[Finding]) -> None:
+    for call, _ in _jit_constructions(sf):
+        keywords = list(call.keywords)
+        if isinstance(call.func, ast.Call):     # partial form
+            keywords += list(call.func.keywords)
+        for kw in keywords:
+            if kw.arg not in ("static_argnames", "static_argnums"):
+                continue
+            if not _is_constant_static(kw.value):
+                findings.append(Finding(
+                    code="JD102", path=sf.path, line=kw.value.lineno,
+                    message=f"`{kw.arg}` built from a dynamic "
+                            "expression — must be constant "
+                            "strings/ints for a stable trace cache "
+                            "key"))
+
+
+def _is_constant_static(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (str, int))
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_constant_static(e) for e in node.elts)
+    return False
+
+
+def _check_jit_in_loop(project: Project,
+                       findings: List[Finding]) -> None:
+    hot: Set[str] = set()
+    roots = hot_roots(project)
+    if roots:
+        hot = project.callgraph.reachable(roots)
+    hot_fn_nodes = {id(f.node) for f in project.functions
+                    if f.qualname in hot}
+    for sf in project.files.values():
+        jit_calls = {id(c) for c, _ in _jit_constructions(sf)}
+        if not jit_calls:
+            continue
+        for node in ast.walk(sf.tree):
+            in_loop = isinstance(node, (ast.For, ast.While))
+            in_hot = id(node) in hot_fn_nodes
+            if not (in_loop or in_hot):
+                continue
+            body = node.body if in_loop else node.body
+            for sub_stmt in body:
+                for sub in ast.walk(sub_stmt):
+                    if isinstance(sub, ast.Call) and id(sub) in jit_calls:
+                        where = "a loop body" if in_loop else \
+                            "a serve hot-path function"
+                        findings.append(Finding(
+                            code="JD103", path=sf.path,
+                            line=sub.lineno,
+                            message="`jax.jit` constructed inside "
+                                    f"{where} — each construction is a "
+                                    "fresh trace cache; build the "
+                                    "handle once in `__init__`"))
+
+
+@register("jit-discipline")
+def check_jit_discipline(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for sf in project.files.values():
+        _check_donation(sf, findings)
+        _check_static_args(sf, findings)
+    _check_jit_in_loop(project, findings)
+    # dedupe JD103 double-reported when a loop sits inside a hot fn
+    seen: Set[Tuple[str, str, int]] = set()
+    out: List[Finding] = []
+    for f in findings:
+        k = (f.code, f.path, f.line)
+        if k in seen:
+            continue
+        seen.add(k)
+        out.append(f)
+    return out

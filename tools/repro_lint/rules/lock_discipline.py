@@ -1,0 +1,233 @@
+"""LK: lock discipline (DESIGN.md §11/§13 serve-spine threading).
+
+The checked file *declares* its own locking contract as module
+constants (see ``src/repro/serve/scheduler.py``)::
+
+    _GUARDED_BY = {
+        "_lock": ("queue", "_seq", ...),
+        "_pump_lock": ("_int2ext", "_ext2int", ...),
+    }
+    _LOCK_ORDER = ("_pump_lock", "_lock")   # outer → inner
+
+Codes:
+
+LK201  an attribute listed in ``_GUARDED_BY`` is accessed in a method
+       of the declaring file's classes without its lock held.  Held
+       locks are tracked through ``with self.<lock>:`` blocks plus an
+       intra-class fixpoint: a private method whose *every* in-class
+       call site holds lock L is analyzed with L held on entry.
+LK202  lock acquired while holding another in the opposite order from
+       ``_LOCK_ORDER`` — the classic ABBA deadlock shape.
+
+``__init__`` is exempt (single-threaded construction); nested
+functions/lambdas are analyzed with no locks held (they may run on
+another thread later).  Single-threaded exceptions (recovery replay)
+carry ``# lint-ok[LK201]: <reason>`` block suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+
+from tools.repro_lint.driver import Finding
+from tools.repro_lint.project import Project, SourceFile
+from tools.repro_lint.registry import register
+
+
+def _module_decls(sf: SourceFile):
+    guarded: Optional[Dict[str, Tuple[str, ...]]] = None
+    order: Optional[Tuple[str, ...]] = None
+    for node in sf.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if not isinstance(t, ast.Name):
+                continue
+            if t.id == "_GUARDED_BY" and isinstance(node.value, ast.Dict):
+                guarded = {}
+                for k, v in zip(node.value.keys, node.value.values):
+                    if isinstance(k, ast.Constant) and \
+                            isinstance(v, (ast.Tuple, ast.List)):
+                        guarded[k.value] = tuple(
+                            e.value for e in v.elts
+                            if isinstance(e, ast.Constant))
+            elif t.id == "_LOCK_ORDER" and isinstance(
+                    node.value, (ast.Tuple, ast.List)):
+                order = tuple(e.value for e in node.value.elts
+                              if isinstance(e, ast.Constant))
+    return guarded, order
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class _MethodSim:
+    """Walk one method body tracking held locks."""
+
+    def __init__(self, guarded: Dict[str, Tuple[str, ...]],
+                 order: Optional[Tuple[str, ...]], path: str):
+        self.guard_of: Dict[str, str] = {
+            attr: lock for lock, attrs in guarded.items()
+            for attr in attrs}
+        self.locks = set(guarded)
+        self.order = order or ()
+        self.path = path
+        self.findings: List[Finding] = []
+        # held sets observed at each intra-class call: name -> list
+        self.call_sites: Dict[str, List[FrozenSet[str]]] = {}
+
+    def run(self, fn: ast.FunctionDef, entry: FrozenSet[str]) -> None:
+        self._walk(fn.body, set(entry))
+
+    def _walk(self, stmts: List[ast.stmt], held: Set[str]) -> None:
+        for stmt in stmts:
+            self._stmt(stmt, held)
+
+    def _stmt(self, stmt: ast.stmt, held: Set[str]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._walk(stmt.body, set())      # deferred execution
+            return
+        if isinstance(stmt, ast.With):
+            acquired: List[str] = []
+            for item in stmt.items:
+                lock = _self_attr(item.context_expr)
+                if lock in self.locks:
+                    if lock not in held:
+                        self._check_order(lock, held,
+                                          item.context_expr.lineno)
+                        acquired.append(lock)
+                        held.add(lock)
+                else:
+                    self._exprs(item.context_expr, held)
+            self._walk(stmt.body, held)
+            for lock in acquired:
+                held.discard(lock)
+            return
+        if isinstance(stmt, ast.If):
+            self._exprs(stmt.test, held)
+            self._walk(stmt.body, set(held))
+            self._walk(stmt.orelse, set(held))
+            return
+        if isinstance(stmt, (ast.For, ast.While)):
+            self._exprs(getattr(stmt, "iter", None) or stmt.test, held)
+            self._walk(stmt.body, set(held))
+            self._walk(stmt.orelse, set(held))
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk(stmt.body, set(held))
+            for h in stmt.handlers:
+                self._walk(h.body, set(held))
+            self._walk(stmt.orelse, set(held))
+            self._walk(stmt.finalbody, set(held))
+            return
+        self._exprs(stmt, held)
+
+    def _check_order(self, lock: str, held: Set[str],
+                     lineno: int) -> None:
+        if lock not in self.order:
+            return
+        pos = self.order.index(lock)
+        for h in held:
+            if h in self.order and self.order.index(h) > pos:
+                self.findings.append(Finding(
+                    code="LK202", path=self.path, line=lineno,
+                    message=f"acquiring `{lock}` while holding `{h}` "
+                            "inverts the declared _LOCK_ORDER "
+                            f"{self.order} — ABBA deadlock risk"))
+
+    def _exprs(self, node: Optional[ast.AST], held: Set[str]) -> None:
+        if node is None:
+            return
+        if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            return          # deferred execution: no locks assumed held
+        if isinstance(node, ast.Call):
+            attr = _self_attr(node.func)
+            if attr is not None:
+                self.call_sites.setdefault(attr, []).append(
+                    frozenset(held))
+        attr = _self_attr(node)
+        if attr is not None:
+            lock = self.guard_of.get(attr)
+            if lock is not None and lock not in held:
+                self.findings.append(Finding(
+                    code="LK201", path=self.path, line=node.lineno,
+                    message=f"`self.{attr}` accessed without holding "
+                            f"`{lock}` (declared in _GUARDED_BY)"))
+            return          # don't descend into `self`
+        for sub in ast.iter_child_nodes(node):
+            self._exprs(sub, held)
+
+
+@register("lock-discipline")
+def check_lock_discipline(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for sf in project.files.values():
+        guarded, order = _module_decls(sf)
+        if not guarded:
+            continue
+        for cls in sf.tree.body:
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            methods = {n.name: n for n in cls.body
+                       if isinstance(n, ast.FunctionDef)}
+            if not _uses_locks(methods.values(), set(guarded)):
+                continue
+            findings.extend(
+                _check_class(sf, methods, guarded, order))
+    return findings
+
+
+def _uses_locks(methods, locks: Set[str]) -> bool:
+    for m in methods:
+        for node in ast.walk(m):
+            if _self_attr(node) in locks:
+                return True
+    return False
+
+
+def _check_class(sf: SourceFile, methods: Dict[str, ast.FunctionDef],
+                 guarded: Dict[str, Tuple[str, ...]],
+                 order: Optional[Tuple[str, ...]]) -> List[Finding]:
+    all_locks = frozenset(guarded)
+    # entry-held fixpoint: private methods start optimistic (all locks),
+    # public methods are externally callable → nothing held on entry
+    entry: Dict[str, FrozenSet[str]] = {}
+    for name in methods:
+        private = name.startswith("_") and not name.startswith("__")
+        entry[name] = all_locks if private else frozenset()
+    for _ in range(len(methods) + 2):
+        sites: Dict[str, List[FrozenSet[str]]] = {}
+        for name, node in methods.items():
+            if name == "__init__":
+                continue
+            sim = _MethodSim(guarded, order, sf.path)
+            sim.run(node, entry[name])
+            for callee, helds in sim.call_sites.items():
+                sites.setdefault(callee, []).extend(helds)
+        changed = False
+        for name in methods:
+            if not (name.startswith("_")
+                    and not name.startswith("__")):
+                continue
+            observed = sites.get(name)
+            new = frozenset.intersection(*observed) if observed \
+                else frozenset()
+            if new != entry[name]:
+                entry[name] = new
+                changed = True
+        if not changed:
+            break
+    findings: List[Finding] = []
+    for name, node in methods.items():
+        if name == "__init__":
+            continue
+        sim = _MethodSim(guarded, order, sf.path)
+        sim.run(node, entry[name])
+        findings.extend(sim.findings)
+    return findings

@@ -1,0 +1,214 @@
+"""PC: `VectorBackend` protocol conformance (core/backend.py contract).
+
+Codes:
+
+PC001  a class that implements most of the `VectorBackend` surface
+       (≥ half of the protocol's methods) is missing part of the
+       frozen contract.  Baselines that deliberately expose a small
+       host-native API fall below the threshold and are skipped.
+PC002  `collect()` called twice on one dispatch handle — `collect`
+       consumes the handle (donated result buffers, §13 two-phase
+       fan-out); the second call observes freed state.
+PC003  the Optional result of `poll_maintain()` used without a
+       None-guard — the report is only present once per maintenance
+       round (claim-once), absent polls return None.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.repro_lint.driver import Finding
+from tools.repro_lint.project import Project, SourceFile
+from tools.repro_lint.registry import register
+
+#: dunders & helpers never part of the protocol surface
+_IGNORED = {"__init__", "__len__", "__repr__", "__contains__"}
+
+
+def _protocol_surface(project: Project) -> Set[str]:
+    """Method names of the `VectorBackend` Protocol class."""
+    for sf in project.files.values():
+        for cls in sf.iter_classes():
+            if cls.name != "VectorBackend":
+                continue
+            names = {n.name for n in cls.body
+                     if isinstance(n, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))
+                     and n.name not in _IGNORED}
+            names |= {n.target.id for n in cls.body
+                      if isinstance(n, ast.AnnAssign)
+                      and isinstance(n.target, ast.Name)}
+            if names:
+                return names
+    return set()
+
+
+def _class_surface(cls: ast.ClassDef) -> Set[str]:
+    names = {n.name for n in cls.body
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    # attributes assigned in __init__ satisfy data members of the
+    # contract (e.g. `self.cap = ...`)
+    for n in cls.body:
+        if isinstance(n, ast.FunctionDef) and n.name == "__init__":
+            for sub in ast.walk(n):
+                if isinstance(sub, ast.Attribute) and \
+                        isinstance(sub.ctx, ast.Store) and \
+                        isinstance(sub.value, ast.Name) and \
+                        sub.value.id == "self":
+                    names.add(sub.attr)
+    return names
+
+
+def _check_conformance(project: Project,
+                       findings: List[Finding]) -> None:
+    surface = _protocol_surface(project)
+    if not surface:
+        return
+    for path, sf in project.files.items():
+        for cls in sf.iter_classes():
+            if cls.name == "VectorBackend":
+                continue
+            have = _class_surface(cls)
+            overlap = have & surface
+            if len(overlap) < (len(surface) + 1) // 2:
+                continue                # not claiming the protocol
+            missing = sorted(surface - have)
+            if missing:
+                findings.append(Finding(
+                    code="PC001", path=path, line=cls.lineno,
+                    message=f"`{cls.name}` implements "
+                            f"{len(overlap)}/{len(surface)} of the "
+                            "VectorBackend contract but is missing: "
+                            f"{', '.join(missing)}"))
+
+
+class _CollectSim:
+    """Track per-name collect() consumption through branches."""
+
+    def __init__(self, path: str, findings: List[Finding]):
+        self.path = path
+        self.findings = findings
+
+    def run(self, fn: ast.FunctionDef) -> None:
+        self._walk(fn.body, {})
+
+    def _walk(self, stmts: List[ast.stmt],
+              state: Dict[str, bool]) -> None:
+        for stmt in stmts:
+            self._stmt(stmt, state)
+
+    def _stmt(self, stmt: ast.stmt, state: Dict[str, bool]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, ast.If):
+            s1, s2 = dict(state), dict(state)
+            self._walk(stmt.body, s1)
+            self._walk(stmt.orelse, s2)
+            for k in set(s1) | set(s2):
+                state[k] = s1.get(k, False) or s2.get(k, False)
+            return
+        if isinstance(stmt, (ast.For, ast.While)):
+            # a loop body may rebind the handle each iteration; analyze
+            # the body in isolation so one lexical collect() is legal
+            self._walk(stmt.body, dict(state))
+            self._walk(stmt.orelse, dict(state))
+            return
+        if isinstance(stmt, (ast.With, ast.Try)):
+            for body in ([stmt.body] if isinstance(stmt, ast.With) else
+                         [stmt.body, stmt.finalbody, stmt.orelse]
+                         + [h.body for h in stmt.handlers]):
+                self._walk(body, state)
+            return
+        # handle binding: x = <...>.dispatch_search(...)
+        if isinstance(stmt, ast.Assign) and \
+                isinstance(stmt.value, ast.Call) and \
+                isinstance(stmt.value.func, ast.Attribute) and \
+                stmt.value.func.attr == "dispatch_search":
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    state[t.id] = False
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "collect" and \
+                    isinstance(node.func.value, ast.Name):
+                name = node.func.value.id
+                if name in state:
+                    if state[name]:
+                        self.findings.append(Finding(
+                            code="PC002", path=self.path,
+                            line=node.lineno,
+                            message=f"`{name}.collect()` called a "
+                                    "second time — collect() consumes "
+                                    "the dispatch handle"))
+                    state[name] = True
+
+
+def _check_poll_guard(sf: SourceFile, findings: List[Finding]) -> None:
+    for fn_node in ast.walk(sf.tree):
+        if not isinstance(fn_node, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+            continue
+        _poll_guard_in(fn_node, sf.path, findings)
+
+
+def _poll_guard_in(fn_node: ast.AST, path: str,
+                   findings: List[Finding]) -> None:
+    # find `name = <x>.poll_maintain(...)` assignments
+    assigns: Dict[str, int] = {}
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Call) and \
+                isinstance(node.value.func, ast.Attribute) and \
+                node.value.func.attr == "poll_maintain":
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    assigns[t.id] = node.lineno
+    if not assigns:
+        return
+    guarded: Set[str] = set()
+    for node in ast.walk(fn_node):
+        # any comparison/truth test mentioning the name counts as the
+        # None-guard (if rep is None: return / if rep: / rep and rep.x
+        # / rep.x if rep else …)
+        test = None
+        if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+            test = node.test
+        elif isinstance(node, ast.BoolOp):
+            test = node.values[0]
+        if test is None:
+            continue
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Name) and sub.id in assigns:
+                guarded.add(sub.id)
+    for name, lineno in assigns.items():
+        if name in guarded:
+            continue
+        for node in ast.walk(fn_node):
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.value, ast.Name) and \
+                    node.value.id == name and \
+                    isinstance(node.ctx, ast.Load) and \
+                    node.lineno > lineno:
+                findings.append(Finding(
+                    code="PC003", path=path, line=node.lineno,
+                    message=f"`{name}` comes from `poll_maintain()` "
+                            "(Optional, claim-once) and is used "
+                            "without a None-guard"))
+                break
+
+
+@register("protocol")
+def check_protocol(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    _check_conformance(project, findings)
+    for path, sf in project.files.items():
+        for fn_node in ast.walk(sf.tree):
+            if isinstance(fn_node, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                _CollectSim(path, findings).run(fn_node)
+        _check_poll_guard(sf, findings)
+    return findings

@@ -1,0 +1,86 @@
+"""Suppression-comment parsing.
+
+Two spellings, both requiring a human-readable reason:
+
+``# sync-ok: <reason>``
+    Suppresses host-sync findings (HS*) on the annotated statement.
+
+``# lint-ok: <reason>`` / ``# lint-ok[CODE]: <reason>``
+    Suppresses any rule (or one specific code) on the statement.
+
+Placement:
+
+- trailing on a line: covers every finding reported on that line and,
+  when the line opens a multi-line statement, the whole statement;
+- on its own line: covers the next non-comment statement;
+- trailing on a ``def``/``class`` line with an explicit ``[CODE]``
+  tag: covers the entire body (block scope) for that code.
+
+A suppression with a missing or empty reason is itself a fatal
+finding (SUP001) — the convention exists to force the *why* into the
+source, not to provide an escape hatch.
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import List, Optional, Set
+
+_PATTERN = re.compile(
+    r"#\s*(?P<kind>sync-ok|lint-ok)"
+    r"(?:\[(?P<code>[A-Za-z0-9_,\s]+)\])?"
+    r"\s*(?::\s*(?P<reason>.*))?$")
+
+
+@dataclass
+class Suppression:
+    kind: str                   # "sync-ok" | "lint-ok"
+    line: int                   # line the comment sits on
+    codes: Optional[Set[str]]   # None = kind's whole family
+    reason: str
+    standalone: bool            # comment-only line (covers next stmt)
+    on_def_line: bool = False   # block scope when code-tagged
+    used: bool = field(default=False, compare=False)
+
+    def matches(self, code: str) -> bool:
+        if self.codes is not None:
+            return code in self.codes or any(
+                code.startswith(c) for c in self.codes)
+        if self.kind == "sync-ok":
+            return code.startswith("HS")
+        return True              # bare lint-ok: any rule
+
+
+def parse_suppressions(source: str) -> List[Suppression]:
+    out: List[Suppression] = []
+    lines = source.splitlines()
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError):
+        return out
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _PATTERN.search(tok.string)
+        if not m:
+            continue
+        line_no = tok.start[0]
+        text_before = lines[line_no - 1][:tok.start[1]]
+        codes = None
+        if m.group("code"):
+            codes = {c.strip().upper()
+                     for c in m.group("code").split(",") if c.strip()}
+        out.append(Suppression(
+            kind=m.group("kind"),
+            line=line_no,
+            codes=codes,
+            reason=(m.group("reason") or "").strip(),
+            standalone=not text_before.strip(),
+            on_def_line=bool(
+                re.match(r"\s*(async\s+def|def|class)\b", text_before)),
+        ))
+    return out
