@@ -46,6 +46,15 @@ the failure-injection matrix instead of the load benchmark: kill at
 each injection point, restart via `ServeEngine.recover`, and gate on
 zero acknowledged-write loss plus a recall floor against an
 uninterrupted run of the same op stream (the CI job's mode).
+
+**Fused beam search** (DESIGN.md §15): every run also reports a
+``fused`` section — an A/B probe of the beam-search megakernel path
+(``HNSWConfig.fused_beam``) against the `while_loop` path: query-batch
+p50 per arm, id bit-parity, recall ratio, and a zero-retrace check.
+``--fused-beam`` additionally serves the *main* drain through the
+fused path and binds the full criterion (p50 at or below the while
+arm, within a 1.05x noise band on CPU hosts where both arms lower to
+the same HLO).
 """
 
 from __future__ import annotations
@@ -93,9 +102,12 @@ SCHEMA = {
                "host_cores"),
     "overlap": ("p99_nomaint_ms", "p99_overlap_ms", "ratio",
                 "consolidations", "write_holds", "host_cores"),
+    "fused": ("enabled", "while_p50_ms", "fused_p50_ms", "p50_ratio",
+              "parity", "recall_ratio", "zero_retraces", "host_cores"),
     "criteria": ("zero_retraces_after_warmup", "qps_within_10pct_of_fixed",
                  "recall_within_0p01", "wal_overhead_within_15pct",
-                 "fanout_dispatch_leq_0p7x", "overlap_p99_leq_1p3x"),
+                 "fanout_dispatch_leq_0p7x", "overlap_p99_leq_1p3x",
+                 "fused_parity_p50_leq_while"),
 }
 
 
@@ -107,7 +119,8 @@ def validate_schema(doc: dict) -> None:
         for f in fields:
             if f not in doc[section]:
                 raise ValueError(f"missing field {section}.{f}")
-    for section in ("serve", "baseline", "recall", "fanout", "overlap"):
+    for section in ("serve", "baseline", "recall", "fanout", "overlap",
+                    "fused"):
         for f, v in doc[section].items():
             if isinstance(v, bool):
                 continue
@@ -302,6 +315,67 @@ def fanout_probe(*, n_base: int, dim: int, batch: int, seed: int,
             "parity": parity, "host_cores": _host_cores()}
 
 
+def fused_probe(*, n_base: int, dim: int, batch: int, seed: int,
+                reps: int = 16, enabled: bool = False) -> dict:
+    """Fused megakernel vs `while_loop` beam search, A/B on one corpus.
+
+    Two identically seeded builds — one with ``fused_beam`` on — serve
+    the same snapshot query batch after the same tombstone churn, with
+    ``record_heat=False`` on both arms (a capability the fused path
+    introduced; the while path ignores the flag, DESIGN.md §15).  The
+    probe reports query-batch p50 per arm (best of ``SERVE_TRIALS``
+    passes of ``reps`` timed calls), bit-parity of the returned ids,
+    the brute-force recall ratio, and a zero-retrace check on the fused
+    arm.  The p50 half of the criterion binds only under
+    ``--fused-beam`` (the 1.05x band absorbs CPU-oracle-route noise —
+    on a CPU host both arms lower to `while_loop` HLO, so the ratio
+    hovers at 1.0; on TPU the megakernel's single launch must win).
+    """
+    cfg_w = _cfg(dim, n_base + 64)
+    cfg_f = cfg_w._replace(fused_beam=True)
+    base = make_clustered_vectors(n_base, dim=dim, seed=seed + 51)
+    queries = make_clustered_vectors(batch, dim=dim, seed=seed + 52)
+    dels = np.arange(0, n_base // 8, dtype=np.int64)
+    ix_w = LSMVecIndex.build(cfg_w, base, seed=seed)
+    ix_f = LSMVecIndex.build(cfg_f, base, seed=seed)
+    for ix in (ix_w, ix_f):
+        ix.delete(dels)
+    p = SearchParams(use_snapshot=True, pad_to=batch, record_heat=False)
+    r_w = ix_w.search(queries, k=cfg_w.k, params=p)       # also warmup
+    r_f = ix_f.search(queries, k=cfg_w.k, params=p)
+    parity = bool(np.array_equal(np.asarray(r_w.ids), np.asarray(r_f.ids)))
+    warm = dict(ix_f.trace_counts())
+    live = np.ones(n_base, bool)
+    live[dels] = False
+    truth = brute_force_knn(base, queries, cfg_w.k, live=live)
+    rec_w = recall_at_k(np.asarray(r_w.ids), truth)
+    rec_f = recall_at_k(np.asarray(r_f.ids), truth)
+
+    def measure(ix):
+        best = None
+        for _ in range(SERVE_TRIALS):
+            lat = []
+            for _ in range(reps):
+                t0 = time.monotonic()
+                res = ix.search(queries, k=cfg_w.k, params=p)
+                np.asarray(res.ids)                       # force host sync
+                lat.append((time.monotonic() - t0) * 1e3)
+            p50 = float(np.percentile(lat, 50))
+            best = p50 if best is None else min(best, p50)
+        return best
+
+    while_p50 = measure(ix_w)
+    fused_p50 = measure(ix_f)
+    return {"enabled": bool(enabled),
+            "while_p50_ms": round(while_p50, 3),
+            "fused_p50_ms": round(fused_p50, 3),
+            "p50_ratio": round(fused_p50 / max(while_p50, 1e-9), 3),
+            "parity": parity,
+            "recall_ratio": round(rec_f / max(rec_w, 1e-9), 4),
+            "zero_retraces": dict(ix_f.trace_counts()) == warm,
+            "host_cores": _host_cores()}
+
+
 def overlap_probe(*, n_base: int, n_ops: int, batch: int, dim: int,
                   seed: int) -> dict:
     """Query p99 while consolidating (overlapped) vs no maintenance.
@@ -409,7 +483,7 @@ def overlap_probe(*, n_base: int, n_ops: int, batch: int, dim: int,
 def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         n_expand: int, mode: str, shards: int = 1, wal: bool = False,
         ckpt_every: int | None = None, tier: bool = False,
-        work_dir: str | None = None) -> dict:
+        fused: bool = False, work_dir: str | None = None) -> dict:
     rng = np.random.default_rng(seed)
     n_fresh = max(n_ops // 8, 8)
     cap = n_base + n_fresh + 4 * batch + 64
@@ -423,6 +497,13 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         # runs maintenance, so it stays all-hot (≡ dense)
         cfg = cfg._replace(tier=True, level_scale=0.25)
         cfg_shard = cfg_shard._replace(tier=True, level_scale=0.25)
+    if fused:
+        # --fused-beam: the main drain serves snapshot queries through
+        # the megakernel path (DESIGN.md §15); the sequential recall
+        # baseline keeps the while_loop path, so the recall criterion
+        # doubles as a cross-path guard
+        cfg = cfg._replace(fused_beam=True)
+        cfg_shard = cfg_shard._replace(fused_beam=True)
     base = make_clustered_vectors(n_base, dim=dim, seed=seed)
     fresh = make_clustered_vectors(n_fresh, dim=dim, seed=seed + 1)
     stream = make_stream(rng, n_ops, n_base, fresh, base)
@@ -650,6 +731,11 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         n_ops=192 if mode == "smoke" else 1024,
         batch=batch, dim=dim, seed=seed)
 
+    # ---- fused megakernel A/B probe (DESIGN.md §15) ----------------------
+    fusedp = fused_probe(
+        n_base=256 if mode == "smoke" else 2048, dim=dim, batch=batch,
+        seed=seed, reps=8 if mode == "smoke" else 24, enabled=fused)
+
     doc = {
         "meta": {
             "mode": mode, "backend": jax.default_backend(),
@@ -695,6 +781,7 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
         },
         "fanout": fanout,
         "overlap": overlap,
+        "fused": fusedp,
         "durability": {
             # main-drain accounting (zeros unless --wal): records appended
             # vs group commits fsync'd, and covering checkpoints written
@@ -742,6 +829,16 @@ def run(*, n_base: int, n_ops: int, batch: int, dim: int, seed: int,
                 overlap["consolidations"] >= 1
                 and (overlap["ratio"] <= 1.3
                      or overlap["host_cores"] < 2)),
+            # the §15 gate: the fused path must return bit-identical
+            # ids, hold the recall ratio, and never retrace — always;
+            # the p50 half (fused at or below while_loop, with a 1.05x
+            # noise band for the CPU oracle route where both arms lower
+            # to the same while_loop HLO) binds only when the drain
+            # actually served fused (--fused-beam)
+            "fused_parity_p50_leq_while": bool(
+                fusedp["parity"] and fusedp["zero_retraces"]
+                and fusedp["recall_ratio"] >= 0.999
+                and (fusedp["p50_ratio"] <= 1.05 or not fused)),
         },
     }
     return doc
@@ -893,6 +990,11 @@ def main(argv=None) -> int:
                     help="serve a two-lane tiered store: background "
                          "maintenance demotes cold nodes to the int8 "
                          "lane while the drain runs (DESIGN.md §12)")
+    ap.add_argument("--fused-beam", action="store_true",
+                    help="serve the main drain through the fused beam-"
+                         "search megakernel path (DESIGN.md §15) and "
+                         "bind the fused A/B criterion, p50 half "
+                         "included, even under --smoke")
     ap.add_argument("--ckpt-every", type=int, default=None,
                     help="with --wal: write a covering checkpoint every "
                          "N write batches during the main drain")
@@ -938,12 +1040,13 @@ def main(argv=None) -> int:
         doc = run(n_base=256 * args.shards, n_ops=96, batch=16, dim=16,
                   seed=args.seed, n_expand=4, mode="smoke",
                   shards=args.shards, wal=args.wal, tier=args.tier,
-                  ckpt_every=args.ckpt_every, work_dir=work_dir)
+                  fused=args.fused_beam, ckpt_every=args.ckpt_every,
+                  work_dir=work_dir)
     else:
         doc = run(n_base=4096, n_ops=4096, batch=64, dim=64, seed=args.seed,
                   n_expand=4, mode="full", shards=args.shards, wal=args.wal,
-                  tier=args.tier, ckpt_every=args.ckpt_every,
-                  work_dir=work_dir)
+                  tier=args.tier, fused=args.fused_beam,
+                  ckpt_every=args.ckpt_every, work_dir=work_dir)
 
     validate_schema(doc)
     print(json.dumps(doc, indent=1))
@@ -953,8 +1056,12 @@ def main(argv=None) -> int:
             # uploads the measurement it produced); the committed full-
             # run JSON is only written by full runs
             write_bench_json(args.out, doc)
+        gates = ()
         if args.gate_async:
-            gates = ("fanout_dispatch_leq_0p7x", "overlap_p99_leq_1p3x")
+            gates += ("fanout_dispatch_leq_0p7x", "overlap_p99_leq_1p3x")
+        if args.fused_beam:
+            gates += ("fused_parity_p50_leq_while",)
+        if gates:
             for name in gates:
                 print(f"  {'PASS' if doc['criteria'][name] else 'FAIL'} "
                       f"{name}")

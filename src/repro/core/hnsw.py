@@ -23,6 +23,7 @@ from repro.core import lsm, simhash
 from repro.core.backend import MemoryBreakdown
 from repro.core.iostats import IOStats
 from repro.core.traversal import BeamResult, beam_search, greedy_descent
+from repro.kernels.beam.ops import fused_beam_search
 from repro.kernels.gather_l2.ops import gather_l2, gather_l2_q8
 from repro.kernels.l2_distance.ops import l2_distance
 
@@ -61,6 +62,13 @@ class HNSWConfig(NamedTuple):
     #: this window: any true neighbor the approximate beam ranks within
     #: the top `rerank` gets its exact distance back before the final cut.
     rerank: int = 32
+    #: fused beam-search megakernel (DESIGN.md §15): run the whole
+    #: bottom-layer beam loop for a query block in one launch
+    #: (`repro.kernels.beam`) instead of the XLA `while_loop`.  Only the
+    #: snapshot serving path routes through it (plain LSM-probe searches
+    #: keep the `while_loop`); results are bit-parity either way, so
+    #: flipping this never changes answers — only the launch shape.
+    fused_beam: bool = False
     #: scale on the Exp(1) level draw: P(level >= 1) = exp(-1/level_scale).
     #: 1.0 keeps the historical draw (~37% of nodes upper); the paper's
     #: "<1% of nodes in upper layers" regime is level_scale ~= 0.25
@@ -387,6 +395,13 @@ def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
     full cost — their edges keep delete-damaged regions reachable — but
     never appear in the returned top-k.
     """
+    if cfg.fused_beam and snapshot is not None:
+        res = _search_batch_fused(
+            cfg, state, q[None, :], snapshot=snapshot,
+            active=(None if active is None
+                    else jnp.asarray(active).reshape(1)),
+            rho=rho, ef=ef, use_filter=use_filter, n_expand=n_expand)
+        return jax.tree.map(lambda a: a[0], res)
     ef = ef or cfg.ef_search
     rho = cfg.rho if rho is None else rho
     use_filter = cfg.use_filter if use_filter is None else use_filter
@@ -415,10 +430,72 @@ def search(cfg: HNSWConfig, state: HNSWState, q: jax.Array,
     return res
 
 
+def _search_batch_fused(cfg: HNSWConfig, state: HNSWState, qs: jax.Array,
+                        *, snapshot: jax.Array,
+                        active: jax.Array | None = None,
+                        rho: float | None = None, ef: int | None = None,
+                        use_filter: bool | None = None,
+                        n_expand: int | None = None,
+                        record_heat: bool = True) -> BeamResult:
+    """Fused-megakernel route for the snapshot serving path: one
+    `fused_beam_search` launch for the whole query block instead of a
+    vmapped `while_loop` (DESIGN.md §15).
+
+    The per-query prelude (upper greedy descent, SimHash query encode,
+    norms) is vmapped exactly like `search`, and the dense operands
+    (snapshot adjacency, routable/returnable lanes, tier split) carry
+    the identical semantics — results are bit-parity with the
+    `while_loop` path; `tests/test_beam_kernel.py` pins it.
+
+    `record_heat=False` is a capability the `while_loop` path doesn't
+    have: it statically drops the per-trip heat carries from the fused
+    loop (result arrays come back as -1/False padding).
+    """
+    ef = ef or cfg.ef_search
+    rho = cfg.rho if rho is None else rho
+    use_filter = cfg.use_filter if use_filter is None else use_filter
+    n_expand = cfg.n_expand if n_expand is None else n_expand
+    n_expand = max(1, min(n_expand, ef))
+    routable = state.levels >= 0
+    returnable = (routable & ~state.tombstone) if cfg.lazy_delete else None
+    params = simhash.SimHashParams(state.proj)
+    ent, ent_d = jax.vmap(
+        lambda q: _descend_upper(cfg, state, q,
+                                 jnp.zeros((), jnp.int32)))(qs)
+    code_qs = jax.vmap(lambda q: simhash.encode(params, q[None, :])[0])(qs)
+    q_norms = jax.vmap(lambda q: jnp.sqrt(jnp.sum(q * q)))(qs)
+    ids, dists, stats, heat_nodes, heat_mask = fused_beam_search(
+        qs, ent, ent_d, snapshot, state.vectors, state.codes, code_qs,
+        routable, q_norms, state.mean_norm, returnable=returnable,
+        resident=_exact_resident(state) if cfg.tier else None,
+        qvecs=state.qvecs if cfg.tier else None,
+        qscale=state.qscale if cfg.tier else None, active=active,
+        ef=ef, k=cfg.k, m_bits=cfg.m_bits, eps=cfg.eps, rho=rho,
+        max_iters=2 * ef, use_filter=use_filter, n_expand=n_expand,
+        record_heat=record_heat)
+    res = BeamResult(
+        ids, dists,
+        IOStats(n_adj=stats[:, 0], n_vec=stats[:, 1],
+                n_filtered=stats[:, 2], n_hops=stats[:, 3]),
+        heat_nodes, heat_mask)
+    if cfg.tier:
+        res = jax.vmap(lambda q, r: _tier_rerank(cfg, state, q, r))(qs, res)
+    return res
+
+
 def search_batch(cfg: HNSWConfig, state: HNSWState, qs: jax.Array,
                  *, active: jax.Array | None = None,
-                 **kw) -> BeamResult:
-    """Batched search; `active` (bool[B]) masks padded query lanes."""
+                 record_heat: bool = True, **kw) -> BeamResult:
+    """Batched search; `active` (bool[B]) masks padded query lanes.
+
+    With `cfg.fused_beam` and a snapshot, the whole block routes
+    through the one-launch megakernel path; otherwise the vmapped
+    `while_loop` (which always records heat — `record_heat` is the
+    fused path's static skip and is ignored here).
+    """
+    if cfg.fused_beam and kw.get("snapshot") is not None:
+        return _search_batch_fused(cfg, state, qs, active=active,
+                                   record_heat=record_heat, **kw)
     if active is None:
         return jax.vmap(lambda q: search(cfg, state, q, **kw))(qs)
     return jax.vmap(lambda q, a: search(cfg, state, q, active=a, **kw))(

@@ -175,24 +175,33 @@ class LSMVecIndex:
         def _consolidate_bg(state):
             return hnsw.consolidate(cfg_, state)
 
+        # `record_heat` is static: False drops the scatter-add (and, on
+        # the fused path, the loop's heat carries) from the trace —
+        # callers that never apply heat don't pay for recording it
         @functools.partial(jax.jit, static_argnames=("rho", "use_filter",
-                                                     "ef", "n_expand"))
-        def _search(state, qs, rho, use_filter, ef, n_expand):
+                                                     "ef", "n_expand",
+                                                     "record_heat"))
+        def _search(state, qs, rho, use_filter, ef, n_expand,
+                    record_heat=True):
             res = hnsw.search_batch(cfg_, state, qs, rho=rho,
                                     use_filter=use_filter, ef=ef,
                                     n_expand=n_expand)
-            heat_delta = _heat_delta(state, res)
+            heat_delta = _heat_delta(state, res) if record_heat \
+                else jnp.zeros_like(state.heat)
             return res, heat_delta
 
         @functools.partial(jax.jit, static_argnames=("rho", "use_filter",
-                                                     "ef", "n_expand"))
+                                                     "ef", "n_expand",
+                                                     "record_heat"))
         def _search_snap(state, qs, valid, snap, rho, use_filter, ef,
-                         n_expand):
+                         n_expand, record_heat=True):
             res = hnsw.search_batch(cfg_, state, qs, rho=rho,
                                     use_filter=use_filter, ef=ef,
                                     n_expand=n_expand, snapshot=snap,
-                                    active=valid)
-            heat_delta = _heat_delta(state, res)
+                                    active=valid,
+                                    record_heat=record_heat)
+            heat_delta = _heat_delta(state, res) if record_heat \
+                else jnp.zeros_like(state.heat)
             return res, heat_delta
 
         @jax.jit
@@ -402,11 +411,12 @@ class LSMVecIndex:
             valid = np.arange(width) < nq
             res, heat_delta = self._search_snap_fn(
                 self.state, jnp.asarray(padded), jnp.asarray(valid),
-                self.snapshot(), p.rho, p.use_filter, p.ef, p.n_expand)
+                self.snapshot(), p.rho, p.use_filter, p.ef, p.n_expand,
+                p.record_heat)
         else:
             res, heat_delta = self._search_fn(
                 self.state, jnp.asarray(qs_np), p.rho, p.use_filter,
-                p.ef, p.n_expand)
+                p.ef, p.n_expand, p.record_heat)
         if p.record_heat:
             self.state = self.state._replace(
                 heat=self.state.heat + heat_delta)

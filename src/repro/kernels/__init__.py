@@ -6,9 +6,10 @@ Each kernel ships three files:
   ref.py    — pure-jnp oracle used by the allclose test sweeps
 """
 
+from repro.kernels.beam.ops import fused_beam_search
 from repro.kernels.gather_l2.ops import gather_l2, gather_l2_q8
 from repro.kernels.l2_distance.ops import l2_distance
 from repro.kernels.simhash.ops import collision_count, simhash_encode
 
 __all__ = ["l2_distance", "gather_l2", "gather_l2_q8", "simhash_encode",
-           "collision_count"]
+           "collision_count", "fused_beam_search"]

@@ -1,0 +1,3 @@
+from repro.kernels.beam.ops import beam_iter_cap, fused_beam_search
+
+__all__ = ["fused_beam_search", "beam_iter_cap"]

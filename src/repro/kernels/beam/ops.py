@@ -1,0 +1,83 @@
+"""Public jit'd dispatch for the fused beam-search megakernel.
+
+Mirrors the `gather_l2` family contract: backend-selected dispatch
+(`use_pallas=None` -> TPU check), interpret-mode fallback for CPU
+hosts, and row padding to a lane multiple of 128 handled here so both
+backends see identical operands.  On non-TPU hosts the default route is
+the pure-JAX oracle (`ref.beam_search_ref`) — the megakernel's win is
+launch fusion + VMEM residency, which interpret mode cannot deliver
+(DESIGN.md §15); the Pallas path stays reachable via
+``use_pallas=True`` for the interpret-parity suite.
+
+Jit handles are built once at module scope — never construct jits
+inside dispatch functions here (`tools/repro_lint` JD103 treats every
+top-level function of a ``kernels/*/ops.py`` module as a hot root).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.beam.kernel import beam_search_fused_pallas
+from repro.kernels.beam.ref import beam_iter_cap, beam_search_ref
+
+__all__ = ["fused_beam_search", "beam_iter_cap"]
+
+
+def _on_tpu() -> bool:
+    # lazy: calling default_backend() at import time would lock
+    # the device count before test/dry-run env flags apply
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "ef", "k", "m_bits", "eps", "rho", "max_iters", "use_filter",
+    "n_expand", "record_heat", "use_pallas", "interpret"))
+def fused_beam_search(qs, entries, entry_dists, adjacency, vectors,
+                      codes, code_qs, live, q_norms, mean_norm,
+                      returnable=None, resident=None, qvecs=None,
+                      qscale=None, active=None, *, ef, k, m_bits, eps,
+                      rho, max_iters, use_filter, n_expand=1,
+                      record_heat=True, use_pallas=None,
+                      interpret=None):
+    """Run the whole bottom-layer beam search for a query block in one
+    fused launch.
+
+    qs [Bq, dim]; entries int32[Bq]; entry_dists f32[Bq]; adjacency
+    int32[cap, M] (resolved snapshot rows); vectors f32[cap, dim];
+    codes uint32[cap, W]; code_qs uint32[Bq, W]; live bool[cap]
+    (routable mask); q_norms f32[Bq]; mean_norm f32[].  Optional lanes:
+    `returnable` (lazy-delete repack), `resident`/`qvecs`/`qscale`
+    (tier split), `active` (pad-lane masking).  Returns
+    ``(ids, dists, stats, heat_nodes, heat_mask)`` with stats columns
+    (n_adj, n_vec, n_filtered, n_hops) — bit-parity with a vmapped
+    `traversal.beam_search` over `_snapshot_adj_fn`/`_dist_fn`.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    kw = dict(ef=ef, k=k, m_bits=m_bits, eps=eps, rho=rho,
+              max_iters=max_iters, use_filter=use_filter,
+              n_expand=n_expand, record_heat=record_heat)
+    if not use_pallas:
+        return beam_search_ref(
+            qs, entries, entry_dists, adjacency, vectors, codes,
+            code_qs, live, q_norms, mean_norm, returnable=returnable,
+            resident=resident, qvecs=qvecs, qscale=qscale,
+            active=active, **kw)
+    d = qs.shape[-1]
+    pad = (-d) % 128
+    if pad:
+        qs = jnp.pad(qs, ((0, 0), (0, pad)))
+        vectors = jnp.pad(vectors, ((0, 0), (0, pad)))
+        if qvecs is not None:
+            qvecs = jnp.pad(qvecs, ((0, 0), (0, pad)))
+    return beam_search_fused_pallas(
+        qs, entries, entry_dists, adjacency, vectors, codes, code_qs,
+        live, q_norms, mean_norm, returnable=returnable,
+        resident=resident, qvecs=qvecs, qscale=qscale, active=active,
+        interpret=interpret, **kw)

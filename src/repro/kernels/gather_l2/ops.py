@@ -16,6 +16,31 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pad_lanes(queries: jax.Array, table: jax.Array):
+    """Zero-pad the feature dim of (queries, table) to a 128-lane
+    multiple for the Pallas kernels.
+
+    The round-trip is exact, not approximate: pad lanes are zero in
+    both operands, so each one contributes (0-0)^2 = +0.0 to the row's
+    squared distance and the padded reduction equals the unpadded one
+    bit-for-bit for any dim (the dim=65 regression in
+    `tests/test_kernels.py` pins it).  Guarded here because a silent
+    query/table width mismatch would otherwise "work" after padding
+    and return distances against truncated rows.
+    """
+    d = queries.shape[-1]
+    if table.shape[-1] != d:
+        raise ValueError(
+            f"queries dim {d} != table dim {table.shape[-1]}")
+    pad = (-d) % 128
+    if pad:
+        queries = jnp.pad(queries, ((0, 0), (0, pad)))
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+    assert queries.shape[-1] % 128 == 0 \
+        and table.shape[-1] == queries.shape[-1]
+    return queries, table
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def gather_l2(queries: jax.Array, table: jax.Array, ids: jax.Array,
               *, use_pallas: bool | None = None,
@@ -32,11 +57,7 @@ def gather_l2(queries: jax.Array, table: jax.Array, ids: jax.Array,
         interpret = not _on_tpu()
     if not use_pallas:
         return gather_l2_ref(queries, table, ids)
-    d = queries.shape[-1]
-    pad = (-d) % 128
-    if pad:
-        queries = jnp.pad(queries, ((0, 0), (0, pad)))
-        table = jnp.pad(table, ((0, 0), (0, pad)))
+    queries, table = _pad_lanes(queries, table)
     return gather_l2_pallas(queries, table, ids, interpret=interpret)
 
 
@@ -58,10 +79,6 @@ def gather_l2_q8(queries: jax.Array, qtable: jax.Array, scales: jax.Array,
         interpret = not _on_tpu()
     if not use_pallas:
         return gather_l2_q8_ref(queries, qtable, scales, ids)
-    d = queries.shape[-1]
-    pad = (-d) % 128
-    if pad:
-        queries = jnp.pad(queries, ((0, 0), (0, pad)))
-        qtable = jnp.pad(qtable, ((0, 0), (0, pad)))
+    queries, qtable = _pad_lanes(queries, qtable)
     return gather_l2_q8_pallas(queries, qtable, scales, ids,
                                interpret=interpret)

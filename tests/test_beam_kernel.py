@@ -1,0 +1,384 @@
+"""Parity suite for the fused beam-search megakernel (DESIGN.md §15).
+
+Three implementations of the bottom-layer beam search must agree
+bit-for-bit at every config point:
+
+  1. `traversal.beam_search` — the per-query `while_loop` path the
+     index has always served from (ground truth);
+  2. `beam.ref.beam_search_ref` — the fused pure-JAX oracle;
+  3. `beam.kernel.beam_search_fused_pallas` — the Pallas megakernel,
+     run here in interpret mode (TPU is the compile target).
+
+Bit-exactness (not allclose) is achievable because the fixtures use
+integer-valued vectors: squared L2 sums stay below 2^24 so f32
+accumulation is exact regardless of reduction order.  One float test
+keeps an allclose guard on realistic data.  The matrix covers the
+acceptance axes: tombstone churn (returnable), tier-mixed lanes
+(resident / qvecs / qscale), ef/M sweep, all-filtered frontiers,
+n_expand > 1, and masked pad lanes — plus index- and serve-level
+fused-vs-while parity and zero-retrace checks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HNSWConfig, LSMVecIndex, simhash, traversal
+from repro.core.backend import SearchParams
+from repro.core.hnsw import _snapshot_adj_fn
+from repro.kernels.beam.kernel import beam_search_fused_pallas
+from repro.kernels.beam.ref import beam_search_ref
+from repro.kernels.gather_l2.ops import gather_l2, gather_l2_q8
+from repro.tier.quant import quantize_rows
+
+EPS = 0.1
+
+
+def _world(seed=0, cap=64, dim=16, M=6, Bq=5, m_bits=64, dead=0.1,
+           tomb=0.2):
+    """Dense integer-valued operand set shared by the op-level tests."""
+    rng = np.random.default_rng(seed)
+    vectors = jnp.asarray(rng.integers(-8, 8, (cap, dim)).astype(np.float32))
+    adjacency = jnp.asarray(rng.integers(-1, cap, (cap, M)).astype(np.int32))
+    proj = jax.random.normal(jax.random.key(seed + 1), (m_bits, dim),
+                             jnp.float32)
+    params = simhash.SimHashParams(proj)
+    codes = simhash.encode(params, vectors)
+    live = jnp.asarray(rng.random(cap) >= dead)
+    qs = jnp.asarray(rng.integers(-8, 8, (Bq, dim)).astype(np.float32))
+    code_qs = jax.vmap(lambda q: simhash.encode(params, q[None, :])[0])(qs)
+    q_norms = jax.vmap(lambda q: jnp.sqrt(jnp.sum(q * q)))(qs)
+    mean_norm = jnp.float32(np.sqrt(dim) * 4.0)
+    entries = jnp.asarray(rng.integers(0, cap, (Bq,)).astype(np.int32))
+    entry_ds = jax.vmap(lambda q, e: jnp.sum((q - vectors[e]) ** 2))(
+        qs, entries)
+    returnable = live & jnp.asarray(rng.random(cap) >= tomb)
+    return dict(cap=cap, dim=dim, M=M, m_bits=m_bits, vectors=vectors,
+                adjacency=adjacency, codes=codes, live=live, qs=qs,
+                code_qs=code_qs, q_norms=q_norms, mean_norm=mean_norm,
+                entries=entries, entry_ds=entry_ds, returnable=returnable)
+
+
+def _while_loop_path(w, *, ef, k, rho, use_filter, n_expand,
+                     returnable=None, dist_fn=None):
+    """vmapped `traversal.beam_search` over the dense world — the
+    ground-truth serving semantics (snapshot adjacency, fused gather)."""
+    def one(q, e, ed, cq, qn):
+        df = (lambda ids: gather_l2(q[None, :], w["vectors"],
+                                    ids[None, :])[0]) \
+            if dist_fn is None else dist_fn(q)
+        return traversal.beam_search(
+            q, e, ed, _snapshot_adj_fn(w["adjacency"]), df,
+            w["codes"], cq, w["live"], cap=w["cap"], ef=ef, k=k,
+            m_bits=w["m_bits"], eps=EPS, rho=rho, max_iters=2 * ef,
+            use_filter=use_filter, q_norm=qn, mean_norm=w["mean_norm"],
+            n_expand=n_expand, returnable=returnable)
+    return jax.vmap(one)(w["qs"], w["entries"], w["entry_ds"],
+                         w["code_qs"], w["q_norms"])
+
+
+def _fused(fn, w, *, ef, k, rho, use_filter, n_expand, pad=False, **opt):
+    qs, vectors = w["qs"], w["vectors"]
+    if pad:
+        lanes = (-w["dim"]) % 128
+        qs = jnp.pad(qs, ((0, 0), (0, lanes)))
+        vectors = jnp.pad(vectors, ((0, 0), (0, lanes)))
+        if opt.get("qvecs") is not None:
+            opt["qvecs"] = jnp.pad(opt["qvecs"], ((0, 0), (0, lanes)))
+    return fn(qs, w["entries"], w["entry_ds"], w["adjacency"], vectors,
+              w["codes"], w["code_qs"], w["live"], w["q_norms"],
+              w["mean_norm"], ef=ef, k=k, m_bits=w["m_bits"], eps=EPS,
+              rho=rho, max_iters=2 * ef, use_filter=use_filter,
+              n_expand=n_expand, **opt)
+
+
+def _assert_matches_while(res, base):
+    ids, dists, stats, hn, hm = res
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(base.ids))
+    np.testing.assert_array_equal(np.asarray(dists), np.asarray(base.dists))
+    for col, name in enumerate(("n_adj", "n_vec", "n_filtered", "n_hops")):
+        np.testing.assert_array_equal(
+            np.asarray(stats[:, col]), np.asarray(getattr(base.stats, name)))
+    np.testing.assert_array_equal(np.asarray(hn),
+                                  np.asarray(base.heat_nodes))
+    np.testing.assert_array_equal(np.asarray(hm), np.asarray(base.heat_mask))
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# op-level parity matrix: tombstones x filter x sampling x n_expand
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rho", [1.0, 0.5])
+@pytest.mark.parametrize("use_filter", [False, True])
+@pytest.mark.parametrize("n_expand", [1, 3])
+def test_beam_parity_matrix(n_expand, use_filter, rho):
+    """Oracle == while_loop == Pallas(interpret), bit for bit, with
+    tombstone lanes (returnable) always present."""
+    w = _world(seed=n_expand * 10 + use_filter)
+    kw = dict(ef=12, k=4, rho=rho, use_filter=use_filter,
+              n_expand=n_expand)
+    base = _while_loop_path(w, returnable=w["returnable"], **kw)
+    ref = _fused(beam_search_ref, w, returnable=w["returnable"], **kw)
+    _assert_matches_while(ref, base)
+    pal = _fused(beam_search_fused_pallas, w, returnable=w["returnable"],
+                 interpret=True, pad=True, **kw)
+    _assert_bitwise(pal, ref)
+
+
+@pytest.mark.parametrize("ef,M", [(8, 4), (16, 8), (24, 6)])
+def test_beam_parity_ef_m_sweep(ef, M):
+    w = _world(seed=ef + M, M=M)
+    kw = dict(ef=ef, k=4, rho=1.0, use_filter=False, n_expand=2)
+    base = _while_loop_path(w, returnable=w["returnable"], **kw)
+    ref = _fused(beam_search_ref, w, returnable=w["returnable"], **kw)
+    _assert_matches_while(ref, base)
+    pal = _fused(beam_search_fused_pallas, w, returnable=w["returnable"],
+                 interpret=True, pad=True, **kw)
+    _assert_bitwise(pal, ref)
+
+
+def test_beam_all_filtered_frontier():
+    """Every neighbor dead or padded: the loop must expand the entry,
+    find nothing eligible, and terminate with just the entry."""
+    w = _world(seed=3)
+    # all adjacency pads -1 -> zero eligible candidates anywhere
+    w["adjacency"] = jnp.full_like(w["adjacency"], -1)
+    kw = dict(ef=12, k=4, rho=1.0, use_filter=False, n_expand=2)
+    base = _while_loop_path(w, **kw)
+    ref = _fused(beam_search_ref, w, **kw)
+    _assert_matches_while(ref, base)
+    pal = _fused(beam_search_fused_pallas, w, interpret=True, pad=True,
+                 **kw)
+    _assert_bitwise(pal, ref)
+    ids = np.asarray(ref[0])
+    np.testing.assert_array_equal(ids[:, 0], np.asarray(w["entries"]))
+    assert (ids[:, 1:] == -1).all()
+
+    # same but via tombstones: neighbors exist, none routable
+    w2 = _world(seed=4, dead=1.0)
+    w2["live"] = w2["live"].at[w2["entries"]].set(True)
+    base = _while_loop_path(w2, **kw)
+    ref = _fused(beam_search_ref, w2, **kw)
+    _assert_matches_while(ref, base)
+    pal = _fused(beam_search_fused_pallas, w2, interpret=True, pad=True,
+                 **kw)
+    _assert_bitwise(pal, ref)
+
+
+def test_beam_tier_mixed_lanes():
+    """Hot rows exact, cold rows through the fused q8 dequant lane;
+    power-of-two scales keep the min-merge bit-exact on both paths."""
+    w = _world(seed=5)
+    rng = np.random.default_rng(5)
+    resident = jnp.asarray(rng.random(w["cap"]) < 0.5)
+    qvecs = jnp.asarray(
+        rng.integers(-127, 128, (w["cap"], w["dim"])).astype(np.int8))
+    qscale = 2.0 ** jnp.asarray(
+        rng.integers(-2, 3, w["cap"]).astype(np.float32))
+
+    def tier_dist(q):
+        def df(ids):
+            res = resident[jnp.maximum(ids, 0)]
+            hot = jnp.where((ids >= 0) & res, ids, -1)
+            cold = jnp.where((ids >= 0) & ~res, ids, -1)
+            d_hot = gather_l2(q[None, :], w["vectors"], hot[None, :])[0]
+            d_cold = gather_l2_q8(q[None, :], qvecs, qscale,
+                                  cold[None, :])[0]
+            return jnp.minimum(d_hot, d_cold)
+        return df
+
+    kw = dict(ef=12, k=4, rho=1.0, use_filter=False, n_expand=2)
+    base = _while_loop_path(w, returnable=w["returnable"],
+                            dist_fn=tier_dist, **kw)
+    opt = dict(returnable=w["returnable"], resident=resident,
+               qvecs=qvecs, qscale=qscale)
+    ref = _fused(beam_search_ref, w, **kw, **opt)
+    _assert_matches_while(ref, base)
+    pal = _fused(beam_search_fused_pallas, w, interpret=True, pad=True,
+                 **kw, **opt)
+    _assert_bitwise(pal, ref)
+
+
+def test_beam_masked_pad_lanes():
+    """Inactive block-pad queries return empty results and contribute
+    nothing to the stats, on every path."""
+    w = _world(seed=6, Bq=6)
+    active = jnp.asarray([True, True, False, True, False, True])
+    kw = dict(ef=12, k=4, rho=1.0, use_filter=False, n_expand=1)
+    ref = _fused(beam_search_ref, w, active=active, **kw)
+    pal = _fused(beam_search_fused_pallas, w, active=active,
+                 interpret=True, pad=True, **kw)
+    _assert_bitwise(pal, ref)
+    ids, dists, stats, _, _ = ref
+    dead = ~np.asarray(active)
+    assert (np.asarray(ids)[dead] == -1).all()
+    assert np.isinf(np.asarray(dists)[dead]).all()
+    assert (np.asarray(stats)[dead] == 0).all()
+    # live lanes bit-match an unmasked run over the same operands
+    full = _fused(beam_search_ref, w, **kw)
+    ok = np.asarray(active)
+    np.testing.assert_array_equal(np.asarray(ids)[ok],
+                                  np.asarray(full[0])[ok])
+    np.testing.assert_array_equal(np.asarray(dists)[ok],
+                                  np.asarray(full[1])[ok])
+
+
+def test_beam_float_data_close():
+    """Realistic float vectors: ids identical, distances allclose (the
+    reduction orders legitimately differ between paths)."""
+    w = _world(seed=7)
+    rng = np.random.default_rng(7)
+    w["vectors"] = jnp.asarray(
+        rng.normal(size=(w["cap"], w["dim"])).astype(np.float32))
+    w["qs"] = jnp.asarray(rng.normal(size=(5, w["dim"])).astype(np.float32))
+    w["entry_ds"] = jax.vmap(
+        lambda q, e: jnp.sum((q - w["vectors"][e]) ** 2))(
+            w["qs"], w["entries"])
+    kw = dict(ef=12, k=4, rho=1.0, use_filter=False, n_expand=2)
+    ref = _fused(beam_search_ref, w, returnable=w["returnable"], **kw)
+    pal = _fused(beam_search_fused_pallas, w, returnable=w["returnable"],
+                 interpret=True, pad=True, **kw)
+    np.testing.assert_array_equal(np.asarray(pal[0]), np.asarray(ref[0]))
+    np.testing.assert_allclose(np.asarray(pal[1]), np.asarray(ref[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_beam_record_heat_false():
+    """record_heat=False skips the heat scatters but must not perturb
+    ids/dists/stats; heat outputs collapse to the canonical empties."""
+    w = _world(seed=8)
+    kw = dict(ef=12, k=4, rho=1.0, use_filter=False, n_expand=2)
+    on = _fused(beam_search_ref, w, record_heat=True, **kw)
+    off = _fused(beam_search_ref, w, record_heat=False, **kw)
+    _assert_bitwise(on[:3], off[:3])
+    assert (np.asarray(off[3]) == -1).all()
+    assert not np.asarray(off[4]).any()
+    pal = _fused(beam_search_fused_pallas, w, record_heat=False,
+                 interpret=True, pad=True, **kw)
+    _assert_bitwise(pal[:3], off[:3])
+    assert (np.asarray(pal[3]) == -1).all()
+    assert not np.asarray(pal[4]).any()
+
+
+# ---------------------------------------------------------------------------
+# index level: fused_beam config flag vs the plain path
+# ---------------------------------------------------------------------------
+
+_IDX_CFG = HNSWConfig(cap=512, dim=24, M=8, M_up=4, num_upper=2,
+                      ef_search=24, ef_construction=24, k=5, rho=1.0,
+                      use_filter=False, lsm_mem_cap=128, lsm_levels=2,
+                      lsm_fanout=8, n_expand=2)
+_P = SearchParams(pad_to=32, use_snapshot=True)
+
+
+def _base_data(n=300, dim=24, seed=2):
+    return np.random.default_rng(seed).normal(
+        size=(n, dim)).astype(np.float32)
+
+
+def test_index_fused_parity_and_heat():
+    base = _base_data()
+    ix = LSMVecIndex.build(_IDX_CFG, base, seed=0)
+    ixf = LSMVecIndex.build(_IDX_CFG._replace(fused_beam=True), base,
+                            seed=0)
+    dels = np.arange(40, 80, dtype=np.int64)
+    ix.delete(dels)
+    ixf.delete(dels)
+    qs = np.random.default_rng(3).normal(size=(17, 24)).astype(np.float32)
+    r, rf = ix.search(qs, params=_P), ixf.search(qs, params=_P)
+    np.testing.assert_array_equal(r.ids, rf.ids)
+    np.testing.assert_array_equal(r.dists, rf.dists)
+    # heat accumulation must agree too — the megakernel's heat lanes
+    # feed the same tier promotions as the while path
+    np.testing.assert_array_equal(np.asarray(ix.state.heat),
+                                  np.asarray(ixf.state.heat))
+
+
+def test_index_fused_parity_tier():
+    base = _base_data()
+    rng = np.random.default_rng(2)
+    cold = jnp.asarray(rng.random(512) < 0.5)
+    objs = []
+    for fused in (False, True):
+        cfg = _IDX_CFG._replace(tier=True, rerank=16, fused_beam=fused)
+        o = LSMVecIndex.build(cfg, base, seed=0)
+        st = o.state
+        qv, qs_ = quantize_rows(st.vectors)
+        o.state = st._replace(hot=~(cold & (st.levels == 0)),
+                              qvecs=qv, qscale=qs_)
+        objs.append(o)
+    qs = rng.normal(size=(8, 24)).astype(np.float32)
+    r, rf = objs[0].search(qs, params=_P), objs[1].search(qs, params=_P)
+    np.testing.assert_array_equal(r.ids, rf.ids)
+    np.testing.assert_array_equal(r.dists, rf.dists)
+
+
+def test_index_fused_parity_rho_filter_churn():
+    base = _base_data()
+    cfg = _IDX_CFG._replace(rho=0.5, use_filter=True)
+    a = LSMVecIndex.build(cfg, base, seed=0)
+    b = LSMVecIndex.build(cfg._replace(fused_beam=True), base, seed=0)
+    dels = np.arange(20, 120, dtype=np.int64)
+    a.delete(dels)
+    b.delete(dels)
+    qs = np.random.default_rng(4).normal(size=(11, 24)).astype(np.float32)
+    ra, rb = a.search(qs, params=_P), b.search(qs, params=_P)
+    np.testing.assert_array_equal(ra.ids, rb.ids)
+    np.testing.assert_array_equal(ra.dists, rb.dists)
+
+
+def test_index_fused_zero_retrace():
+    base = _base_data()
+    ixf = LSMVecIndex.build(_IDX_CFG._replace(fused_beam=True), base,
+                            seed=0)
+    rng = np.random.default_rng(5)
+    ixf.search(rng.normal(size=(9, 24)).astype(np.float32), params=_P)
+    warm = dict(ixf.trace_counts())
+    for _ in range(4):
+        n = int(rng.integers(1, 32))
+        ixf.search(rng.normal(size=(n, 24)).astype(np.float32), params=_P)
+    assert dict(ixf.trace_counts()) == warm
+
+
+# ---------------------------------------------------------------------------
+# serve level: fused_beam on, zero retraces under ragged traffic
+# ---------------------------------------------------------------------------
+
+def test_serve_fused_zero_retraces():
+    from repro.serve import MaintenancePolicy, ServeConfig, ServeEngine
+
+    cfg = _IDX_CFG._replace(cap=1024, fused_beam=True, batch_expand=4)
+    base = _base_data(256)
+    idx = LSMVecIndex.build(cfg, base, seed=0)
+    eng = ServeEngine(
+        idx, ServeConfig(query_batch=8, insert_batch=8, delete_batch=8,
+                         maintenance=MaintenancePolicy(
+                             tombstone_ratio=None, heat_budget=None)))
+    rng = np.random.default_rng(6)
+    fresh = _base_data(32, seed=7)
+    for i in range(3):
+        eng.submit_insert(fresh[i])
+    for i in range(5):
+        eng.submit_query(base[i])
+    eng.submit_delete(int(rng.integers(0, 256)))
+    eng.drain()
+    eng.submit_query(base[0])
+    eng.drain()
+    eng.submit_insert(fresh[30])
+    eng.drain()
+    warm = idx.trace_counts()
+    for round_ in range(4):
+        for _ in range(int(rng.integers(1, 8))):
+            eng.submit_query(base[rng.integers(0, 250)])
+        if round_ % 2 == 0:
+            eng.submit_insert(fresh[3 + round_])
+        else:
+            eng.submit_delete(256 + round_)
+        eng.drain()
+    assert idx.trace_counts() == warm, "fused serving retraced after warmup"

@@ -12,8 +12,8 @@ import pytest
 from hypothesis_compat import given, settings, st  # skips gracefully when absent
 
 from repro.kernels.gather_l2.kernel import gather_l2_pallas
-from repro.kernels.gather_l2.ops import gather_l2
-from repro.kernels.gather_l2.ref import gather_l2_ref
+from repro.kernels.gather_l2.ops import gather_l2, gather_l2_q8
+from repro.kernels.gather_l2.ref import gather_l2_q8_ref, gather_l2_ref
 from repro.kernels.l2_distance.kernel import l2_distance_pallas
 from repro.kernels.l2_distance.ops import l2_distance
 from repro.kernels.l2_distance.ref import l2_distance_ref
@@ -96,6 +96,46 @@ def test_gather_l2_ops_pads_dim():
     ref = gather_l2_ref(queries, table, ids)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3,
                                atol=1e-3)
+
+
+def test_gather_l2_pad_lane_roundtrip_dim65_exact():
+    """dim=65 (not a lane multiple) must round-trip bit-exactly.
+
+    Pad lanes are zero in query and table, contributing +0.0 each, so
+    with integer-valued inputs (sums exact in f32) the padded kernel
+    reduction must equal the unpadded oracle bit-for-bit.
+    """
+    kq, kt, ki = jax.random.split(jax.random.key(65), 3)
+    queries = jax.random.randint(kq, (4, 65), -8, 8).astype(jnp.float32)
+    table = jax.random.randint(kt, (48, 65), -8, 8).astype(jnp.float32)
+    ids = jax.random.randint(ki, (4, 9), -1, 48, jnp.int32)
+    out = gather_l2(queries, table, ids, use_pallas=True, interpret=True)
+    ref = gather_l2_ref(queries, table, ids)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gather_l2_q8_pad_lane_roundtrip_dim65_exact():
+    kq, kt, ks, ki = jax.random.split(jax.random.key(66), 4)
+    queries = jax.random.randint(kq, (4, 65), -8, 8).astype(jnp.float32)
+    qtable = jax.random.randint(kt, (48, 65), -127, 128).astype(jnp.int8)
+    # power-of-two scales keep dequant products exact in f32
+    scales = 2.0 ** jax.random.randint(ks, (48,), -3, 3).astype(jnp.float32)
+    ids = jax.random.randint(ki, (4, 9), -1, 48, jnp.int32)
+    out = gather_l2_q8(queries, qtable, scales, ids, use_pallas=True,
+                       interpret=True)
+    ref = gather_l2_q8_ref(queries, qtable, scales, ids)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gather_l2_dim_mismatch_guard():
+    queries = jnp.zeros((2, 65))
+    table = jnp.zeros((8, 64))
+    ids = jnp.zeros((2, 3), jnp.int32)
+    with pytest.raises(ValueError, match="dim"):
+        gather_l2(queries, table, ids, use_pallas=True, interpret=True)
+    with pytest.raises(ValueError, match="dim"):
+        gather_l2_q8(queries, table.astype(jnp.int8), jnp.ones(8), ids,
+                     use_pallas=True, interpret=True)
 
 
 # ---------------------------------------------------------------------------

@@ -209,6 +209,44 @@ for k in range(4):
     assert codes(rep) == ["JD103"]
 
 
+def test_jd103_kernel_ops_entry_point_is_hot():
+    """Top-level functions of kernels/*/ops.py are JD103 roots: a jit
+    built inside a dispatch shim retraces under every serving call."""
+    src = """
+import jax
+
+def dispatch(x, use_pallas=None):
+    fn = jax.jit(lambda v: v * 2)
+    return fn(x)
+"""
+    rep = lint_sources({"kernels/beam/ops.py": src},
+                       rules=["jit-discipline"])
+    assert codes(rep) == ["JD103"]
+    # the identical body outside a kernel ops module is not hot
+    rep = lint_sources({"helpers.py": src}, rules=["jit-discipline"])
+    assert codes(rep) == []
+
+
+def test_jd103_kernel_ops_module_scope_handle_clean():
+    src = """
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def dispatch(x, *, k):
+    return x[:k]
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+"""
+    rep = lint_sources({"kernels/gather_l2/ops.py": src},
+                       rules=["jit-discipline"])
+    assert codes(rep) == []
+
+
 def test_jd104_aliased_donated_buffer():
     src = """
 import jax

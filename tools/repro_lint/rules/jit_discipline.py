@@ -13,7 +13,12 @@ JD102  ``static_argnames``/``static_argnums`` built from a dynamic
 JD103  ``jax.jit`` construction inside a loop body or inside a
        serve-hot-path function: each construction is a fresh trace
        cache, defeating the §8 zero-retrace guarantee.  Build handles
-       once in ``__init__`` / module scope.
+       once in ``__init__`` / module scope.  Hot-path roots are the
+       serving entry points (`host_sync.hot_roots`) plus every kernel
+       dispatch entry point — the top-level functions of
+       ``kernels/*/ops.py`` modules (`kernel_roots`): those shims run
+       under every serving jit, so a jit built in one retraces per
+       call.
 JD104  the same buffer passed to two positions of a donating call
        when one of them is donated — XLA may alias the donated input,
        corrupting the second read.
@@ -22,12 +27,29 @@ JD104  the same buffer passed to two positions of a donating call
 from __future__ import annotations
 
 import ast
+import re
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from tools.repro_lint.driver import Finding
-from tools.repro_lint.project import Project, SourceFile
+from tools.repro_lint.project import FunctionInfo, Project, SourceFile
 from tools.repro_lint.registry import register
 from tools.repro_lint.rules.host_sync import hot_roots
+
+_KERNEL_OPS_RE = re.compile(r"(^|/)kernels/[^/]+/ops\.py$")
+
+
+def kernel_roots(project: Project) -> List[FunctionInfo]:
+    """Kernel dispatch entry points: top-level functions of
+    ``kernels/*/ops.py`` modules (`gather_l2`, `fused_beam_search`, ...).
+
+    These shims execute under every serving jit, so a jit constructed
+    anywhere reachable from them retraces on each call — they join the
+    JD103 hot set.  They are deliberately NOT `host_sync` roots: the
+    lazy backend probe (``jax.default_backend()``) every shim performs
+    is a legitimate host call at dispatch time, not a device sync on a
+    traced value."""
+    return [f for f in project.functions
+            if f.cls is None and _KERNEL_OPS_RE.search(f.module)]
 
 
 def _is_jax_jit(node: ast.AST) -> bool:
@@ -232,7 +254,7 @@ def _is_constant_static(node: ast.AST) -> bool:
 def _check_jit_in_loop(project: Project,
                        findings: List[Finding]) -> None:
     hot: Set[str] = set()
-    roots = hot_roots(project)
+    roots = hot_roots(project) + kernel_roots(project)
     if roots:
         hot = project.callgraph.reachable(roots)
     hot_fn_nodes = {id(f.node) for f in project.functions
